@@ -1,0 +1,35 @@
+"""Benchmark driver: one entry per paper table + the roofline report.
+Prints ``name,us_per_call,derived`` CSV at the end."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (roofline, table2_ppa, table3_psnr, table4_cnn,
+                            table5_yield)
+
+    mods = [table2_ppa, table3_psnr, table4_cnn, table5_yield, roofline]
+    if "--fast" in sys.argv:
+        mods = [table2_ppa, table3_psnr, table5_yield, roofline]
+    rows = []
+    for mod in mods:
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append((mod.__name__.split(".")[-1], 0.0,
+                         f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(roofline.energy_report())
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

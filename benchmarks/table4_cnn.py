@@ -1,0 +1,123 @@
+"""Table IV: CNN classification accuracy under approximate multipliers.
+
+The paper evaluates pretrained ResNet-18 on ILSVRC2012; offline we train
+the repo's small residual CNN on structured synthetic images (DESIGN.md
+§7) and evaluate inference with each multiplier family in *bit-exact*
+LUT mode.  The claims to reproduce: Appro4-2 and Log-our hold accuracy
+(Log-our may even exceed exact — its zero-mean errors act as noise
+regularization), plain Mitchell LM degrades, NMED/MRED order
+appro42 < log_our < mitchell, and the energy savings come for free."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core.compiler import CiMConfig
+from repro.core.error_model import characterize
+from repro.core.multipliers import MultiplierSpec
+from repro.data.pipeline import image_batch
+from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
+from repro.models.common import CiMContext, CiMParams
+
+FAMS = ["exact", "appro42", "log_our", "mitchell"]
+
+
+def train_cnn(steps: int = 220, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = init_cnn(jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def step(p, batch):
+        (l, acc), g = jax.value_and_grad(cnn_loss, has_aux=True)(p, batch)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+        return p, l, acc
+
+    for i in range(steps):
+        xs, ys = image_batch(rng, 64, hw=16)
+        params, loss, acc = step(params, {"x": jnp.asarray(xs),
+                                          "y": jnp.asarray(ys)})
+    return params, float(loss), float(acc)
+
+
+def evaluate(params, fam: str, n: int = 256, seed: int = 123):
+    # eval under distribution shift (heavier noise than training): this is
+    # where multiplier-level errors compound visibly, like ILSVRC vs the
+    # saturated synthetic train set
+    rng = np.random.default_rng(seed)
+    xs, ys = image_batch(rng, n, hw=16, noise=0.55)
+    logits = _forward_family(params, jnp.asarray(xs), fam)
+    top1 = float((np.asarray(logits).argmax(-1) == ys).mean())
+    top5 = float(np.mean([
+        y in np.argsort(-np.asarray(logits)[i])[:5] for i, y in enumerate(ys)]))
+    return top1, top5
+
+
+def _forward_family(params, x, fam: str):
+    """Forward pass with every conv/fc matmul through the family's
+    bit-exact LUT semantics."""
+    if fam == "exact":
+        from repro.models.common import CiMContext, CiMParams
+
+        return cnn_forward(params, x, CiMContext(CiMParams(mode="exact",
+                                                           bits=8)))
+    from repro.core.approx_gemm import approx_matmul
+    from repro.core.error_model import SurrogateModel
+    from repro.models import cnn as cnn_mod
+    from repro.models.common import Param
+
+    spec = MultiplierSpec(fam, 8, signed=True)
+    surro = SurrogateModel.exact(spec)
+
+    def lut_linear(x2, w: Param, ctx, name="", bias=None):
+        out = approx_matmul(x2.astype(jnp.float32),
+                            w.value.astype(jnp.float32), spec, surro,
+                            mode="bit_exact")
+        return out if bias is None else out + bias.value
+
+    orig = cnn_mod.cim_linear
+    cnn_mod.cim_linear = lut_linear
+    try:
+        return cnn_forward(params, x, None)
+    finally:
+        cnn_mod.cim_linear = orig
+
+
+def run():
+    t0 = time.perf_counter()
+    params, tloss, tacc = train_cnn()
+    print(f"\nTable IV reproduction — CNN trained to acc={tacc:.2f} "
+          f"(loss {tloss:.3f})")
+    print(f"{'family':>10} {'top1':>6} {'top5':>6} {'NMED':>10} {'MRED':>10} "
+          f"{'power saving':>13}")
+    results = {}
+    for fam in FAMS:
+        top1, top5 = evaluate(params, fam)
+        if fam == "exact":
+            nmed = mred = 0.0
+        else:
+            m = characterize(MultiplierSpec(fam, 8))
+            nmed, mred = m.nmed, m.mred
+        # the paper quotes power at its CNN operating point (32-bit fixed
+        # point): Appro4-2 17%, Log-our 64% — our Table-II model at 32-bit
+        save = 1 - em.system_power_w(fam, 32) / em.system_power_w("exact", 32) \
+            if fam != "exact" else 0.0
+        results[fam] = (top1, top5)
+        print(f"{fam:>10} {top1:>6.3f} {top5:>6.3f} {nmed:>10.2e} "
+              f"{mred:>10.2e} {save:>12.1%}")
+    ok = (results["appro42"][0] >= results["exact"][0] - 0.04
+          and results["log_our"][0] >= results["exact"][0] - 0.04
+          and results["mitchell"][0] <= results["log_our"][0] + 0.02)
+    print(f"claims (appro42/log_our hold accuracy, LM degrades): {ok}")
+    dt = (time.perf_counter() - t0) * 1e6 / 4
+    return [("table4_cnn", dt, f"exact_top1={results['exact'][0]:.3f};"
+             f"log_our_top1={results['log_our'][0]:.3f};ok={ok}")]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

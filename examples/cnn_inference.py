@@ -1,0 +1,12 @@
+"""Approximate CNN inference (paper Table IV): train a small residual
+CNN exactly, then run inference through each multiplier family's
+bit-exact LUT semantics and compare accuracy + energy.
+
+    PYTHONPATH=src:. python examples/cnn_inference.py
+"""
+
+from benchmarks.table4_cnn import run
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"\n{name}: {derived}")

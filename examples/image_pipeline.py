@@ -1,0 +1,15 @@
+"""Accuracy-constrained image processing on approximate multipliers
+(paper Sec. V-B): alpha blending + Sobel edge detection, PSNR-scored.
+
+    PYTHONPATH=src python examples/image_pipeline.py
+"""
+
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.table3_psnr import run  # noqa: E402
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"\n{name}: {derived}")

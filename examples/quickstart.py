@@ -1,0 +1,40 @@
+"""Quickstart: compile a CiM macro, explore the accuracy-energy space,
+and run an approximate GEMM — OpenACM's flow in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CiMConfig, compile_macro
+from repro.core.dse import best_under_budget, enumerate_space, select
+from repro.core.sram_model import SRAMConfig
+
+# 1. compile a macro: multiplier family + bit width + SRAM geometry
+macro = compile_macro(CiMConfig(family="log_our", bits=8,
+                                sram=SRAMConfig(rows=64, cols=32, banks=2),
+                                mode="surrogate"))
+print(macro.summary())
+print("FakeRAM abstract:", macro.fakeram_abstract())
+
+# 2. run an approximate matmul against it (exact gradients via STE)
+x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+w = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+y_exact = macro.matmul(x, w, mode="exact")
+y_appr = macro.matmul(x, w, key=jax.random.PRNGKey(2))
+err = jnp.abs(y_appr - y_exact).mean() / jnp.abs(y_exact).mean()
+print(f"mean relative deviation vs exact: {float(err):.4f}")
+
+# 3. what does it cost?  (workload = 1 GMAC)
+print(f"energy for 1 GMAC: {macro.energy_for(1e9)*1e6:.2f} uJ "
+      f"(exact would be "
+      f"{compile_macro(CiMConfig(family='exact', bits=8)).energy_for(1e9)*1e6:.2f} uJ)")
+
+# 4. accuracy-constrained DSE: cheapest design meeting NMED <= 5e-3
+best = best_under_budget(bits=8, max_nmed=5e-3)
+print(f"DSE pick under NMED<=5e-3: {best.spec.short_name()} "
+      f"@ {best.energy_per_mac_j*1e12:.2f} pJ/MAC")
+for p in select(enumerate_space(bits=8), max_nmed=5e-2)[:5]:
+    print(f"   {p.spec.short_name():26s} NMED={p.nmed:.2e} "
+          f"E/MAC={p.energy_per_mac_j*1e12:.2f}pJ")

@@ -1,0 +1,4 @@
+# Architecture registry: importing this package registers every assigned
+# arch (plus the paper's CNN proxy lives in repro.models.cnn).
+from . import dense_archs, hybrid_archs, moe_archs  # noqa: F401
+from .base import arch_names, get_config, get_shape, input_specs  # noqa: F401

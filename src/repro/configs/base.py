@@ -1,0 +1,67 @@
+"""Config registry + input specs for every (arch x shape) cell."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compiler import CiMConfig
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def arch_names():
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, smoke: bool = False,
+               cim: Optional[CiMConfig] = None,
+               **overrides) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration)
+
+    table = _SMOKE if smoke else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {arch_names()}")
+    cfg = table[name]()
+    if cim is not None or overrides:
+        cfg = dataclasses.replace(cfg, **({"cim": cim} if cim else {}),
+                                  **overrides)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill: the token batch (+ modality stubs).  decode: one new
+    token; the KV caches are produced by `jax.eval_shape` over
+    `LM.init_caches` in the launcher (no allocation either way).
+    """
+    b = shape.global_batch
+    s = shape.seq_len
+    specs = {}
+    if shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.vision is not None and shape.kind != "decode":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision.n_tokens, cfg.vision.d_vision), jnp.float32)
+    if cfg.encoder is not None and shape.kind != "decode":
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

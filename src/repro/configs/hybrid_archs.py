@@ -1,0 +1,99 @@
+"""Hybrid / SSM / multimodal configs: recurrentgemma-9b, xlstm-125m,
+llama-3.2-vision-11b, whisper-medium."""
+
+from repro.models.config import (ATTN, CROSS, LOCAL, MLSTM, RGLRU, SLSTM,
+                                 EncoderConfig, ModelConfig, RecurrentConfig,
+                                 VisionConfig)
+from repro.models.transformer import DEC_CROSS
+
+from .base import register
+
+
+def recurrentgemma_9b() -> ModelConfig:
+    # 38 blocks, 2 recurrent : 1 local-attention (window 2048)
+    return ModelConfig(
+        name="recurrentgemma-9b", family="hybrid", n_layers=38, d_model=4096,
+        n_heads=16, n_kv_heads=1, head_dim=256, d_ff=12288, vocab=256000,
+        window=2048,
+        rnn=RecurrentConfig(width=4096, conv_width=4),
+        prefix_layers=(RGLRU, RGLRU), period=(LOCAL, RGLRU, RGLRU),
+        n_periods=12,
+        supports_long_context=True, grad_accum=4)
+
+
+def recurrentgemma_9b_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", family="hybrid", n_layers=5,
+        d_model=64, n_heads=4, n_kv_heads=1, head_dim=16, d_ff=160,
+        vocab=512, window=32,
+        rnn=RecurrentConfig(width=64, conv_width=4),
+        prefix_layers=(RGLRU, RGLRU), period=(LOCAL, RGLRU, RGLRU),
+        n_periods=1, supports_long_context=True,
+        attn_q_chunk=16, attn_kv_chunk=16)
+
+
+def xlstm_125m() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m", family="ssm", n_layers=12, d_model=768,
+        n_heads=4, n_kv_heads=4, d_ff=0, vocab=50304,
+        tie_embeddings=True,
+        rnn=RecurrentConfig(mlstm_chunk=64, slstm_heads=4),
+        period=(MLSTM, MLSTM, SLSTM), n_periods=4,
+        supports_long_context=True, grad_accum=2)
+
+
+def xlstm_125m_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m-smoke", family="ssm", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=0, vocab=512, tie_embeddings=True,
+        rnn=RecurrentConfig(mlstm_chunk=16, slstm_heads=4),
+        period=(MLSTM, MLSTM, SLSTM), n_periods=1,
+        supports_long_context=True)
+
+
+def llama32_vision_11b() -> ModelConfig:
+    # 40 decoder layers; gated cross-attention every 5th layer
+    return ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm", n_layers=40, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=14336, vocab=128256,
+        rope_theta=5e5,
+        vision=VisionConfig(n_tokens=1601, d_vision=1280),
+        period=(ATTN, ATTN, ATTN, ATTN, CROSS), n_periods=8,
+        grad_accum=4)
+
+
+def llama32_vision_11b_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b-smoke", family="vlm", n_layers=5,
+        d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=512,
+        vision=VisionConfig(n_tokens=17, d_vision=32),
+        period=(ATTN, ATTN, ATTN, ATTN, CROSS), n_periods=1,
+        attn_q_chunk=32, attn_kv_chunk=32)
+
+
+def whisper_medium() -> ModelConfig:
+    # 24 encoder + 24 decoder layers (official medium); conv frontend is a
+    # stub — encoder consumes precomputed frame embeddings (1500 frames)
+    return ModelConfig(
+        name="whisper-medium", family="audio", n_layers=24, d_model=1024,
+        n_heads=16, n_kv_heads=16, d_ff=4096, vocab=51865,
+        norm="layernorm", act="gelu", rope_fraction=0.0,
+        tie_embeddings=True,
+        encoder=EncoderConfig(n_layers=24, n_frames=1500),
+        period=(DEC_CROSS,), n_periods=24, grad_accum=2)
+
+
+def whisper_medium_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium-smoke", family="audio", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=160, vocab=512,
+        norm="layernorm", act="gelu", rope_fraction=0.0, tie_embeddings=True,
+        encoder=EncoderConfig(n_layers=2, n_frames=30),
+        period=(DEC_CROSS,), n_periods=2,
+        attn_q_chunk=16, attn_kv_chunk=16)
+
+
+register("recurrentgemma-9b", recurrentgemma_9b, recurrentgemma_9b_smoke)
+register("xlstm-125m", xlstm_125m, xlstm_125m_smoke)
+register("llama-3.2-vision-11b", llama32_vision_11b, llama32_vision_11b_smoke)
+register("whisper-medium", whisper_medium, whisper_medium_smoke)

@@ -1,0 +1,70 @@
+"""DeepSeek MoE + MLA configs (V3-671B, V2-Lite-16B).
+
+Assignment-faithful: d_ff in the assignment row is the routed-expert
+hidden size; the leading dense layers use the official dense FFN widths
+(18432 / 10944).  V2-Lite: the assignment header says "MoE 64e top-6"
+while its prose note says "160 routed" — we follow the structured field
+(64 routed + 2 shared, top-6); see DESIGN.md §4.
+"""
+
+from repro.models.config import ATTN, MLAConfig, ModelConfig, MoEConfig
+from repro.models.transformer import ATTN_MOE
+
+from .base import register
+
+
+def deepseek_v3() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b", family="moe", n_layers=61, d_model=7168,
+        n_heads=128, n_kv_heads=128, d_ff=18432, vocab=129280,
+        rope_theta=1e4,
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(n_routed=256, top_k=8, d_expert=2048, n_shared=1,
+                      router="sigmoid", route_scale=2.5),
+        mtp_depth=1,
+        prefix_layers=(ATTN,) * 3, period=(ATTN_MOE,), n_periods=58,
+        grad_accum=8)
+
+
+def deepseek_v3_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b-smoke", family="moe", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+        mla=MLAConfig(kv_lora_rank=32, q_lora_rank=48, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_routed=8, top_k=2, d_expert=32, n_shared=1,
+                      router="sigmoid", route_scale=2.5),
+        mtp_depth=1,
+        prefix_layers=(ATTN,), period=(ATTN_MOE,), n_periods=2,
+        attn_q_chunk=32, attn_kv_chunk=32)
+
+
+def deepseek_v2_lite() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe", n_layers=27, d_model=2048,
+        n_heads=16, n_kv_heads=16, d_ff=10944, vocab=102400,
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=None,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(n_routed=64, top_k=6, d_expert=1408, n_shared=2,
+                      router="softmax"),
+        prefix_layers=(ATTN,), period=(ATTN_MOE,), n_periods=26,
+        grad_accum=4)
+
+
+def deepseek_v2_lite_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b-smoke", family="moe", n_layers=3,
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+        mla=MLAConfig(kv_lora_rank=32, q_lora_rank=None,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(n_routed=8, top_k=2, d_expert=32, n_shared=2),
+        prefix_layers=(ATTN,), period=(ATTN_MOE,), n_periods=2,
+        attn_q_chunk=32, attn_kv_chunk=32)
+
+
+register("deepseek-v3-671b", deepseek_v3, deepseek_v3_smoke)
+register("deepseek-v2-lite-16b", deepseek_v2_lite, deepseek_v2_lite_smoke)

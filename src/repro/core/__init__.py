@@ -1,0 +1,6 @@
+# OpenACM's contribution as a composable JAX module: accuracy-configurable
+# approximate multipliers compiled into executable CiM "macros"
+# (LUT + calibrated surrogate + PPA + yield), consumed by the model zoo.
+from .compiler import CiMConfig, CiMMacro, compile_macro  # noqa: F401
+from .error_model import ErrorMetrics, SurrogateModel, characterize  # noqa: F401
+from .multipliers import MultiplierSpec, multiply, multiply_unsigned  # noqa: F401

@@ -1,0 +1,130 @@
+"""Approximate CiM GEMM — the execution front door.
+
+Execution modes (per DESIGN.md §2):
+
+  * ``exact``           — quantize-dequantize + float dot (QAT baseline).
+  * ``bit_exact``       — every scalar product comes from the compiled
+                          multiplier LUT (validation scale; also the
+                          Pallas ``approx_matmul`` kernel's semantics).
+  * ``surrogate``       — MXU dot + calibrated error model:
+                          (1+mu)*D + sigma*sqrt(A^2@B^2)*eps.
+                          2 matmuls; statistically faithful (the bias of a
+                          sign-magnitude multiplier carries the product's
+                          sign, so it folds into a scalar on D).
+  * ``surrogate_fast``  — beyond-paper optimization: rank-1 estimate of
+                          the variance term (outer product of squared row/
+                          col norms / K), so the overhead over an exact
+                          GEMM is O(MK+KN+MN) instead of one extra GEMM.
+                          Unbiased for uncorrelated magnitudes across k;
+                          validated against ``surrogate`` in tests.
+
+Backward pass is a straight-through estimator (exact float VJP), the
+standard choice for approximate/quantized training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .error_model import SurrogateModel
+from .luts import signed_product_lut
+from .multipliers import MultiplierSpec
+from .quantization import dequantize, quant_scale, quantize
+
+MODES = ("exact", "bit_exact", "surrogate", "surrogate_fast")
+
+
+def _quantize_operands(x, w, bits):
+    sx = quant_scale(x, bits)                      # per-tensor (activations)
+    sw = quant_scale(w, bits, axis=0)              # per-out-channel (weights)
+    xq = quantize(x, sx, bits)
+    wq = quantize(w, sw, bits)
+    return xq, sx, wq, sw
+
+
+def _lut_matmul_int(xq, wq, lut_flat, bits):
+    """Bit-exact signed LUT GEMM (pure jnp oracle; O(M*K*N) gathers)."""
+    half = 1 << (bits - 1)
+    n = 1 << bits
+    ia = (xq.astype(jnp.int32) + half)[..., :, :, None]    # (M, K, 1)
+    ib = (wq.astype(jnp.int32) + half)[None, :, :]         # (1, K, N)
+    idx = ia * n + ib                                      # (M, K, N)
+    prods = jnp.take(lut_flat, idx, axis=0)
+    return prods.sum(axis=-2)                              # (M, N)
+
+
+def _surrogate_terms(xf, wf, model: SurrogateModel, key, fast: bool, scale2):
+    d = xf @ wf
+    if model.is_exact:
+        return d
+    k_len = xf.shape[-1]
+    sq_dot = None
+    if key is not None and model.c1_rel > 0.0:
+        if fast:
+            a2 = jnp.sum(xf ** 2, axis=-1, keepdims=True)          # (M,1)
+            b2 = jnp.sum(wf ** 2, axis=0, keepdims=True)           # (1,N)
+            sq_dot = a2 * b2 / k_len
+        else:
+            sq_dot = (xf ** 2) @ (wf ** 2)
+    noise = None
+    if key is not None:
+        noise = jax.random.normal(key, d.shape, dtype=d.dtype)
+    return model.apply_dot(d, sq_dot, k_len, scale2, noise)
+
+
+@functools.lru_cache(maxsize=32)
+def _signed_lut_flat(spec_key):
+    family, bits, compressor, n_approx = spec_key
+    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
+    return jnp.asarray(signed_product_lut(spec).ravel())
+
+
+def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, spec: MultiplierSpec,
+                  surrogate: SurrogateModel, mode: str = "surrogate",
+                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Approximate x @ w with straight-through exact gradients.
+
+    x: (..., K) float; w: (K, N) float.  Returns float32 (..., N).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+
+    lead = x.shape[:-1]
+    xf2 = x.reshape((-1, x.shape[-1]))
+
+    @jax.custom_vjp
+    def _fwd_fn(xf, wf):
+        return _forward(xf, wf)
+
+    def _forward(xf, wf):
+        bits = spec.bits
+        xq, sx, wq, sw = _quantize_operands(xf, wf, bits)
+        if mode == "bit_exact":
+            lut = _signed_lut_flat((spec.family, bits, spec.compressor,
+                                    spec.n_approx_cols))
+            acc = _lut_matmul_int(xq, wq, lut, bits)
+            return (acc.astype(jnp.float32) * sx) * sw
+        xdq = dequantize(xq, sx)
+        wdq = dequantize(wq, sw)
+        if mode == "exact":
+            return xdq @ wdq
+        scale2 = (sx * sw) ** 2                    # (1, N): per-out-channel
+        return _surrogate_terms(xdq, wdq, surrogate, key,
+                                fast=(mode == "surrogate_fast"),
+                                scale2=scale2)
+
+    def _vjp_fwd(xf, wf):
+        return _forward(xf, wf), (xf, wf)
+
+    def _vjp_bwd(res, g):
+        xf, wf = res
+        return (g @ wf.T).astype(xf.dtype), (xf.T @ g).astype(wf.dtype)
+
+    _fwd_fn.defvjp(_vjp_fwd, _vjp_bwd)
+    out = _fwd_fn(xf2, w)
+    return out.reshape(lead + (w.shape[-1],))

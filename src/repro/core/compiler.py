@@ -1,0 +1,100 @@
+"""The OpenACM compiler facade: CiMConfig -> CiMMacro.
+
+`compile_macro` is the single entry point that mirrors the paper's flow
+(Fig. 1/5): it takes an architecture-level specification (multiplier
+family + bit width + approximation knobs + SRAM geometry) and emits a
+"macro" — on TPU that is (i) the compiled product LUT, (ii) the
+calibrated error surrogate, (iii) the PPA report, (iv) optionally the
+variation-aware yield report, and (v) the FakeRAM-style abstract.
+
+Model code consumes the macro through `CiMMacro.matmul`, and the launch
+configs carry a `CiMConfig` so approximate execution is a first-class,
+per-architecture feature (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from . import energy_model, sram_model, yield_analysis
+from .approx_gemm import MODES, approx_matmul
+from .error_model import ErrorMetrics, SurrogateModel, characterize
+from .multipliers import MultiplierSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMConfig:
+    """User-facing specification of the approximate CiM substrate."""
+
+    family: str = "exact"            # exact | appro42 | mitchell | log_our
+    bits: int = 8
+    signed: bool = True
+    compressor: str = "yang1"
+    n_approx_cols: Optional[int] = None
+    mode: str = "surrogate"          # one of approx_gemm.MODES
+    # per-module allocation (beyond-paper DSE extension): apply the
+    # approximate family only to matmuls whose name starts with one of
+    # these prefixes ("mlp", "moe", "shared", "wq", ...); everything else
+    # runs the exact int8 macro. () = everywhere (the paper's setting).
+    apply_to: tuple = ()
+    sram: sram_model.SRAMConfig = dataclasses.field(
+        default_factory=sram_model.SRAMConfig)
+    run_yield: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+
+    @property
+    def spec(self) -> MultiplierSpec:
+        return MultiplierSpec(self.family, self.bits, self.signed,
+                              self.compressor, self.n_approx_cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMMacro:
+    """Compiled macro: what the model layers actually execute against."""
+
+    config: CiMConfig
+    surrogate: SurrogateModel
+    metrics: ErrorMetrics
+    ppa: energy_model.PPAReport
+    yield_report: Optional[yield_analysis.YieldResult]
+
+    def matmul(self, x, w, key: Optional[jax.Array] = None,
+               mode: Optional[str] = None):
+        return approx_matmul(x, w, self.config.spec, self.surrogate,
+                             mode=mode or self.config.mode, key=key)
+
+    def energy_for(self, n_macs: float) -> float:
+        return energy_model.workload_energy_j(
+            self.config.family, self.config.bits, n_macs)
+
+    def fakeram_abstract(self):
+        return sram_model.fakeram_abstract(self.config.sram)
+
+    def summary(self) -> str:
+        m, p = self.metrics, self.ppa
+        return (f"CiMMacro[{self.config.spec.short_name()} mode={self.config.mode} "
+                f"sram={self.config.sram.rows}x{self.config.sram.cols}] "
+                f"NMED={m.nmed:.2e} MRED={m.mred:.2e} WCE={m.wce} "
+                f"E/MAC={p.energy_per_mac_j*1e12:.2f}pJ area={p.pnr_area_um2:.0f}um2")
+
+
+def compile_macro(config: CiMConfig) -> CiMMacro:
+    """OpenACM's end-to-end compile step (paper Fig. 1), TPU edition."""
+    spec = config.spec
+    metrics = characterize(spec)
+    surrogate = (SurrogateModel.exact(spec) if config.family == "exact"
+                 else SurrogateModel.fit(spec))
+    ppa = energy_model.ppa_report(config.family, config.bits,
+                                  config.sram.rows, config.sram.cols)
+    yrep = None
+    if config.run_yield:
+        model = yield_analysis.model_for_geometry(config.sram.rows)
+        yrep = yield_analysis.mnis_yield(model)
+    return CiMMacro(config=config, surrogate=surrogate, metrics=metrics,
+                    ppa=ppa, yield_report=yrep)

@@ -1,0 +1,191 @@
+"""Error characterization + the calibrated stochastic surrogate.
+
+Two layers:
+
+1. `characterize(spec)` — exhaustive (<=10-bit) or sampled error metrics
+   of a multiplier: NMED, MRED, WCE, bias, one-sidedness.  These are the
+   paper's Table-IV multiplier columns and are data-independent.
+
+2. `SurrogateModel` — the scale-out execution model.  A 671B-parameter
+   model cannot gather 1e17 LUT entries per step, so production-scale
+   approximate GEMM runs as `exact_dot + calibrated error`.  Per scalar
+   product p = a*b (sign-magnitude: the error carries the product sign):
+
+       e(a, b) = mu_rel * p + r,     E[r^2 | p] ~= c0_abs + c1_rel * p^2
+
+   The affine variance law covers both regimes observed in the paper's
+   families: Appro4-2's error is bounded by the approximated low columns
+   (magnitude-independent -> c0 dominates) while Mitchell/Log-our errors
+   are proportional to the product (c1 dominates).  Summed over a
+   contraction of length K, per output element:
+
+       out = (1 + mu_rel) * A@B
+             + sqrt(c0_abs * K * s^2 + c1_rel * (A^2 @ B^2)) * eps
+
+   with eps ~ N(0,1) and s the product of the quantization scales (the
+   c0 term lives in integer units).  One extra GEMM for the variance
+   term, zero for the bias.  (mu_rel, c0_abs, c1_rel) are fitted from the
+   bit-exact emulator with *Gaussian-weighted* least squares (int
+   operands ~ quantized N(0, sigma), the distribution a per-tensor-scaled
+   activation actually has).  Tests validate the surrogate's first two
+   moments against bit-exact LUT GEMM.
+
+   This mirrors the paper's own observation (Sec. V-B) that Log-our
+   errors act as zero-mean noise while Appro4-2's one-sided errors cause
+   a systematic (bias) shift — exactly the two terms of the surrogate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .luts import MAX_LUT_BITS, build_lut
+from .multipliers import MultiplierSpec, multiply_unsigned
+
+# reference integer operand distribution for surrogate fitting: per-tensor
+# symmetric quantization of ~N(0,1) data maps sigma to roughly qmax/3.2
+_GAUSS_SIGMA_FRAC = 1.0 / 3.2
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorMetrics:
+    nmed: float          # mean |err| / max product           (uniform)
+    mred: float          # mean |err| / |exact|, nonzero exact (uniform)
+    wce: int             # max |err|
+    bias: float          # mean signed err                     (uniform)
+    mu_rel: float        # gaussian-weighted LS slope of err on product
+    c0_abs: float        # residual variance floor (int^2 units)
+    c1_rel: float        # residual variance slope on p^2
+    one_sided: bool
+    exhaustive: bool
+
+    @property
+    def sigma_rel(self) -> float:
+        return float(np.sqrt(self.c1_rel))
+
+
+def _error_grid(spec: MultiplierSpec, n_samples: int, seed: int):
+    if spec.bits <= MAX_LUT_BITS:
+        lut = build_lut(spec).astype(np.int64)
+        n = 1 << spec.bits
+        a, b = np.meshgrid(np.arange(n, dtype=np.int64),
+                           np.arange(n, dtype=np.int64), indexing="ij")
+        return a.ravel(), b.ravel(), lut.ravel(), True
+    rng = np.random.default_rng(seed)
+    hi = 1 << spec.bits
+    a = rng.integers(0, hi, n_samples, dtype=np.int64)
+    b = rng.integers(0, hi, n_samples, dtype=np.int64)
+    p = np.asarray(multiply_unsigned(a, b, spec), dtype=np.int64)
+    return a, b, p, False
+
+
+def _gauss_weights(a: np.ndarray, bits: int) -> np.ndarray:
+    """Folded-gaussian pmf over unsigned magnitudes (signed symmetric)."""
+    sigma = ((1 << (bits - 1)) - 1) * _GAUSS_SIGMA_FRAC
+    w = np.exp(-0.5 * (a / sigma) ** 2)
+    return w
+
+
+@functools.lru_cache(maxsize=64)
+def _characterize_cached(key, n_samples: int, seed: int) -> ErrorMetrics:
+    family, bits, compressor, n_approx, signed = key
+    spec = MultiplierSpec(family, bits, signed, compressor, n_approx)
+    a, b, p, exhaustive = _error_grid(spec, n_samples, seed)
+    exact = a * b
+    err = (p - exact).astype(np.float64)
+    maxp = float(((1 << bits) - 1) ** 2)
+    nz = exact > 0
+    rel = err[nz] / exact[nz].astype(np.float64)
+
+    # --- gaussian-weighted surrogate fit (see module docstring) ---
+    w = _gauss_weights(a, bits) * _gauss_weights(b, bits)
+    w = w / w.sum()
+    pf = exact.astype(np.float64)
+    wp2 = float((w * pf * pf).sum())
+    mu_rel = float((w * err * pf).sum() / max(wp2, 1e-30))
+    r = err - mu_rel * pf
+    r2 = r * r
+    # weighted LS of r^2 on [1, p^2], clamped nonnegative
+    p2 = pf * pf
+    s1, sp2 = 1.0, float((w * p2).sum())
+    sp4 = float((w * p2 * p2).sum())
+    sr2 = float((w * r2).sum())
+    sr2p2 = float((w * r2 * p2).sum())
+    det = s1 * sp4 - sp2 * sp2
+    if det > 1e-30:
+        c0 = (sr2 * sp4 - sp2 * sr2p2) / det
+        c1 = (s1 * sr2p2 - sp2 * sr2) / det
+    else:
+        c0, c1 = sr2, 0.0
+    if c0 < 0.0:  # refit with c0 = 0
+        c0, c1 = 0.0, sr2p2 / max(sp4, 1e-30)
+    if c1 < 0.0:  # refit with c1 = 0
+        c0, c1 = sr2, 0.0
+
+    return ErrorMetrics(
+        nmed=float(np.abs(err).mean() / maxp),
+        mred=float(np.abs(rel).mean()),
+        wce=int(np.abs(err).max()),
+        bias=float(err.mean()),
+        mu_rel=mu_rel,
+        c0_abs=float(c0),
+        c1_rel=float(c1),
+        one_sided=bool((err <= 0).all() or (err >= 0).all()),
+        exhaustive=exhaustive,
+    )
+
+
+def characterize(spec: MultiplierSpec, n_samples: int = 200_000,
+                 seed: int = 0) -> ErrorMetrics:
+    key = (spec.family, spec.bits, spec.compressor, spec.n_approx_cols,
+           spec.signed)
+    return _characterize_cached(key, n_samples, seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateModel:
+    """Calibrated (mu_rel, c0_abs, c1_rel) noise model for one multiplier."""
+
+    mu_rel: float
+    c0_abs: float
+    c1_rel: float
+    wce: int
+    spec: MultiplierSpec
+
+    @classmethod
+    def fit(cls, spec: MultiplierSpec, **kw) -> "SurrogateModel":
+        m = characterize(spec, **kw)
+        return cls(mu_rel=m.mu_rel, c0_abs=m.c0_abs, c1_rel=m.c1_rel,
+                   wce=m.wce, spec=spec)
+
+    @classmethod
+    def exact(cls, spec: MultiplierSpec) -> "SurrogateModel":
+        return cls(0.0, 0.0, 0.0, 0, spec)
+
+    @property
+    def is_exact(self) -> bool:
+        return self.mu_rel == 0.0 and self.c0_abs == 0.0 and self.c1_rel == 0.0
+
+    @property
+    def has_noise(self) -> bool:
+        return self.c0_abs > 0.0 or self.c1_rel > 0.0
+
+    def apply_dot(self, exact_dot, sq_dot, k_len, scale2, noise):
+        """out = (1+mu)*D + sqrt(c0*K*s^2 + c1*(A^2@B^2)) * eps.
+
+        scale2: squared product-of-quant-scales, broadcastable to the
+        output (per-out-channel); sq_dot in real (dequantized) units.
+        """
+        out = (1.0 + self.mu_rel) * exact_dot
+        if noise is not None and self.has_noise:
+            import jax.numpy as jnp
+
+            var = self.c0_abs * k_len * scale2
+            if self.c1_rel > 0.0 and sq_dot is not None:
+                var = var + self.c1_rel * sq_dot
+            out = out + jnp.sqrt(jnp.maximum(var, 0.0)) * noise
+        return out

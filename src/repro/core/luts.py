@@ -1,0 +1,61 @@
+"""LUT compilation: the TPU-native 'macro generation' step.
+
+An n-bit multiplier's full semantics are a 2^n x 2^n product table.  For
+n <= `MAX_LUT_BITS` we materialize it once (offline, numpy) and the
+bit-exact GEMM paths (pure-jnp ref and the Pallas kernel) just gather
+from it — the moral equivalent of OpenACM emitting a macro netlist.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+from .multipliers import MultiplierSpec, multiply_unsigned
+
+MAX_LUT_BITS = 10  # 2^20 entries of int32 = 4 MiB; plenty for CiM widths
+
+
+def _spec_key(spec: MultiplierSpec) -> Tuple:
+    return (spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_lut_cached(key: Tuple) -> np.ndarray:
+    family, bits, compressor, n_approx = key
+    spec = MultiplierSpec(family=family, bits=bits, signed=False,
+                          compressor=compressor, n_approx_cols=n_approx)
+    n = 1 << bits
+    a, b = np.meshgrid(np.arange(n, dtype=np.int64),
+                       np.arange(n, dtype=np.int64), indexing="ij")
+    p = multiply_unsigned(a.ravel(), b.ravel(), spec).reshape(n, n)
+    assert p.min() >= 0 and p.max() < np.iinfo(np.int32).max
+    return p.astype(np.int32)
+
+
+def build_lut(spec: MultiplierSpec) -> np.ndarray:
+    """(2^bits, 2^bits) int32 unsigned-product table for `spec`."""
+    if spec.bits > MAX_LUT_BITS:
+        raise ValueError(
+            f"LUT materialization capped at {MAX_LUT_BITS} bits "
+            f"(got {spec.bits}); use the arithmetic or surrogate path")
+    return _build_lut_cached(_spec_key(spec))
+
+
+def signed_product_lut(spec: MultiplierSpec) -> np.ndarray:
+    """Signed product table indexed by two's-complement-offset operands.
+
+    Index (a + 2^{bits-1}, b + 2^{bits-1}) for a, b in
+    [-2^{bits-1}, 2^{bits-1}).  Sign-magnitude semantics (paper's signed
+    wrapper); |-2^{bits-1}| saturates to 2^{bits-1}-1.
+    """
+    u = build_lut(spec)  # magnitudes up to 2^{bits-1}-1 used only
+    half = 1 << (spec.bits - 1)
+    vals = np.arange(-half, half, dtype=np.int64)
+    mags = np.minimum(np.abs(vals), half - 1)
+    signs = np.sign(vals)
+    p = u[np.ix_(mags, mags)].astype(np.int64)
+    out = p * np.outer(signs, signs)
+    return out.astype(np.int32)

@@ -1,0 +1,103 @@
+"""Deterministic, checkpointable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, shard), so (i) any host
+can regenerate any shard without coordination, (ii) resume-from-
+checkpoint replays the exact token stream (the cursor is one int), and
+(iii) elastic re-sharding only changes the (host -> shard) mapping, not
+the stream.  A background prefetch thread keeps `next_batch` off the
+step's critical path.
+
+The synthetic stream is not iid noise: tokens follow a Zipf-ish marginal
+with a Markov bigram mixture, so cross-entropy actually decreases during
+training (examples/train_lm.py shows the curve).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class TokenStream:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, n_shards: int = 1, shard: int = 0,
+                 prefetch: int = 2):
+        assert global_batch % n_shards == 0
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = global_batch // n_shards
+        self.seed = seed
+        self.shard = shard
+        self.n_shards = n_shards
+        self.step = 0
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._worker: Optional[threading.Thread] = None
+
+    # -- deterministic generation ------------------------------------------
+    def _gen(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        b, s, v = self.batch, self.seq_len, self.vocab
+        # zipf-ish unigram pool
+        ranks = np.arange(1, v + 1)
+        probs = 1.0 / ranks ** 1.1
+        probs /= probs.sum()
+        base = rng.choice(v, size=(b, s), p=probs)
+        # markov-ish structure: with p=0.5, token t = f(token_{t-1})
+        shift = (base[:, :-1] * 31 + 7) % v
+        mask = rng.random((b, s - 1)) < 0.5
+        out = base.copy()
+        out[:, 1:] = np.where(mask, shift, base[:, 1:])
+        return out.astype(np.int32)
+
+    # -- iteration -----------------------------------------------------------
+    def next_batch(self) -> np.ndarray:
+        if self._worker is None:
+            self._start()
+        tokens = self._q.get()
+        self.step += 1
+        return tokens
+
+    def _start(self):
+        def work():
+            step = self.step
+            while True:
+                self._q.put(self._gen(step))
+                step += 1
+
+        self._worker = threading.Thread(target=work, daemon=True)
+        self._worker.start()
+
+    # -- checkpointing ---------------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict):
+        # drop the prefetch queue; regenerate from the cursor
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])
+        self._worker = None
+        self._q = queue.Queue(maxsize=self._q.maxsize)
+
+
+def image_batch(rng: np.random.Generator, n: int, hw: int = 32,
+                n_classes: int = 10, noise: float = 0.32):
+    """Structured synthetic images for the CNN benchmark: class-dependent
+    oriented gratings + blobs + heavy noise.  The noise level is tuned so
+    a small CNN lands ~90% — high enough to be meaningful, low enough
+    that multiplier-level errors show up in the accuracy (Table IV)."""
+    ys = rng.integers(0, n_classes, n)
+    xs = np.zeros((n, hw, hw, 3), np.float32)
+    yy, xx = np.mgrid[0:hw, 0:hw] / hw
+    for i, c in enumerate(ys):
+        ang = np.pi * c / n_classes
+        f = 3 + (c % 3) * 2
+        g = np.sin(2 * np.pi * f * (xx * np.cos(ang) + yy * np.sin(ang)))
+        cx, cy = rng.random(2) * 0.6 + 0.2
+        blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (0.02 + 0.01 * (c % 4))))
+        img = np.stack([g, blob, g * blob], axis=-1)
+        xs[i] = 0.6 * img + noise * rng.standard_normal((hw, hw, 3))
+    return xs, ys.astype(np.int32)

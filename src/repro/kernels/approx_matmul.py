@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: bit-exact LUT-gather approximate GEMM.
+
+The compiled CiM macro *is* a product LUT (core/luts.py); this kernel
+executes it: for int8 operand tiles resident in VMEM it gathers
+LUT[a, b] per scalar pair and accumulates int32 partial sums, one HBM
+pass over A and B.
+
+TPU mapping (DESIGN.md §2): one (bm x bk) A-tile is a CiM subarray's
+stored word block; the LUT (2^16 entries, 256 KiB int32) sits in VMEM
+like the macro's compute fabric.  Grid = (M/bm, N/bn, K/bk), k innermost
+so the f32/int32 accumulator lives in a VMEM scratch across the k steps.
+
+This is the *validation-scale* path (it is gather-bound by design — the
+arithmetic-strength families use `mitchell_gemm`, and production runs
+the `cim_gemm` surrogate on the MXU).  Correctness is asserted against
+``ref.lut_matmul_ref`` in interpret mode; on hardware the gather lowers
+to the TPU dynamic-gather unit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *, bits: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    half = 1 << (bits - 1)
+    n = 1 << bits
+    a = x_ref[...].astype(jnp.int32) + half          # (bm, bk)
+    b = w_ref[...].astype(jnp.int32) + half          # (bk, bn)
+    idx = a[:, :, None] * n + b[None, :, :]          # (bm, bk, bn)
+    prods = jnp.take(lut_ref[...], idx, axis=0)      # LUT gather
+    acc_ref[...] += prods.sum(axis=1, dtype=jnp.int32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
+               bits: int = 8, block: tuple = (32, 32, 128),
+               interpret: bool = True) -> jnp.ndarray:
+    """Bit-exact signed LUT GEMM. xq (M,K) int8, wq (K,N) int8 -> int32."""
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    bm, bk, bn = block
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    xp = jnp.pad(xq, ((0, pm), (0, pk)))             # zero pads: LUT[0,0]=0
+    wp = jnp.pad(wq, ((0, pk), (0, pn)))
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1 << (2 * bits),), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, lut_flat)
+    return out[:m, :n]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated in interpret mode per DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luts import signed_product_lut
+from repro.core.multipliers import MultiplierSpec
+
+from .approx_matmul import lut_matmul
+from .cim_gemm import cim_gemm, cim_gemm_core
+from .mitchell_gemm import mitchell_matmul
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=16)
+def _lut_for(family: str, bits: int, compressor: str, n_approx) -> jnp.ndarray:
+    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
+    return jnp.asarray(signed_product_lut(spec).ravel())
+
+
+def approx_matmul_bit_exact(xq, wq, spec: MultiplierSpec,
+                            block=(32, 32, 128),
+                            interpret: Optional[bool] = None):
+    """Bit-exact kernel GEMM for any LUT-representable multiplier."""
+    interp = default_interpret() if interpret is None else interpret
+    lut = _lut_for(spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    return lut_matmul(xq, wq, lut, bits=spec.bits, block=block,
+                      interpret=interp)
+
+
+def log_matmul(xq, wq, bits: int = 8, compensated: bool = True,
+               block=(32, 32, 32), interpret: Optional[bool] = None):
+    """Arithmetic log-domain kernel GEMM (mitchell / log_our)."""
+    interp = default_interpret() if interpret is None else interpret
+    return mitchell_matmul(xq, wq, bits=bits, compensated=compensated,
+                           block=block, interpret=interp)
+
+
+def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
+                   block=(128, 128, 128), interpret: Optional[bool] = None):
+    """Fused production surrogate GEMM."""
+    interp = default_interpret() if interpret is None else interpret
+    return cim_gemm(xq, wq, sx, sw, eps, mu, c0, c1, block=block,
+                    interpret=interp)
+
+
+__all__ = ["approx_matmul_bit_exact", "log_matmul", "surrogate_gemm",
+           "cim_gemm_core", "default_interpret"]

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the bit-for-bit (or moment-for-moment, for the
+stochastic surrogate) semantics the kernels in this package must match;
+tests sweep shapes/dtypes and assert against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.multipliers import MultiplierSpec, multiply
+
+
+def lut_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
+                   bits: int = 8) -> jnp.ndarray:
+    """Bit-exact signed LUT GEMM: out[m,n] = sum_k LUT[xq[m,k], wq[k,n]].
+
+    xq: (M, K) int8/int32 in [-2^{b-1}, 2^{b-1}); wq: (K, N); lut_flat:
+    (2^{2b},) int32 signed-product table (see core.luts.signed_product_lut).
+    Returns int32 (M, N).
+    """
+    half = 1 << (bits - 1)
+    n = 1 << bits
+    ia = (xq.astype(jnp.int32) + half)[:, :, None]
+    ib = (wq.astype(jnp.int32) + half)[None, :, :]
+    prods = jnp.take(lut_flat, ia * n + ib, axis=0)
+    return prods.sum(axis=1, dtype=jnp.int32)
+
+
+def mitchell_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray, bits: int = 8,
+                        compensated: bool = True) -> jnp.ndarray:
+    """Log-domain GEMM oracle (mitchell or the paper's log_our)."""
+    spec = MultiplierSpec("log_our" if compensated else "mitchell",
+                          bits, signed=True)
+    a = xq.astype(jnp.int32)[:, :, None]
+    b = wq.astype(jnp.int32)[None, :, :]
+    a, b = jnp.broadcast_arrays(a, b)
+    prods = multiply(a, b, spec)
+    return prods.sum(axis=1, dtype=jnp.int32)
+
+
+def cim_gemm_ref(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
+                 sw: jnp.ndarray, eps: jnp.ndarray, mu: float, c0: float,
+                 c1: float) -> jnp.ndarray:
+    """Surrogate CiM GEMM oracle (real units).
+
+    xq (M,K) int8, wq (K,N) int8, sx scalar, sw (N,), eps (M,N) float32.
+    out = (1+mu) * D + sqrt(c0*K*s2 + c1*SQ) * eps, with D, SQ the int
+    dot / squared dot dequantized by s2 = (sx*sw)^2.
+    """
+    xf = xq.astype(jnp.float32)
+    wf = wq.astype(jnp.float32)
+    d = xf @ wf
+    sq = (xf ** 2) @ (wf ** 2)
+    scale = sx * sw[None, :]
+    k = xq.shape[-1]
+    var = c0 * k * scale ** 2 + c1 * sq * scale ** 2
+    return (1.0 + mu) * d * scale + jnp.sqrt(jnp.maximum(var, 0.0)) * eps
+
+
+def slstm_scan_ref(u, r, bias, n_heads: int):
+    """Sequential oracle for the fused sLSTM kernel (matches
+    models/xlstm._slstm_cell semantics with zero-initialized states)."""
+    import jax
+
+    b, t, d4 = u.shape
+    dh = d4 // 4 // n_heads
+    ut = u.reshape(b, t, n_heads, 4 * dh)
+    c = jnp.zeros((b, n_heads, dh), jnp.float32)
+    n = jnp.zeros_like(c)
+    h = jnp.zeros_like(c)
+    m = jnp.zeros_like(c)
+    hs = []
+    for i in range(t):
+        rec = jnp.einsum("bkd,kdf->bkf", h, r)
+        pre = ut[:, i] + rec + bias[None]
+        zi = jnp.tanh(pre[..., :dh])
+        ii = pre[..., dh:2 * dh]
+        fi = pre[..., 2 * dh:3 * dh]
+        oi = jax.nn.sigmoid(pre[..., 3 * dh:])
+        lf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(lf + m, ii)
+        iw = jnp.exp(ii - m_new)
+        fw = jnp.exp(lf + m - m_new)
+        c = fw * c + iw * zi
+        n = fw * n + iw
+        h = oi * c / jnp.maximum(n, 1e-6)
+        m = m_new
+        hs.append(h)
+    return jnp.stack(hs, axis=1)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused sLSTM recurrence.
+
+The xlstm prefill/train dry-run cells are bound by the sequential sLSTM
+scan: 32k time steps of ~KB-sized elementwise ops + a tiny recurrent
+matvec — pure dispatch/latency overhead in HLO form (92.9% of the cell's
+HBM-byte term, EXPERIMENTS.md §Perf xlstm).  The xLSTM paper itself
+ships a fused CUDA kernel for exactly this reason; this is the TPU
+analogue: ONE pallas_call runs the whole recurrence with the four
+per-head states resident in VMEM scratch, streaming pre-activation
+blocks from HBM and writing hidden-state blocks back.
+
+Grid = (T / bt,) executed sequentially on a TPU core, so VMEM scratch
+carries the state across grid steps; inside a step a fori_loop walks the
+block's time steps.  Cell math matches models/xlstm._slstm_cell
+bit-for-bit in f32 (stabilized exponential gating).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, r_ref, b_ref, o_ref, c_ref, n_ref, h_ref, m_ref, *,
+            bt: int, nh: int, dh: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    r = r_ref[...]                                    # (nh, dh, 4*dh)
+    bias = b_ref[...]                                 # (nh, 4*dh)
+
+    def step(i, carry):
+        c, n, h, m = carry                            # all (B, nh, dh)
+        u_t = u_ref[i]                                # (B, nh, 4*dh)
+        rec = jax.lax.dot_general(
+            h, r, (((2,), (1,)), ((1,), (0,))))       # (nh, B, 4dh)
+        rec = rec.transpose(1, 0, 2)
+        pre = u_t + rec + bias[None]
+        zi = jnp.tanh(pre[..., 0 * dh:1 * dh])
+        ii = pre[..., 1 * dh:2 * dh]
+        fi = pre[..., 2 * dh:3 * dh]
+        oi = jax.nn.sigmoid(pre[..., 3 * dh:4 * dh])
+        lf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(lf + m, ii)
+        iw = jnp.exp(ii - m_new)
+        fw = jnp.exp(lf + m - m_new)
+        c_new = fw * c + iw * zi
+        n_new = fw * n + iw
+        h_new = oi * c_new / jnp.maximum(n_new, 1e-6)
+        o_ref[i] = h_new
+        return c_new, n_new, h_new, m_new
+
+    carry = (c_ref[...], n_ref[...], h_ref[...], m_ref[...])
+    c, n, h, m = jax.lax.fori_loop(0, bt, step, carry)
+    c_ref[...] = c
+    n_ref[...] = n
+    h_ref[...] = h
+    m_ref[...] = m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_heads", "block_t", "interpret"))
+def slstm_scan(u: jnp.ndarray, r: jnp.ndarray, bias: jnp.ndarray,
+               n_heads: int, block_t: int = 256,
+               interpret: bool = True) -> jnp.ndarray:
+    """Fused sLSTM over pre-activations.
+
+    u: (B, T, 4*d) f32 input pre-activations (= x @ w_in, bias excluded);
+    r: (nh, dh, 4*dh) recurrent weights; bias: (nh, 4*dh).
+    Returns h: (B, T, nh, dh) f32.  T must be a multiple of block_t
+    (pad upstream); states start at zero.
+    """
+    b, t, d4 = u.shape
+    d = d4 // 4
+    dh = d // n_heads
+    # (B, T, 4d) -> (T, B, nh, 4dh) time-major blocks
+    ut = u.reshape(b, t, n_heads, 4 * dh).transpose(1, 0, 2, 3)
+    bt = min(block_t, t)
+    while t % bt:
+        bt -= 1
+    grid = (t // bt,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, nh=n_heads, dh=dh),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, b, n_heads, 4 * dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n_heads, dh, 4 * dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_heads, 4 * dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, b, n_heads, dh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, b, n_heads, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((b, n_heads, dh), jnp.float32),
+                        pltpu.VMEM((b, n_heads, dh), jnp.float32),
+                        pltpu.VMEM((b, n_heads, dh), jnp.float32),
+                        pltpu.VMEM((b, n_heads, dh), jnp.float32)],
+        interpret=interpret,
+    )(ut, r, bias)
+    return out.transpose(1, 0, 2, 3)                  # (B, T, nh, dh)

@@ -1,0 +1,277 @@
+"""Attention: blockwise (flash-style) training/prefill paths, windowed
+local attention, cross-attention, and single-token decode against a KV
+cache.  GQA/MQA via KV-head grouping; optional QKV bias (qwen2.5),
+per-head q/k RMSNorm (qwen3), fractional RoPE (stablelm 0.25,
+chatglm 0.5).
+
+Memory: the (q_chunk x kv_chunk) score tile is the only quadratic
+buffer; both chunk sizes come from the config so 32k prefill fits.
+Local attention only visits the ``window // kv_chunk + 1`` KV chunks a
+query chunk can see, so RG-LRU-style archs stay O(S * window).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (CiMContext, Param, apply_rope, cim_linear, param,
+                     rms_norm, rope_tables)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool, qk_norm: bool,
+                   dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": param(ks[0], (d_model, n_heads, head_dim),
+                    ("embed", "heads", None), dtype),
+        "wk": param(ks[1], (d_model, n_kv_heads, head_dim),
+                    ("embed", "heads", None), dtype),
+        "wv": param(ks[2], (d_model, n_kv_heads, head_dim),
+                    ("embed", "heads", None), dtype),
+        "wo": param(ks[3], (n_heads, head_dim, d_model),
+                    ("heads", None, "embed"), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = param(ks[4], (n_heads, head_dim), ("heads", None), dtype,
+                        init="zeros")
+        p["bk"] = param(ks[5], (n_kv_heads, head_dim), ("heads", None), dtype,
+                        init="zeros")
+        p["bv"] = param(ks[6], (n_kv_heads, head_dim), ("heads", None), dtype,
+                        init="zeros")
+    if qk_norm:
+        p["q_norm"] = param(ks[7], (head_dim,), (None,), init="ones")
+        p["k_norm"] = param(ks[7], (head_dim,), (None,), init="ones")
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, head_dim, ctx: CiMContext,
+                 rope, qk_norm: bool):
+    b, s, d = x.shape
+    wq = Param(params["wq"].value.reshape(d, n_heads * head_dim),
+               ("embed", "heads"))
+    wk = Param(params["wk"].value.reshape(d, n_kv_heads * head_dim),
+               ("embed", "heads"))
+    wv = Param(params["wv"].value.reshape(d, n_kv_heads * head_dim),
+               ("embed", "heads"))
+    q = cim_linear(x, wq, ctx, "wq").reshape(b, s, n_heads, head_dim)
+    k = cim_linear(x, wk, ctx, "wk").reshape(b, s, n_kv_heads, head_dim)
+    v = cim_linear(x, wv, ctx, "wv").reshape(b, s, n_kv_heads, head_dim)
+    if "bq" in params:
+        q = q + params["bq"].value
+        k = k + params["bk"].value
+        v = v + params["bv"].value
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"].value)
+        k = rms_norm(k, params["k_norm"].value)
+    q = apply_rope(q, rope)
+    k = apply_rope(k, rope)
+    return q, k, v
+
+
+def _out_proj(params, o, ctx: CiMContext):
+    b, s, h, dd = o.shape
+    wo = Param(params["wo"].value.reshape(h * dd, -1), ("heads", "embed"))
+    return cim_linear(o.reshape(b, s, h * dd), wo, ctx, "wo")
+
+
+def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
+                  window: Optional[int], q_offset, kv_len_valid):
+    """Online-softmax blockwise attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KH, D).  q_offset: absolute position
+    of q[0] (for causal/window masks against the kv axis).
+    kv_len_valid: number of valid kv positions (decode: cache fill level).
+    """
+    b, sq, h, dd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kh
+    qc = min(q_chunk, sq)
+    while sq % qc:
+        qc -= 1
+    # pad KV to a chunk multiple (a 1601-token cross stream must NOT
+    # shrink the chunk to its largest divisor = 1); padded positions are
+    # masked by kv_len_valid below
+    kc = min(kv_chunk, skv)
+    pad_kv = (-skv) % kc
+    if pad_kv:
+        kv_len_valid = jnp.minimum(kv_len_valid, skv)
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        skv += pad_kv
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / (dd ** 0.5)
+
+    qr = q.reshape(b, nq, qc, kh, g, dd)
+    kr = k.reshape(b, nk, kc, kh, dd)
+    vr = v.reshape(b, nk, kc, kh, dv)
+    kv_pos = jnp.arange(skv).reshape(nk, kc)
+
+    # local attention: only the last W kv chunks can be visible to a q
+    # chunk (q_offset == 0 for training/prefill where Sq == Skv)
+    local = window is not None and causal
+    w_chunks = min(nk, (window + qc - 1) // kc + 1) if local else nk
+
+    def q_step(_, qi):
+        qb = qr[:, qi]                             # (b, qc, kh, g, dd)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj_rel):
+            m, l, acc = carry
+            if local:
+                # chunk index qi owns kv chunks [qi*qc//kc - W + 1 .. ...]
+                last = (qi * qc + qc - 1) // kc
+                kj = jnp.maximum(last - (w_chunks - 1) + kj_rel, 0)
+            else:
+                kj = kj_rel
+            kb = jax.lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+            kp = jax.lax.dynamic_index_in_dim(kv_pos, kj, 0, keepdims=False)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            mask = kp[None, :] <= qpos[:, None] if causal else \
+                jnp.ones((qc, kc), bool)
+            if window is not None:
+                mask = mask & (kp[None, :] > qpos[:, None] - window)
+            mask = mask & (kp[None, :] < kv_len_valid)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(w_chunks))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, qc, kh * g, dv)
+        return None, o
+
+    _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # chunks: (nq, b, qc, h, dv) -> (b, sq, h, dv)
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
+                    rope_fraction, rope_theta, qk_norm, ctx: CiMContext,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    positions=None, cache: Optional[dict] = None,
+                    x_kv=None, is_cross: bool = False):
+    """Full attention sub-block (projections + SDPA [+ cache update]).
+
+    Training/prefill: cache=None -> returns (y, new_cache_or_None);
+    prefill fills `cache` if one is passed (pre-allocated to max length).
+    Decode: x is (B, 1, D) and cache is the running KV state.
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    rope = rope_tables(positions, head_dim, rope_fraction, rope_theta)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim, ctx,
+                           rope, qk_norm)
+    if x_kv is not None:  # cross-attention: keys/values from the aux stream
+        _, k, v = _project_qkv(params, x_kv, n_heads, n_kv_heads, head_dim,
+                               ctx, None, qk_norm)
+
+    if cache is None:
+        y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
+                          q_offset=0, kv_len_valid=k.shape[1])
+        return _out_proj(params, y.astype(x.dtype), ctx), None
+
+    # caches store K/V flattened to (B, T, KH*D): the flat dim shards
+    # cleanly on the model axis (KH alone rarely divides it), matching
+    # the joint (kh x d) sharding GSPMD wants internally — with a 4-D
+    # cache it inserted a full cache reshard EVERY decode step
+    # (69 GB/token at llama-11B 32k, EXPERIMENTS.md §Perf)
+    kh_d = n_kv_heads * head_dim
+    if s > 1:  # prefill into a pre-allocated cache
+        t = cache["k"].shape[1]
+        skv = k.shape[1]
+        kf = k.reshape(b, skv, kh_d)
+        vf = v.reshape(b, skv, kh_d)
+        if skv <= t:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], kf.astype(cache["k"].dtype), (0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vf.astype(cache["v"].dtype), (0, 0, 0))
+        else:  # window ring buffer keeps the last t entries at slot p % t
+            p0 = skv - t
+            ck = jnp.roll(kf[:, p0:].astype(cache["k"].dtype), p0 % t,
+                          axis=1)
+            cv = jnp.roll(vf[:, p0:].astype(cache["v"].dtype), p0 % t,
+                          axis=1)
+        y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
+                          q_offset=0, kv_len_valid=k.shape[1])
+        new_cache = {"k": ck, "v": cv, "pos": jnp.int32(k.shape[1])}
+        return _out_proj(params, y.astype(x.dtype), ctx), new_cache
+
+    # single-token decode
+    pos = cache["pos"]
+    t = cache["k"].shape[1]
+    if not is_cross:
+        if window is not None:        # ring buffer for local attention
+            slot = pos % t
+        else:
+            slot = pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.reshape(b, 1, kh_d).astype(cache["k"].dtype),
+            (0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.reshape(b, 1, kh_d).astype(cache["v"].dtype),
+            (0, slot, 0))
+        tpos = jnp.arange(t)
+        if window is not None:
+            # ring slot i was written `age` steps ago; valid iff among the
+            # last min(pos+1, t) writes
+            age = (slot - tpos) % t
+            valid = age < jnp.minimum(pos + 1, t)
+        else:
+            valid = tpos <= pos
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    else:
+        # cross-attention decode: encoder KV is static (filled at prefill)
+        ck, cv = cache["k"], cache["v"]
+        valid = jnp.arange(t) < pos
+        new_cache = cache
+    kh = n_kv_heads
+    g = n_heads // kh
+    # bf16 math with f32 accumulation: an f32 cast of the 32k cache would
+    # materialize (and reshard) the whole cache every step
+    ck4 = ck.reshape(b, t, kh, head_dim)
+    cv4 = cv.reshape(b, t, kh, head_dim)
+    qg = q.reshape(b, 1, kh, g, head_dim).astype(ck.dtype)
+    # NB: bf16 einsums + f32 softmax — XLA:CPU cannot *execute*
+    # bf16xbf16->f32 dots, and TPU MXUs accumulate bf16 dots in f32
+    # internally anyway
+    s_ = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck4).astype(jnp.float32) \
+        / (head_dim ** 0.5)
+    s_ = jnp.where(valid[None, None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bkgqt,btkd->bkgqd", p, cv4)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads, head_dim)
+    y = _out_proj(params, o.astype(x.dtype), ctx)
+    return y, new_cache
+
+
+def init_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+               window: Optional[int] = None, dtype=jnp.bfloat16):
+    """K/V stored flattened (B, T, KH*D) — see attention_block's decode
+    path for why (joint kh x d sharding on the model axis)."""
+    t = min(max_len, window) if window is not None else max_len
+    return {
+        "k": jnp.zeros((batch, t, n_kv_heads * head_dim), dtype),
+        "v": jnp.zeros((batch, t, n_kv_heads * head_dim), dtype),
+        "pos": jnp.int32(0),
+    }

@@ -1,0 +1,75 @@
+"""Small ResNet-style CNN for the paper's Table-IV experiment.
+
+Convolutions run as im2col + `cim_linear`, so the whole network executes
+against a compiled CiM macro: exact for training (QAT), and any
+approximate multiplier family (bit-exact LUT semantics) for inference —
+the ResNet-18/ILSVRC evaluation scaled to what a CPU container can
+train (see DESIGN.md §7 for the deviation note).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import CiMContext, Param, cim_linear, param
+
+
+def _im2col(x, kh: int, kw: int):
+    """x: (B, H, W, C) -> (B, H, W, kh*kw*C) with SAME padding."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    cols = [xp[:, i:i + h, j:j + w] for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(params, x, ctx: CiMContext, name: str):
+    """3x3 SAME conv through the CiM matmul path."""
+    cols = _im2col(x, 3, 3)
+    b, h, w, k = cols.shape
+    y = cim_linear(cols.reshape(b * h * w, k), params, ctx, name)
+    return y.reshape(b, h, w, -1)
+
+
+def init_cnn(key, n_classes: int = 10, width: int = 16) -> Dict:
+    ks = jax.random.split(key, 8)
+    w1, w2, w3 = width, 2 * width, 4 * width
+    mk = lambda k, i, o, s: param(k, (i, o), (None, None), jnp.float32,
+                                  scale=s)
+    return {
+        "c1": mk(ks[0], 9 * 3, w1, 0.15),
+        "c2": mk(ks[1], 9 * w1, w1, 0.08),       # residual block
+        "c3": mk(ks[2], 9 * w1, w2, 0.08),
+        "c4": mk(ks[3], 9 * w2, w2, 0.05),       # residual block
+        "c5": mk(ks[4], 9 * w2, w3, 0.05),
+        "fc": mk(ks[5], w3, n_classes, 0.1),
+        "b": param(ks[6], (n_classes,), (None,), jnp.float32, init="zeros"),
+    }
+
+
+def cnn_forward(params, x, ctx: CiMContext = None):
+    """x: (B, H, W, 3) float in [0,1]. Returns logits (B, n_classes)."""
+    from .common import OFF
+
+    ctx = ctx or OFF
+    h = jax.nn.relu(conv2d(params["c1"], x, ctx, "c1"))
+    h = h + jax.nn.relu(conv2d(params["c2"], h, ctx, "c2"))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(conv2d(params["c3"], h, ctx, "c3"))
+    h = h + jax.nn.relu(conv2d(params["c4"], h, ctx, "c4"))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(conv2d(params["c5"], h, ctx, "c5"))
+    h = h.mean(axis=(1, 2))
+    return cim_linear(h, params["fc"], ctx, "fc") + params["b"].value
+
+
+def cnn_loss(params, batch, ctx=None):
+    logits = cnn_forward(params, batch["x"], ctx)
+    lp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(lp, batch["y"][:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == batch["y"]).mean()
+    return nll, acc

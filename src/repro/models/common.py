@@ -1,0 +1,347 @@
+"""Shared building blocks: params with logical sharding specs, norms,
+RoPE, MLPs, and the CiM-aware linear layer (the paper's technique as a
+first-class execution mode of every matmul in the zoo)."""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compiler import CiMConfig, CiMMacro, compile_macro
+from repro.core.quantization import fake_quant, quant_scale
+
+# ---------------------------------------------------------------------------
+# Params with logical partition specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Param:
+    """A weight plus its *logical* partition spec (resolved at launch by
+    parallel/sharding.py).  Leaves of the params pytree."""
+
+    value: Any
+    spec: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.spec),
+    lambda spec, ch: Param(ch[0], spec),
+)
+
+
+def wsc(x, spec: Tuple):
+    """with_sharding_constraint against the *ambient* mesh (no-op when
+    tracing without one, e.g. in single-device smoke tests).  `spec` is a
+    tuple of logical axis names resolved by parallel/sharding rules."""
+    try:
+        from jax.interpreters.pxla import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        from jax.sharding import NamedSharding
+
+        from repro.parallel.sharding import logical_to_spec
+
+        resolved = logical_to_spec(spec, x.shape, mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, resolved))
+    except Exception:
+        return x
+
+
+def fsdp_gather(w: Param):
+    """ZeRO-3 use-time gather: weights are *stored* with their d_model
+    ('embed') dim sharded on the data axis; before compute we constrain
+    them to drop that axis (XLA inserts the per-layer all-gather, which
+    its latency-hiding scheduler overlaps with compute on TPU) while
+    keeping tensor-parallel axes ('heads'/'ff'/'vocab'/'expert') sharded.
+    Without this, GSPMD resolves the data-axis conflict (batch vs d_model)
+    by un-sharding the *batch* — catastrophically (see DESIGN.md §5)."""
+    if w.spec is None:
+        return w.value
+    spec = list(w.spec)
+    if len(spec) == w.value.ndim + 1 and spec[0] == "layers":
+        spec = spec[1:]          # scanned-body slice: leading axis gone
+    return wsc(w.value, tuple(None if s == "embed" else s for s in spec))
+
+
+def param(key, shape, spec, dtype=jnp.bfloat16, scale: float = 0.02,
+          init: str = "normal") -> Param:
+    if init == "normal":
+        v = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype=jnp.float32)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype=jnp.float32)
+    else:
+        raise ValueError(init)
+    return Param(v.astype(dtype), spec)
+
+
+def unbox(tree):
+    """Param tree -> raw value tree."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree,
+                                  is_leaf=lambda x: isinstance(x, Param))
+
+
+def specs_of(tree):
+    """Param tree -> logical-spec tree (same structure as unbox)."""
+    return jax.tree_util.tree_map(lambda p: p.spec, tree,
+                                  is_leaf=lambda x: isinstance(x, Param))
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    # NOTE (EXPERIMENTS.md §Perf it.3): two "optimizations" of this
+    # function were tried and REVERTED after measurement — (a) a
+    # custom_vjp keeping big tensors bf16 (custom_vjp residuals are
+    # opaque to jax.checkpoint, so norms started SAVING their inputs
+    # instead of being rematerialized), and (b) a bf16-square /
+    # f32-accumulate mean (same effect through AD). Both raised HBM
+    # bytes 19%.  The plain f32-upcast form fuses best under remat.
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def apply_norm(params, x, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"].value)
+    return layer_norm(x, params["scale"].value, params["bias"].value)
+
+
+def init_norm(key, d, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": param(key, (d,), (None,), init="ones")}
+    return {"scale": param(key, (d,), (None,), init="ones"),
+            "bias": param(key, (d,), (None,), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (fractional; chatglm's 2d-rope == fraction 0.5, stablelm 0.25)
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return None
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, rot/2)
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, tables):
+    """x: (B, S, H, D); tables from rope_tables (positions (B, S))."""
+    if tables is None:
+        return x
+    cos, sin, rot = tables
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# CiM-aware linear
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMParams:
+    """Static (trace-time) CiM execution parameters, from a compiled macro."""
+
+    mode: str = "off"            # off | exact | surrogate | surrogate_fast | bit_exact
+    bits: int = 8
+    mu: float = 0.0
+    c0: float = 0.0
+    c1: float = 0.0
+    apply_to: tuple = ()         # name prefixes; () = every matmul
+
+    @classmethod
+    def from_config(cls, cim: Optional[CiMConfig]) -> "CiMParams":
+        if cim is None:
+            return cls()
+        macro: CiMMacro = compile_macro(cim)
+        s = macro.surrogate
+        return cls(mode=cim.mode, bits=cim.bits, mu=s.mu_rel, c0=s.c0_abs,
+                   c1=s.c1_rel, apply_to=tuple(getattr(cim, "apply_to", ())))
+
+    def selects(self, name: str) -> bool:
+        """Mixed-macro allocation (beyond-paper DSE extension): does the
+        approximate family apply to this matmul?  Unselected matmuls run
+        the exact int8 macro instead."""
+        return not self.apply_to or any(name.startswith(p)
+                                        for p in self.apply_to)
+
+
+@dataclasses.dataclass
+class CiMContext:
+    """Per-call context: static params + an optional traced noise key."""
+
+    p: CiMParams
+    key: Optional[jax.Array] = None
+
+    def child(self, name: str) -> "CiMContext":
+        if self.key is None:
+            return self
+        sub = jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+        return CiMContext(self.p, sub)
+
+
+OFF = CiMContext(CiMParams())
+
+# Surrogate noise distribution for the model execution paths.  "normal"
+# is the calibration-faithful choice; "rademacher" (+-1 * sigma) matches
+# the first two moments at a fraction of the cost — sampling a gaussian
+# lowers to an erf_inv chain materializing f32 tensors of the full
+# activation shape (measured ~20% of HBM bytes at 671B scale), while
+# rademacher is one bit-sample + select.  Downstream contractions
+# re-gaussianize the error by CLT (EXPERIMENTS.md §Perf it.2).
+NOISE_KIND = "rademacher"
+
+
+def surrogate_noise(key, shape, dtype):
+    if NOISE_KIND == "rademacher":
+        return jax.random.rademacher(key, shape, jnp.int8).astype(dtype)
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
+               bias: Optional[Param] = None):
+    """y = approx(x @ w) per the CiM context; STE-quantized for training.
+
+    x: (..., K); w.value: (K, N) (higher-rank weights are 2D-ified).
+    """
+    wv = fsdp_gather(w)
+    assert wv.ndim == 2, "cim_linear expects 2-D weights (flatten heads)"
+    p = ctx.p
+    if p.mode == "off":
+        out = x @ wv
+    elif p.mode == "bit_exact":
+        from repro.core.approx_gemm import approx_matmul
+        from repro.core.error_model import SurrogateModel
+        from repro.core.multipliers import MultiplierSpec
+
+        spec = MultiplierSpec("exact", p.bits, True)  # LUT carries semantics
+        out = approx_matmul(x.astype(jnp.float32), wv.astype(jnp.float32),
+                            spec, SurrogateModel.exact(spec), mode="bit_exact")
+        out = out.astype(x.dtype)
+    else:
+        xq = fake_quant(x, p.bits)
+        # fake-quant the weight in ITS dtype: an f32 upcast here gets
+        # hoisted out of the layer scan by XLA and materializes the whole
+        # stacked weight in f32 (54 GB/instance at 671B, §Perf; the
+        # residual f32 stacks still visible in decode cells are XLA:CPU's
+        # bf16-dot legalization, a dry-run backend artifact — TPU MXUs
+        # consume bf16 natively)
+        wq = fake_quant(wv, p.bits, axis=0).astype(x.dtype)
+        d = xq @ wq
+        if not p.selects(name):
+            # mixed-macro allocation: this matmul runs the exact int8
+            # macro (quantized, no approximation error)
+            out = d
+            return out if bias is None else out + bias.value
+        out = (1.0 + p.mu) * d
+        key = ctx.child(name).key if name else ctx.key
+        if p.mode in ("surrogate", "surrogate_fast") and key is not None \
+                and (p.c0 > 0.0 or p.c1 > 0.0):
+            sx = quant_scale(jax.lax.stop_gradient(x), p.bits)
+            sw = quant_scale(jax.lax.stop_gradient(wv), p.bits, axis=0)
+            scale2 = (sx * sw).astype(jnp.float32) ** 2
+            k_len = x.shape[-1]
+            var = p.c0 * k_len * scale2
+            if p.c1 > 0.0:
+                xf = jax.lax.stop_gradient(xq).astype(jnp.float32)
+                wf = jax.lax.stop_gradient(wq).astype(jnp.float32)
+                if p.mode == "surrogate_fast":
+                    a2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+                    b2 = jnp.sum(wf * wf, axis=0)
+                    sq = a2 * b2 / k_len
+                else:
+                    sq = (xf * xf) @ (wf * wf)
+                var = var + p.c1 * sq
+            eps = surrogate_noise(key, d.shape, d.dtype)
+            out = out + jax.lax.stop_gradient(
+                jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
+    if bias is not None:
+        out = out + bias.value
+    return out
+
+
+def cim_einsum(eqn: str, x, w: Param, ctx: CiMContext, name: str = ""):
+    """CiM-aware einsum for >2-D weights (expert banks).  Surrogate noise
+    uses the rank-1 (fast) variance estimate; bit_exact is not supported
+    here (expert banks are a production-scale path)."""
+    wv = fsdp_gather(w)
+    p = ctx.p
+    if p.mode == "off":
+        return jnp.einsum(eqn, x, wv)
+    xq = fake_quant(x, p.bits)
+    wq = fake_quant(wv, p.bits).astype(x.dtype)
+    d = jnp.einsum(eqn, xq, wq)
+    if not p.selects(name):
+        return d                 # mixed allocation: exact int8 macro
+    out = (1.0 + p.mu) * d
+    key = ctx.child(name).key if name else ctx.key
+    if p.mode in ("surrogate", "surrogate_fast") and key is not None \
+            and (p.c0 > 0.0 or p.c1 > 0.0):
+        k_len = x.shape[-1]
+        sx = quant_scale(jax.lax.stop_gradient(x), p.bits)
+        sw = quant_scale(jax.lax.stop_gradient(wv), p.bits)
+        scale2 = (sx * sw).astype(jnp.float32) ** 2
+        var = (p.c0 + p.c1 * (0.5 * 127.0 ** 2) ** 1) * k_len * scale2
+        eps = surrogate_noise(key, d.shape, d.dtype)
+        out = out + jax.lax.stop_gradient(
+            jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"wo": param(ks[2], (d_ff, d_model), ("ff", "embed"), dtype)}
+    if act == "swiglu":
+        p["wi"] = param(ks[0], (d_model, d_ff), ("embed", "ff"), dtype)
+        p["wg"] = param(ks[1], (d_model, d_ff), ("embed", "ff"), dtype)
+    else:
+        p["wi"] = param(ks[0], (d_model, d_ff), ("embed", "ff"), dtype)
+    return p
+
+
+def apply_mlp(params, x, act: str, ctx: CiMContext):
+    if act == "swiglu":
+        h = jax.nn.silu(cim_linear(x, params["wi"], ctx, "mlp_wi"))
+        g = cim_linear(x, params["wg"], ctx, "mlp_wg")
+        h = h * g
+    else:
+        h = jax.nn.gelu(cim_linear(x, params["wi"], ctx, "mlp_wi"))
+    return cim_linear(h, params["wo"], ctx, "mlp_wo")

@@ -1,0 +1,149 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Faithful structure: low-rank KV compression (c_kv, rank
+`kv_lora_rank`), optional low-rank Q compression (`q_lora_rank`, V3),
+decoupled RoPE (per-head rotary part for q, a single shared rotary key),
+separate nope/rope head dims and an independent value head dim.
+
+Decode uses the *absorbed* formulation: q_nope is folded through W_uk
+into the latent space so the cache stays (B, T, kv_lora + rope) and no
+per-step re-expansion of 32k cached keys is needed — the standard MLA
+serving optimization, and the reason MLA's long_context memory term is
+~9x smaller than GQA at equal layer count (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (CiMContext, Param, apply_rope, cim_linear, init_norm,
+                     param, rms_norm, rope_tables)
+from .config import MLAConfig
+
+NEG_INF = -1e30
+
+
+def init_mla(key, d_model: int, n_heads: int, mla: MLAConfig,
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 10)
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    p = {}
+    if mla.q_lora_rank:
+        p["wdq"] = param(ks[0], (d_model, mla.q_lora_rank), ("embed", None), dtype)
+        p["q_norm"] = init_norm(ks[1], mla.q_lora_rank, "rmsnorm")
+        p["wuq"] = param(ks[2], (mla.q_lora_rank, n_heads * qk_head),
+                         (None, "heads"), dtype)
+    else:
+        p["wq"] = param(ks[2], (d_model, n_heads * qk_head),
+                        ("embed", "heads"), dtype)
+    p["wdkv"] = param(ks[3], (d_model, mla.kv_lora_rank), ("embed", None), dtype)
+    p["kv_norm"] = init_norm(ks[4], mla.kv_lora_rank, "rmsnorm")
+    p["wkr"] = param(ks[5], (d_model, mla.qk_rope_head_dim), ("embed", None), dtype)
+    p["wuk"] = param(ks[6], (mla.kv_lora_rank, n_heads * mla.qk_nope_head_dim),
+                     (None, "heads"), dtype)
+    p["wuv"] = param(ks[7], (mla.kv_lora_rank, n_heads * mla.v_head_dim),
+                     (None, "heads"), dtype)
+    p["wo"] = param(ks[8], (n_heads * mla.v_head_dim, d_model),
+                    ("heads", "embed"), dtype)
+    return p
+
+
+def _queries(params, x, n_heads, mla: MLAConfig, ctx, rope):
+    b, s, _ = x.shape
+    qk_head = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    if mla.q_lora_rank:
+        cq = cim_linear(x, params["wdq"], ctx, "wdq")
+        cq = rms_norm(cq, params["q_norm"]["scale"].value)
+        q = cim_linear(cq, params["wuq"], ctx, "wuq")
+    else:
+        q = cim_linear(x, params["wq"], ctx, "wq")
+    q = q.reshape(b, s, n_heads, qk_head)
+    q_nope = q[..., :mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim:], rope)
+    return q_nope, q_rope
+
+
+def mla_block(params, x, *, n_heads: int, mla: MLAConfig, ctx: CiMContext,
+              rope_theta: float, q_chunk: int = 1024,
+              positions=None, cache: Optional[dict] = None):
+    """Returns (y, new_cache). Cache = {"ckv": (B,T,R), "kr": (B,T,Dr),
+    "pos"} — the compressed latent is all that is stored."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    rope = rope_tables(positions, mla.qk_rope_head_dim, 1.0, rope_theta)
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    scale = 1.0 / ((dn + dr) ** 0.5)
+
+    q_nope, q_rope = _queries(params, x, n_heads, mla, ctx, rope)
+    ckv = cim_linear(x, params["wdkv"], ctx, "wdkv")         # (b,s,R)
+    ckv = rms_norm(ckv, params["kv_norm"]["scale"].value)
+    kr = cim_linear(x, params["wkr"], ctx, "wkr")            # (b,s,Dr)
+    kr = apply_rope(kr[:, :, None, :], rope)[:, :, 0]        # shared rope key
+
+    if cache is None or s > 1:
+        # training / prefill: expand latents to per-head keys and values,
+        # attend with the blockwise online-softmax core (O(chunk^2) memory)
+        from .attention import _chunked_attn
+
+        k_nope = cim_linear(ckv, params["wuk"], ctx, "wuk").reshape(
+            b, s, n_heads, dn)
+        v = cim_linear(ckv, params["wuv"], ctx, "wuv").reshape(
+            b, s, n_heads, dv)
+        q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_eff = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, s, n_heads, dr))],
+            axis=-1)
+        o = _chunked_attn(q_eff, k_eff, v, q_chunk, q_chunk, causal=True,
+                          window=None, q_offset=0, kv_len_valid=s)
+        y = cim_linear(o.reshape(b, s, n_heads * dv).astype(x.dtype),
+                       params["wo"], ctx, "wo")
+        new_cache = None
+        if cache is not None:
+            c_ckv = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+            c_kr = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0))
+            new_cache = {"ckv": c_ckv, "kr": c_kr, "pos": jnp.int32(s)}
+        return y, new_cache
+
+    # absorbed decode: scores live in latent space; all cache-sized math
+    # stays bf16 with f32 accumulation (an f32 cast of the 32k latent
+    # cache would materialize + re-gather it every step, see
+    # attention.py decode path / EXPERIMENTS.md §Perf)
+    from .common import wsc
+
+    pos = cache["pos"]
+    c_ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+    c_kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))
+    r = c_ckv.shape[-1]
+    wuk = params["wuk"].value.reshape(r, n_heads, dn)
+    # q~ = q_nope @ W_uk^T : (b,1,h,R)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(wuk.dtype), wuk)
+    s_lat = jnp.einsum("bqhr,btr->bhqt", q_lat.astype(c_ckv.dtype), c_ckv)
+    s_rope = jnp.einsum("bqhd,btd->bhqt", q_rope.astype(c_kr.dtype), c_kr)
+    logits = (s_lat.astype(jnp.float32) + s_rope.astype(jnp.float32)) * scale
+    valid = jnp.arange(c_ckv.shape[1]) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(c_ckv.dtype)
+    # o_latent = p @ ckv, then expand through W_uv
+    o_lat = jnp.einsum("bhqt,btr->bqhr", p, c_ckv)
+    wuv = params["wuv"].value.reshape(r, n_heads, dv)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(wuv.dtype), wuv)
+    y = cim_linear(o.reshape(b, 1, n_heads * dv).astype(x.dtype),
+                   params["wo"], ctx, "wo")
+    return y, {"ckv": c_ckv, "kr": c_kr, "pos": pos + 1}
+
+
+def init_mla_cache(batch: int, max_len: int, mla: MLAConfig,
+                   dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, mla.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, mla.qk_rope_head_dim), dtype),
+        "pos": jnp.int32(0),
+    }

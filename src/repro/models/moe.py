@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2-Lite / V3 style).
+
+Token-choice top-k routing with a capacity bound, expressed as a
+scatter/gather dispatch so it runs as sharded dense math under GSPMD:
+
+  1. router scores (softmax, or V3's sigmoid with score normalization),
+  2. top-k experts per token, intra-expert rank via a one-hot cumsum,
+  3. tokens scatter into an (E, C, d) buffer (capacity C bounds the
+     all-to-all volume; overflow tokens drop, underflow slots are zero),
+  4. batched expert SwiGLU on the (E, C, d) buffer — experts shard on
+     the `model`/`expert` logical axis (expert parallelism),
+  5. gathered combine weighted by the gate values, plus shared experts.
+
+Load-balancing auxiliary loss is the standard mean(f_i * P_i) * E.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import CiMContext, cim_einsum, cim_linear, param
+from .config import MoEConfig
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, act: str,
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    e, dff = moe.n_routed, moe.d_expert
+    p = {
+        "router": param(ks[0], (d_model, e), ("embed", None), jnp.float32,
+                        scale=0.006),
+        "wi": param(ks[1], (e, d_model, dff), ("expert", "embed", None), dtype),
+        "wg": param(ks[2], (e, d_model, dff), ("expert", "embed", None), dtype),
+        "wo": param(ks[3], (e, dff, d_model), ("expert", None, "embed"), dtype),
+    }
+    if moe.n_shared:
+        sff = moe.d_expert * moe.n_shared
+        p["shared_wi"] = param(ks[4], (d_model, sff), ("embed", "ff"), dtype)
+        p["shared_wg"] = param(ks[4], (d_model, sff), ("embed", "ff"), dtype)
+        p["shared_wo"] = param(ks[5], (sff, d_model), ("ff", "embed"), dtype)
+    return p
+
+
+def _route(params, xf, moe: MoEConfig):
+    """Returns (weights (T,k), expert_ids (T,k), aux_loss).
+
+    xf stays bf16: upcasting the (T, d) routing input materializes an
+    f32 activation copy whose AD cotangent all-reduces in f32
+    (EXPERIMENTS.md §Perf it.4) — the dot accumulates in f32 instead."""
+    from .common import fsdp_gather
+
+    router = fsdp_gather(params["router"]).astype(xf.dtype)
+    logits = jax.lax.dot(xf, router,
+                         preferred_element_type=jnp.float32)  # (T, E) f32
+    if moe.router == "sigmoid":                             # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+        w, ids = jax.lax.top_k(scores, moe.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, moe.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    w = w * moe.route_scale
+    # load-balance aux: E * mean_e(frac_tokens_e * mean_prob_e)
+    e = moe.n_routed
+    sel = jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(1)  # (T, E)
+    f = sel.mean(0)
+    pbar = probs.mean(0)
+    aux = e * jnp.sum(f * pbar) * moe.aux_loss_coef
+    return w, ids, aux
+
+
+def moe_block(params, x, *, moe: MoEConfig, act: str,
+              ctx: CiMContext) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, ids, aux = _route(params, xf, moe)
+
+    e, k = moe.n_routed, moe.top_k
+    cap = int(moe.capacity_factor * t * k / e)
+    cap = max(cap, 4)
+
+    # intra-expert ranks, computed block-locally: a single global cumsum
+    # over (T*k, E) forces GSPMD to all-gather the one-hot across the
+    # batch shards (~1 TB/device at 671B, EXPERIMENTS.md §Perf it.4);
+    # per-block ranks with per-block capacity slices are the standard
+    # "local capacity" dispatch and need no cross-shard sequencing.
+    flat_ids = ids.reshape(-1)                               # (T*k,)
+    n = t * k
+    nb = 16 if (n % 16 == 0 and cap >= 64) else 1
+    cap_b = cap // nb
+    fb = flat_ids.reshape(nb, n // nb)
+    onehot = jax.nn.one_hot(fb, e, dtype=jnp.int32)          # (nb, L, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                     # rank in block
+    my_pos = jnp.take_along_axis(pos, fb[..., None], 2)[..., 0]
+    keep_b = my_pos < cap_b
+    slot = my_pos + jnp.arange(nb, dtype=my_pos.dtype)[:, None] * cap_b
+    keep = keep_b.reshape(-1)
+    safe_pos = jnp.where(keep, slot.reshape(-1), cap_b * nb - 1)
+    cap = cap_b * nb
+
+    # dispatch: (E, C, d) buffer — experts shard on `model` (GSPMD keeps
+    # capacity/d local; constraining capacity onto the data axis was
+    # measured WORSE — it forces a replicated scatter intermediate, see
+    # EXPERIMENTS.md §Perf)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(xf, k, axis=0)                          # (T*k, d)
+    buf = buf.at[flat_ids, safe_pos].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype))
+
+    # expert FFN (batched over E; shards on the expert axis).
+    # CiM noise is NOT drawn per expert buffer: two (E, C, d)-sized
+    # normal draws were 33% of this cell's HBM bytes (EXPERIMENTS.md
+    # §Perf it.1) — instead one statistically-equivalent draw is applied
+    # post-combine below.
+    ctx_q = CiMContext(ctx.p, None)
+    h = jax.nn.silu(cim_einsum("ecd,edf->ecf", buf, params["wi"], ctx_q,
+                               "moe_wi")).astype(x.dtype)
+    if act == "swiglu":
+        h = h * cim_einsum("ecd,edf->ecf", buf, params["wg"], ctx_q,
+                           "moe_wg").astype(x.dtype)
+    out_buf = cim_einsum("ecf,efd->ecd", h, params["wo"], ctx_q,
+                         "moe_wo").astype(x.dtype)
+
+    # combine
+    gathered = out_buf[flat_ids, safe_pos]                   # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    wk = w.reshape(-1)[:, None].astype(gathered.dtype)
+    y = (gathered * wk).reshape(t, k, d).sum(axis=1)
+
+    # post-combine equivalent CiM noise: the combine sums top-k expert
+    # outputs with weights w_k, so per-matmul iid noise of variance V
+    # aggregates to V * sum_k w_k^2 on the combined token — one (T, d)
+    # draw replaces two (E, C, *) draws (same first two moments)
+    p_ = ctx.p
+    if (ctx.key is not None
+            and p_.mode in ("surrogate", "surrogate_fast")
+            and (p_.c0 > 0.0 or p_.c1 > 0.0)
+            and p_.selects("moe_wo")):
+        import jax.lax as lax
+
+        from repro.core.quantization import quant_scale
+
+        s_in = quant_scale(lax.stop_gradient(xf), p_.bits)
+        s_w = quant_scale(lax.stop_gradient(params["wo"].value), p_.bits)
+        var1 = ((p_.c0 + p_.c1 * 0.5 * 127.0 ** 2) * moe.d_expert
+                * (s_in * s_w).astype(jnp.float32) ** 2)
+        w2 = (w.astype(jnp.float32) ** 2).sum(-1).reshape(t, 1)
+        from .common import surrogate_noise
+
+        eps = surrogate_noise(ctx.child("moe_noise").key, (t, d), y.dtype)
+        y = y + lax.stop_gradient(
+            jnp.sqrt(var1 * w2).astype(y.dtype) * eps)
+
+    if "shared_wi" in params:
+        h = jax.nn.silu(cim_linear(xf, params["shared_wi"], ctx, "shared_wi"))
+        if act == "swiglu":
+            h = h * cim_linear(xf, params["shared_wg"], ctx, "shared_wg")
+        y = y + cim_linear(h, params["shared_wo"], ctx, "shared_wo")
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

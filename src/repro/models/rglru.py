@@ -1,0 +1,111 @@
+"""RecurrentGemma's recurrent block: temporal conv + RG-LRU.
+
+Block (Griffin/RecurrentGemma): two parallel branches from the
+normalized input — (i) linear -> GeLU gate branch, (ii) linear ->
+causal temporal Conv1D(width 4) -> RG-LRU; merged by elementwise
+product and projected back.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill run the linear recurrence with an associative scan
+(O(log S) depth); decode keeps (h, conv window) as O(1) state — which is
+why this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import CiMContext, cim_linear, param
+
+_C = 8.0  # RG-LRU stability constant (Griffin)
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int,
+               dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    w = width or d_model
+    return {
+        "w_gate": param(ks[0], (d_model, w), ("embed", "ff"), dtype),
+        "w_rnn_in": param(ks[1], (d_model, w), ("embed", "ff"), dtype),
+        "conv_w": param(ks[2], (conv_width, w), (None, "ff"), dtype,
+                        scale=0.1),
+        "conv_b": param(ks[3], (w,), ("ff",), dtype, init="zeros"),
+        "wa": param(ks[4], (w, w), ("ff", None), dtype, scale=0.01),
+        "ba": param(ks[5], (w,), (None,), jnp.float32, init="zeros"),
+        "wx": param(ks[6], (w, w), ("ff", None), dtype, scale=0.01),
+        "bx": param(ks[6], (w,), (None,), jnp.float32, init="zeros"),
+        "lam": param(ks[7], (w,), (None,), jnp.float32, init="ones"),
+        "w_out": param(ks[7], (w, d_model), ("ff", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray]):
+    """x: (B,S,W); w: (CW,W) depthwise. state: (B,CW-1,W) trailing inputs."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = xp[:, -(cw - 1):]
+    return out, new_state
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ params["wa"].value.astype(jnp.float32)
+                       + params["ba"].value)
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ params["wx"].value.astype(jnp.float32)
+                       + params["bx"].value)
+    log_a = -_C * jax.nn.softplus(params["lam"].value) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block(params, x, *, ctx: CiMContext,
+                cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d). cache: {"h": (B,W), "conv": (B,CW-1,W), "pos"}."""
+    gate = jax.nn.gelu(cim_linear(x, params["w_gate"], ctx, "w_gate"))
+    u = cim_linear(x, params["w_rnn_in"], ctx, "w_rnn_in")
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = _causal_conv(u, params["conv_w"].value,
+                               params["conv_b"].value, conv_state)
+    a, gated = _gates(params, u)
+
+    if cache is None or x.shape[1] > 1:
+        h0 = None if cache is None else cache["h"]
+        # associative linear recurrence h_t = a_t h_{t-1} + b_t
+        b_ = gated
+        if h0 is not None:
+            b_ = b_.at[:, 0].add(a[:, 0] * h0.astype(a.dtype))
+        aa, bb = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]),
+            (a, b_), axis=1)
+        h = bb
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": h[:, -1], "conv": new_conv,
+                         "pos": jnp.int32(x.shape[1])}
+        y = h.astype(x.dtype)
+    else:
+        h = a[:, 0] * cache["h"].astype(a.dtype) + gated[:, 0]
+        y = h[:, None].astype(x.dtype)
+        new_cache = {"h": h, "conv": new_conv, "pos": cache["pos"] + 1}
+
+    y = y * gate
+    return cim_linear(y, params["w_out"], ctx, "w_out"), new_cache
+
+
+def init_rglru_cache(batch: int, width: int, conv_width: int):
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, width), jnp.bfloat16),
+            "pos": jnp.int32(0)}

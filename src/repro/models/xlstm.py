@@ -1,0 +1,246 @@
+"""xLSTM blocks: matrix-memory mLSTM (chunkwise-parallel) and
+scalar-memory sLSTM (inherently sequential), per arXiv:2405.04517.
+
+mLSTM cell (per head, exponential input gating, stabilizer m):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (dk x dv matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+
+Training/prefill use the chunkwise form: an O(L^2) intra-chunk
+attention-like term plus an O(T/L) inter-chunk recurrence carried by
+`lax.scan`, all in stabilized log-gate space.  Stored state follows the
+convention  C_true = C * exp(m)  so magnitudes stay bounded.
+
+sLSTM keeps per-head scalar memories with recurrent (block-diagonal)
+weights — it cannot be parallelized over time (that is its design
+point), so it runs as a `lax.scan` over steps.
+
+Both carry O(1) decode state, which is why xlstm runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import CiMContext, cim_linear, param, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    di = 2 * d_model                        # up-projection factor 2
+    return {
+        "w_up": param(ks[0], (d_model, 2 * di), ("embed", "ff"), dtype),
+        "wq": param(ks[1], (di, di), ("ff", None), dtype),
+        "wk": param(ks[2], (di, di), ("ff", None), dtype),
+        "wv": param(ks[3], (di, di), ("ff", None), dtype),
+        "wi": param(ks[4], (di, n_heads), ("ff", None), jnp.float32, scale=0.01),
+        "bi": param(ks[4], (n_heads,), (None,), jnp.float32, init="zeros"),
+        "wf": param(ks[5], (di, n_heads), ("ff", None), jnp.float32, scale=0.01),
+        "bf": param(ks[5], (n_heads,), (None,), jnp.float32, init="ones"),
+        "gn": param(ks[6], (di,), (None,), init="ones"),
+        "w_down": param(ks[7], (di, d_model), ("ff", "embed"), dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, state, chunk: int):
+    """q,k,v: (B,T,nh,dk) f32; li/lf: (B,T,nh) log gates.
+    state: (C (B,nh,dk,dv), n (B,nh,dk), m (B,nh)). Returns (h, state)."""
+    b, t, nh, dk = q.shape
+    dv = v.shape[-1]
+    l = min(chunk, t)
+    while t % l:
+        l -= 1
+    nchunk = t // l
+    qs = q.reshape(b, nchunk, l, nh, dk).transpose(1, 0, 3, 2, 4)
+    ks_ = k.reshape(b, nchunk, l, nh, dk).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nchunk, l, nh, dv).transpose(1, 0, 3, 2, 4)
+    lis = li.reshape(b, nchunk, l, nh).transpose(1, 0, 3, 2)
+    lfs = lf.reshape(b, nchunk, l, nh).transpose(1, 0, 3, 2)
+
+    def step(carry, xs):
+        c, n, m = carry                     # (b,nh,dk,dv), (b,nh,dk), (b,nh)
+        qc, kc, vc, lic, lfc = xs           # (b,nh,l,*)
+        bcum = jnp.cumsum(lfc, axis=-1)     # (b,nh,l) inclusive
+        g = bcum + m[..., None]             # state weight (log)
+        d = (bcum[..., :, None] - bcum[..., None, :] + lic[..., None, :])
+        lmask = jnp.tril(jnp.ones((l, l), bool))
+        d = jnp.where(lmask, d, -jnp.inf)
+        m_r = jnp.maximum(g, d.max(axis=-1))          # (b,nh,l)
+        sc = jnp.einsum("bhld,bhsd->bhls", qc, kc)
+        wexp = jnp.exp(d - m_r[..., None])
+        w_intra = wexp * sc
+        w_state = jnp.exp(g - m_r)                     # (b,nh,l)
+        h_num = (jnp.einsum("bhls,bhsv->bhlv", w_intra, vc)
+                 + w_state[..., None] * jnp.einsum("bhld,bhdv->bhlv", qc, c))
+        den = (jnp.einsum("bhls,bhls->bhl", wexp, sc)
+               + w_state * jnp.einsum("bhld,bhd->bhl", qc, n))
+        h = h_num / jnp.maximum(jnp.abs(den), jnp.exp(-m_r))[..., None]
+        # end-of-chunk state
+        b_l = bcum[..., -1:]                           # (b,nh,1)
+        m_new = jnp.maximum(b_l[..., 0] + m,
+                            (b_l - bcum + lic).max(axis=-1))
+        w_c = jnp.exp(b_l - bcum + lic - m_new[..., None])   # (b,nh,l)
+        c_new = (jnp.exp(b_l[..., 0] + m - m_new)[..., None, None] * c
+                 + jnp.einsum("bhs,bhsd,bhsv->bhdv", w_c, kc, vc))
+        n_new = (jnp.exp(b_l[..., 0] + m - m_new)[..., None] * n
+                 + jnp.einsum("bhs,bhsd->bhd", w_c, kc))
+        return (c_new, n_new, m_new), h
+
+    xs = (qs, ks_, vs, lis, lfs)
+    state, hs = jax.lax.scan(step, state, xs)
+    # hs: (nchunk, b, nh, l, dv) -> (b, t, nh, dv)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, t, nh, dv)
+    return h, state
+
+
+def _mlstm_step(q, k, v, li, lf, state):
+    """Single-token decode. q,k,v: (B,nh,dk)."""
+    c, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw[..., None, None] * c + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fw[..., None] * n + iw[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (c, n, m_new)
+
+
+def mlstm_block(params, x, *, n_heads: int, chunk: int, ctx: CiMContext,
+                cache: Optional[dict] = None):
+    b, s, d = x.shape
+    di = params["wq"].value.shape[0]
+    dk = di // n_heads
+    up = cim_linear(x, params["w_up"], ctx, "w_up")
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = cim_linear(xm, params["wq"], ctx, "wq").astype(jnp.float32)
+    k = cim_linear(xm, params["wk"], ctx, "wk").astype(jnp.float32)
+    v = cim_linear(xm, params["wv"], ctx, "wv").astype(jnp.float32)
+    li = (xm.astype(jnp.float32) @ params["wi"].value + params["bi"].value)
+    lf = jax.nn.log_sigmoid(
+        xm.astype(jnp.float32) @ params["wf"].value + params["bf"].value)
+    q = q.reshape(b, s, n_heads, dk)
+    k = k.reshape(b, s, n_heads, dk) * (dk ** -0.5)   # write-time key scale
+    v = v.reshape(b, s, n_heads, dk)
+
+    if cache is None or s > 1:
+        if cache is None:
+            state = (jnp.zeros((b, n_heads, dk, dk), jnp.float32),
+                     jnp.zeros((b, n_heads, dk), jnp.float32),
+                     jnp.zeros((b, n_heads), jnp.float32))
+        else:
+            state = (cache["c"], cache["n"], cache["m"])
+        h, state = _mlstm_chunk_scan(q, k, v, li, lf, state, chunk)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                         "pos": jnp.int32(s)}
+    else:
+        state = (cache["c"], cache["n"], cache["m"])
+        h, state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0],
+                               state)
+        h = h[:, None]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                     "pos": cache["pos"] + 1}
+    h = h.reshape(b, s, di)
+    h = rms_norm(h, params["gn"].value)          # group-norm stand-in
+    h = h.astype(x.dtype) * jax.nn.silu(z)
+    return cim_linear(h, params["w_down"], ctx, "w_down"), new_cache
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int):
+    di = 2 * d_model
+    dk = di // n_heads
+    return {"c": jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dk), jnp.float32),
+            "m": jnp.zeros((batch, n_heads), jnp.float32),
+            "pos": jnp.int32(0)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    dh = d_model // n_heads
+    return {
+        "w_in": param(ks[0], (d_model, 4 * d_model), ("embed", "ff"), dtype),
+        "r": param(ks[1], (n_heads, dh, 4 * dh), (None, None, None),
+                   jnp.float32, scale=0.01),
+        "b": param(ks[2], (4 * d_model,), (None,), jnp.float32, init="zeros"),
+        "gn": param(ks[3], (d_model,), (None,), init="ones"),
+        "w_out": param(ks[4], (d_model, d_model), ("embed", "embed"), dtype),
+    }
+
+
+def _slstm_cell(params, u_t, state, n_heads):
+    """u_t: (B, 4*d) pre-activations from the input; recurrent term added
+    here.  state: (c, n, h, m) each (B, nh, dh)."""
+    c, n, h, m = state
+    b = u_t.shape[0]
+    d = h.shape[-1] * n_heads
+    dh = h.shape[-1]
+    rec = jnp.einsum("bkd,kdf->bkf", h, params["r"].value)   # (B,nh,4dh)
+    pre = u_t.reshape(b, n_heads, 4 * dh) + rec + \
+        params["b"].value.reshape(n_heads, 4 * dh)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    li = ii                                   # exp input gate (log space)
+    lf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(lf + m, li)
+    iw = jnp.exp(li - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(params, x, *, n_heads: int, ctx: CiMContext,
+                cache: Optional[dict] = None):
+    b, s, d = x.shape
+    dh = d // n_heads
+    u = cim_linear(x, params["w_in"], ctx, "w_in").astype(jnp.float32)
+
+    if cache is None:
+        state = tuple(jnp.zeros((b, n_heads, dh), jnp.float32)
+                      for _ in range(4))
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    if s > 1 or cache is None:
+        def step(st, u_t):
+            st = _slstm_cell(params, u_t, st, n_heads)
+            return st, st[2]
+        state, hs = jax.lax.scan(step, state, u.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    else:
+        state = _slstm_cell(params, u[:, 0], state, n_heads)
+        h = state[2].reshape(b, 1, d)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                     "m": state[3],
+                     "pos": (cache["pos"] + s)}
+    h = rms_norm(h.astype(x.dtype), params["gn"].value)
+    return cim_linear(h, params["w_out"], ctx, "w_out"), new_cache
+
+
+def init_slstm_cache(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    z = lambda: jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z(), "pos": jnp.int32(0)}

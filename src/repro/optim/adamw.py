@@ -1,0 +1,198 @@
+"""AdamW with optional int8 block-quantized moments (optimizer-state
+compression — the trick that fits 671B training into 256 x 16 GB).
+
+States per weight: m, v.  With ``state_bits=8`` each is stored as int8
+codes + one f32 scale per block of 256 elements (~1.03 bytes/param
+instead of 4), dequantized/requantized inside the update — the standard
+8-bit-Adam blockwise scheme, in plain JAX.  ``state_bits=32`` keeps f32
+moments (exact baseline; used by the small-model examples/tests).
+
+The update math runs in f32; params may live in bf16 (master-weight-free
+training with optional stochastic rounding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 8          # 8 (blockwise int8) or 32 (f32)
+    stochastic_round: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def _q_enc(x32, signed: bool):
+    """Blockwise int8 encode along the LAST axis.
+
+    Codes keep the parameter's exact shape (so they inherit the
+    parameter's sharding verbatim — no GSPMD resharding in the update);
+    scales get shape (..., n_blocks)."""
+    shape = x32.shape
+    assert shape, "0-d params not supported by the int8 optimizer"
+    last = shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x32, [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    nb = (last + pad) // BLOCK
+    xb = xp.reshape(shape[:-1] + (nb, BLOCK))
+    s = jnp.max(jnp.abs(xb), axis=-1) / 127.0          # (..., nb)
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(xb / s[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(shape[:-1] + (last + pad,))[..., :last]
+    return q, s.astype(jnp.float32)
+
+
+def _q_dec(q, s, shape):
+    last = shape[-1]
+    pad = (-last) % BLOCK
+    nb = (last + pad) // BLOCK
+    qp = jnp.pad(q, [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    xb = qp.reshape(shape[:-1] + (nb, BLOCK)).astype(jnp.float32)
+    x = xb * s[..., None]
+    return x.reshape(shape[:-1] + (last + pad,))[..., :last]
+
+
+def _zeros_state(p, bits: int):
+    if bits == 32:
+        return jnp.zeros(p.shape, jnp.float32)
+    shape = p.shape
+    nb = -(-shape[-1] // BLOCK)
+    return {"q": jnp.zeros(shape, jnp.int8),
+            "s": jnp.zeros(shape[:-1] + (nb,), jnp.float32)}
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: _zeros_state(p, cfg.state_bits)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig,
+                  rng: Optional[jax.Array] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+
+    def leaf_update(p, g, m_in, v_in, key):
+        g32 = g.astype(jnp.float32) * clip
+        if cfg.state_bits == 32:
+            m32, v32 = m_in, v_in
+        else:
+            # v is stored as int8 codes of sqrt(v): linear int8 on raw v
+            # zeroes out small entries and m/(sqrt(0)+eps) explodes
+            m32 = _q_dec(m_in["q"], m_in["s"], p.shape)
+            v32 = _q_dec(v_in["q"], v_in["s"], p.shape) ** 2
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        # residual-quantization safety: Adam updates are O(1); clip the
+        # tail that int8 state error can inflate
+        upd = jnp.clip(upd, -4.0, 4.0)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (upd + cfg.weight_decay * p32)
+        if p.dtype == jnp.bfloat16 and cfg.stochastic_round and key is not None:
+            noise = jax.random.uniform(key, p.shape, jnp.float32, -0.5, 0.5)
+            p_new = (p32 + noise * jnp.finfo(jnp.bfloat16).eps
+                     * jnp.abs(p32)).astype(p.dtype)
+        else:
+            p_new = p32.astype(p.dtype)
+        if cfg.state_bits == 32:
+            return p_new, m32, v32
+        qm, sm = _q_enc(m32, True)
+        qv, sv = _q_enc(jnp.sqrt(v32), False)
+        return p_new, {"q": qm, "s": sm}, {"q": qv, "s": sv}
+
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g) in enumerate(zip(flat_p, flat_g)):
+        key = jax.random.fold_in(rng, i) if rng is not None else None
+        if p.ndim >= 3 and p.shape[0] >= 4 and p.size >= (1 << 22):
+            # stacked-layer leaf: scan the update over the layer axis so
+            # only ONE layer's f32 moments are live at a time (without
+            # this, a 671B model's dequantized f32 m/v/upd tensors for
+            # every stacked leaf coexist -> ~100 GB/device of temps)
+            def body(_, xs):
+                ps, gs, ms, vs = xs
+                return None, leaf_update(ps, gs, ms, vs, key)
+
+            _, (p_new, m_new, v_new) = jax.lax.scan(
+                body, None, (p, g, flat_m[i], flat_v[i]))
+        else:
+            p_new, m_new, v_new = leaf_update(p, g, flat_m[i], flat_v[i],
+                                              key)
+        new_p.append(p_new)
+        new_m.append(m_new)
+        new_v.append(v_new)
+
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (treedef.unflatten(new_p),
+            OptState(step, treedef.unflatten(new_m),
+                     treedef.unflatten(new_v)),
+            metrics)
+
+
+def moment_shardings(params_shape, params_shard, mesh, state_bits: int = 8):
+    """Shardings for m/v mirroring the parameters exactly: int8 codes take
+    the param's NamedSharding verbatim; blockwise scales drop the last
+    (blocked) dim's axis.  Shape-congruence means the Adam update runs
+    with ZERO resharding collectives."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.common import Param
+
+    def one(p, shd):
+        if state_bits == 32:
+            return shd
+        v = p.value
+        spec = list(shd.spec) + [None] * (v.ndim - len(shd.spec))
+        s_shd = NamedSharding(mesh, P(*(spec[:-1] + [None])))
+        # wrap like the state tree does (Param pytree node), so the
+        # sharding tree's structure matches OptState.m exactly
+        return Param({"q": shd, "s": s_shd}, p.spec)
+
+    return jax.tree_util.tree_map(one, params_shape, params_shard,
+                                  is_leaf=lambda x: isinstance(x, Param))

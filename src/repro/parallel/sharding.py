@@ -1,0 +1,127 @@
+"""Logical-axis sharding: rules mapping the model zoo's logical names
+onto the production mesh, with divisibility-aware fallback.
+
+Mesh axes (launch/mesh.py): single-pod ("data", "model") = (16, 16);
+multi-pod ("pod", "data", "model") = (2, 16, 16).
+
+Rules (DESIGN.md §5):
+  batch   -> ("pod", "data")      data parallel across pods x data rows
+  vocab/heads/ff/expert -> "model"  tensor/expert parallelism
+  embed   -> "data"               FSDP: the non-TP weight dim shards on
+                                  the data axis (ZeRO-3), gathered per
+                                  layer inside the remat'd scan
+  layers  -> None                 stacked-scan leading axis
+
+A dim that does not divide its mesh axes is replicated instead (e.g.
+qwen2.5's 40 heads on a 16-way model axis) — GSPMD correctness first;
+resharding such cases is hillclimb material (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "embed": ("data",),
+    "layers": None,
+    "seq": None,
+    None: None,
+}
+
+# Serving: no optimizer state, so ZeRO-3 storage buys nothing and its
+# per-layer all-gathers dominate a decode step's collectives — weights
+# stay TP-sharded only, replicated across the data axis
+# (EXPERIMENTS.md §Perf, llama decode iteration 1).
+DECODE_RULES = dict(DEFAULT_RULES, embed=None)
+
+
+def _axes_for(logical: Optional[str], mesh: Mesh, rules) -> Tuple[str, ...]:
+    want = rules.get(logical, None)
+    if want is None:
+        return ()
+    if isinstance(want, str):
+        want = (want,)
+    return tuple(a for a in want if a in mesh.shape)
+
+
+def logical_to_spec(spec, shape, mesh: Mesh, rules=None) -> P:
+    """Resolve a logical spec tuple to a PartitionSpec for `mesh`,
+    dropping axes whose size does not divide the dim."""
+    rules = rules or DEFAULT_RULES
+    if spec is None:
+        return P()
+    out = []
+    used = set()
+    for dim, logical in zip(shape, spec):
+        axes = _axes_for(logical, mesh, rules)
+        axes = tuple(a for a in axes if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shardings_for_tree(spec_tree, shape_tree, mesh: Mesh, rules=None):
+    """Map (logical-spec tree, shape tree) -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda sp, sh: NamedSharding(
+            mesh, logical_to_spec(sp, sh.shape if hasattr(sh, "shape") else sh,
+                                  mesh, rules)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+def param_shardings(model, params_shape, mesh: Mesh, rules=None):
+    """NamedShardings for a Param-tree of ShapeDtypeStructs (or arrays).
+
+    Works on the *boxed* tree: each Param leaf carries its logical spec.
+    """
+    from repro.models.common import Param
+
+    def one(p):
+        if isinstance(p, Param):
+            v = p.value
+            return NamedSharding(mesh, logical_to_spec(
+                p.spec, v.shape, mesh, rules))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, params_shape,
+                                  is_leaf=lambda x: isinstance(x, Param))
+
+
+def batch_sharding(mesh: Mesh, ndim: int, dim0: Optional[int] = None,
+                   rules=None) -> NamedSharding:
+    """Shard dim0 on the batch axes, replicate the rest.  If `dim0` is
+    given and does not divide the batch axes (e.g. long_500k's global
+    batch of 1), fall back to replication."""
+    rules = rules or DEFAULT_RULES
+    axes = _axes_for("batch", mesh, rules)
+    if dim0 is not None and axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim0 % size:
+            axes = ()
+    spec = P(axes if len(axes) > 1 else (axes[0] if axes else None),
+             *([None] * (ndim - 1)))
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings_for(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda x: batch_sharding(mesh, getattr(x, "ndim", len(x.shape))),
+        tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,34 @@
+"""Cache logical-spec trees must mirror the cache pytrees exactly, for
+every architecture (the dry-run's decode in_shardings depend on it)."""
+
+import jax
+import pytest
+
+from repro.configs import arch_names, get_config
+from repro.models.transformer import LM, cache_specs
+
+
+@pytest.mark.parametrize("arch", arch_names())
+def test_cache_specs_match_cache_structure(arch):
+    cfg = get_config(arch, smoke=True)
+    lm = LM(cfg)
+    caches = jax.eval_shape(lambda: lm.init_caches(2, 32))
+    specs = cache_specs(cfg)
+
+    leaves = jax.tree_util.tree_leaves(caches)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: x is None or isinstance(x, tuple))
+    assert len(leaves) == len(spec_leaves), \
+        f"{arch}: {len(leaves)} cache leaves vs {len(spec_leaves)} specs"
+    for leaf, spec in zip(leaves, spec_leaves):
+        if spec is not None:
+            assert len(spec) == leaf.ndim, \
+                f"{arch}: spec {spec} rank != leaf {leaf.shape}"
+
+
+def test_decode_rules_drop_fsdp_axis():
+    from repro.parallel.sharding import DECODE_RULES, DEFAULT_RULES
+
+    assert DEFAULT_RULES["embed"] == ("data",)
+    assert DECODE_RULES["embed"] is None
+    assert DECODE_RULES["heads"] == ("model",)

@@ -1,0 +1,65 @@
+"""Surrogate calibration: the scale-out noise model must match the
+bit-exact emulator's first two moments on real GEMMs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CiMConfig, compile_macro
+
+
+@pytest.mark.parametrize("family", ["appro42", "log_our", "mitchell"])
+def test_surrogate_moments_match_bit_exact(family):
+    mac = compile_macro(CiMConfig(family=family, bits=8))
+    errs_be, errs_sg = [], []
+    for s in range(4):
+        x = jax.random.normal(jax.random.PRNGKey(s), (96, 128))
+        w = jax.random.normal(jax.random.PRNGKey(100 + s), (128, 48))
+        exact = mac.matmul(x, w, mode="exact")
+        errs_be.append(np.asarray(mac.matmul(x, w, mode="bit_exact") - exact))
+        errs_sg.append(np.asarray(
+            mac.matmul(x, w, key=jax.random.PRNGKey(200 + s),
+                       mode="surrogate") - exact))
+    be = np.concatenate([e.ravel() for e in errs_be])
+    sg = np.concatenate([e.ravel() for e in errs_sg])
+    # means agree in absolute terms relative to the error scale
+    assert abs(be.mean() - sg.mean()) < 0.15 * max(be.std(), 1e-6)
+    # stds agree within 35% (affine variance fit, DESIGN.md §2)
+    assert 0.65 < sg.std() / be.std() < 1.45
+
+
+def test_fast_surrogate_tracks_full_surrogate():
+    mac = compile_macro(CiMConfig(family="log_our", bits=8))
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    exact = mac.matmul(x, w, mode="exact")
+    full = np.stack([np.asarray(mac.matmul(
+        x, w, key=jax.random.PRNGKey(10 + i), mode="surrogate") - exact)
+        for i in range(6)])
+    fast = np.stack([np.asarray(mac.matmul(
+        x, w, key=jax.random.PRNGKey(50 + i), mode="surrogate_fast") - exact)
+        for i in range(6)])
+    assert 0.8 < fast.std() / full.std() < 1.25
+
+
+def test_exact_macro_is_noise_free():
+    mac = compile_macro(CiMConfig(family="exact", bits=8))
+    assert mac.surrogate.is_exact
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    a = mac.matmul(x, w, key=jax.random.PRNGKey(2))
+    b = mac.matmul(x, w, mode="exact")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_ste_gradients_flow():
+    mac = compile_macro(CiMConfig(family="log_our", bits=8))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    g = jax.grad(lambda ww: mac.matmul(x, ww,
+                                       key=jax.random.PRNGKey(2)).sum())(w)
+    assert g.shape == w.shape and bool(jnp.isfinite(g).all())
+    # STE: gradient equals the exact-matmul gradient
+    ge = jax.grad(lambda ww: (x @ ww).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ge), rtol=1e-5)

@@ -1,0 +1,142 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles in kernels/ref.py (interpret mode on CPU, per DESIGN.md)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.luts import signed_product_lut
+from repro.core.multipliers import MultiplierSpec
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 16, 8), (33, 70, 17), (64, 64, 64), (128, 96, 40)]
+
+
+def _ops(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
+    return xq, wq
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("family", ["exact", "appro42", "log_our"])
+def test_lut_kernel_matches_ref(shape, family):
+    m, k, n = shape
+    xq, wq = _ops(m, k, n)
+    spec = MultiplierSpec(family, 8, signed=True)
+    lut = jnp.asarray(signed_product_lut(spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    got = ops.approx_matmul_bit_exact(xq, wq, spec)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+def test_lut_kernel_exact_family_is_integer_matmul():
+    xq, wq = _ops(40, 30, 20)
+    spec = MultiplierSpec("exact", 8, signed=True)
+    got = ops.approx_matmul_bit_exact(xq, wq, spec)
+    want = np.asarray(xq, np.int32) @ np.asarray(wq, np.int32)
+    assert (np.asarray(got) == want).all()
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("compensated", [False, True])
+def test_mitchell_kernel_matches_ref(shape, compensated):
+    m, k, n = shape
+    xq, wq = _ops(m, k, n, seed=3)
+    want = ref.mitchell_matmul_ref(xq, wq, compensated=compensated)
+    got = ops.log_matmul(xq, wq, compensated=compensated)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+def test_mitchell_kernel_matches_core_emulator():
+    """Kernel semantics == the gate-level numpy emulator (cross-stack)."""
+    from repro.core.multipliers import multiply
+
+    rng = np.random.default_rng(7)
+    a = rng.integers(-127, 128, 256)
+    b = rng.integers(-127, 128, 256)
+    spec = MultiplierSpec("log_our", 8, signed=True)
+    core = multiply(a, b, spec)
+    k = ops.log_matmul(jnp.asarray(a[:, None], jnp.int8),
+                       jnp.asarray(b[:, None].T, jnp.int8))
+    # kernel computes full outer product; diagonal == elementwise products
+    assert (np.diag(np.asarray(k)) == core).all()
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("block", [(32, 32, 32), (128, 128, 128)])
+def test_cim_gemm_matches_ref(shape, block):
+    m, k, n = shape
+    xq, wq = _ops(m, k, n, seed=11)
+    rng = np.random.default_rng(12)
+    sx = jnp.float32(0.017)
+    sw = jnp.asarray(rng.uniform(0.005, 0.02, n).astype(np.float32))
+    eps = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    args = (xq, wq, sx, sw, eps, -0.013, 1480.0, 2.1e-4)
+    want = ref.cim_gemm_ref(*args)
+    got = ops.surrogate_gemm(*args, block=block)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_cim_gemm_core_int_dot_is_exact():
+    xq, wq = _ops(50, 129, 31, seed=5)
+    d, sq = ops.cim_gemm_core(xq, wq, need_sq=True, interpret=True)
+    want = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    assert (np.asarray(d, np.int64) == want).all()
+    want_sq = (np.asarray(xq, np.float64) ** 2) @ (np.asarray(wq, np.float64) ** 2)
+    np.testing.assert_allclose(np.asarray(sq), want_sq, rtol=1e-5)
+
+
+def test_kernel_dtype_sweep_int8_vs_int32_operands():
+    """LUT kernel accepts wider operand dtypes carrying int8 values."""
+    xq, wq = _ops(16, 32, 8)
+    spec = MultiplierSpec("appro42", 8, signed=True)
+    got8 = ops.approx_matmul_bit_exact(xq, wq, spec)
+    got32 = ops.approx_matmul_bit_exact(xq.astype(jnp.int32),
+                                        wq.astype(jnp.int32), spec)
+    assert (np.asarray(got8) == np.asarray(got32)).all()
+
+
+@pytest.mark.parametrize("t,block_t", [(16, 4), (32, 8), (64, 64), (48, 13)])
+def test_slstm_scan_kernel_matches_ref(t, block_t):
+    from repro.kernels.ref import slstm_scan_ref
+    from repro.kernels.slstm_scan import slstm_scan
+
+    b, nh, dh = 2, 2, 8
+    keys = jax.random.split(jax.random.PRNGKey(t), 3)
+    u = jax.random.normal(keys[0], (b, t, 4 * nh * dh))
+    r = jax.random.normal(keys[1], (nh, dh, 4 * dh)) * 0.05
+    bias = jax.random.normal(keys[2], (nh, 4 * dh)) * 0.1
+    want = slstm_scan_ref(u, r, bias, nh)
+    got = slstm_scan(u, r, bias, nh, block_t=block_t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_slstm_scan_kernel_matches_model_cell():
+    """Kernel semantics == the model's sLSTM block cell (cross-stack)."""
+    from repro.kernels.slstm_scan import slstm_scan
+    from repro.models.xlstm import _slstm_cell
+
+    b, t, nh, dh = 1, 12, 2, 4
+    d = nh * dh
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    u = jax.random.normal(keys[0], (b, t, 4 * d))
+    r = jax.random.normal(keys[1], (nh, dh, 4 * dh)) * 0.05
+    bias = jax.random.normal(keys[2], (nh, 4 * dh)) * 0.1
+    params = {"r": type("P", (), {"value": r})(),
+              "b": type("P", (), {"value": bias.reshape(-1)})()}
+    state = tuple(jnp.zeros((b, nh, dh)) for _ in range(4))
+    hs = []
+    for i in range(t):
+        # _slstm_cell reshapes u_t to (b, nh, 4dh); our u is laid out
+        # head-major already
+        state = _slstm_cell(params, u[:, i], state, nh)
+        hs.append(state[2])
+    want = jnp.stack(hs, axis=1)
+    got = slstm_scan(u, r, bias, nh, block_t=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

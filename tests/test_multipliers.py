@@ -1,0 +1,165 @@
+"""Multiplier-emulation correctness: exhaustive, spot and property-based."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import (available_compressors,
+                                    compressor_error_profile,
+                                    get_compressor, truth_table_compressor)
+from repro.core.error_model import characterize
+from repro.core.multipliers import (MultiplierSpec, multiply,
+                                    multiply_unsigned)
+
+
+def _grid(bits):
+    n = 1 << bits
+    a, b = np.meshgrid(np.arange(n, dtype=np.int64),
+                       np.arange(n, dtype=np.int64), indexing="ij")
+    return a.ravel(), b.ravel()
+
+
+# ---------------------------------------------------------------- exact ----
+
+def test_exact_8bit_exhaustive():
+    a, b = _grid(8)
+    p = multiply_unsigned(a, b, MultiplierSpec("exact", 8))
+    assert (p == a * b).all()
+
+
+@pytest.mark.parametrize("bits", [4, 6, 12, 16])
+def test_exact_other_widths_sampled(bits):
+    rng = np.random.default_rng(bits)
+    a = rng.integers(0, 1 << bits, 500)
+    b = rng.integers(0, 1 << bits, 500)
+    p = multiply_unsigned(a, b, MultiplierSpec("exact", bits))
+    assert (p == a * b).all()
+
+
+def test_signed_exact():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-127, 128, 2000)
+    b = rng.integers(-127, 128, 2000)
+    p = multiply(a, b, MultiplierSpec("exact", 8, signed=True))
+    assert (p == a * b).all()
+
+
+# ---------------------------------------------------------------- bounds ---
+
+def test_appro42_error_only_from_low_columns():
+    """Approximate cells only sit in columns < n; the value lost per cell
+    at column c is at most 2 * 2^c, so total error is bounded."""
+    a, b = _grid(8)
+    p = multiply_unsigned(a, b, MultiplierSpec("appro42", 8))
+    err = p - a * b
+    assert (err <= 0).all()                    # yang1 never overestimates
+    assert np.abs(err).max() < (1 << 10)       # well under 2^(n+2)
+
+
+def test_log_our_wce_bound():
+    """Paper Eq. after (2): rounding the larger EP operand gives
+    WCE = 3 * 4^{n-3}; exhaustive check at n=8."""
+    a, b = _grid(8)
+    p = multiply_unsigned(a, b, MultiplierSpec("log_our", 8))
+    wce = int(np.abs(p - a * b).max())
+    assert wce <= 3 * 4 ** (8 - 3)
+    assert wce == 3 * 4 ** (8 - 3)             # the bound is tight
+
+
+def test_mitchell_wce_is_full_error_part():
+    a, b = _grid(8)
+    p = multiply_unsigned(a, b, MultiplierSpec("mitchell", 8))
+    err = p - a * b
+    assert (err <= 0).all()                    # AP always underestimates
+    assert np.abs(err).max() == (2 ** 7 - 1) ** 2   # max Q1*Q2
+
+
+def test_table4_metric_ordering():
+    """Paper Table IV: NMED(appro42) < NMED(log_our) < NMED(LM)."""
+    m_a = characterize(MultiplierSpec("appro42", 8))
+    m_l = characterize(MultiplierSpec("log_our", 8))
+    m_m = characterize(MultiplierSpec("mitchell", 8))
+    assert m_a.nmed < m_l.nmed < m_m.nmed
+    assert m_l.mred < m_m.mred
+    # paper values: log_our 4.40e-3 / 1.55e-2; LM 2.79e-2 / 9.44e-2
+    assert abs(m_l.nmed - 4.4e-3) / 4.4e-3 < 0.1
+    assert abs(m_m.nmed - 2.79e-2) / 2.79e-2 < 0.1
+    assert m_a.one_sided and m_m.one_sided and not m_l.one_sided
+
+
+# ------------------------------------------------------------- property ----
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.integers(5, 10), seed=st.integers(0, 2 ** 16),
+       family=st.sampled_from(["appro42", "mitchell", "log_our"]))
+def test_property_identity_and_zero(bits, seed, family):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << bits, 64)
+    spec = MultiplierSpec(family, bits)
+    z = multiply_unsigned(a, np.zeros_like(a), spec)
+    assert (z == 0).all()
+    one = multiply_unsigned(a, np.ones_like(a), spec)
+    assert (one == a).all()                    # x*1 exact in every family
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(5, 9), seed=st.integers(0, 2 ** 16))
+def test_property_log_our_beats_mitchell_on_average(bits, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 1 << bits, 512)
+    b = rng.integers(1, 1 << bits, 512)
+    em = np.abs(multiply_unsigned(a, b, MultiplierSpec("mitchell", bits))
+                - a * b).mean()
+    el = np.abs(multiply_unsigned(a, b, MultiplierSpec("log_our", bits))
+                - a * b).mean()
+    assert el <= em
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(5, 9), seed=st.integers(0, 2 ** 16))
+def test_property_log_our_wce_scales(bits, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << bits, 2048)
+    b = rng.integers(0, 1 << bits, 2048)
+    p = multiply_unsigned(a, b, MultiplierSpec("log_our", bits))
+    assert np.abs(p - a * b).max() <= 3 * 4 ** max(bits - 3, 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_cols=st.integers(0, 12))
+def test_property_more_approx_columns_never_reduces_error(seed, n_cols):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, 512)
+    b = rng.integers(0, 256, 512)
+    e_small = np.abs(multiply_unsigned(
+        a, b, MultiplierSpec("appro42", 8, n_approx_cols=0)) - a * b).sum()
+    e_big = np.abs(multiply_unsigned(
+        a, b, MultiplierSpec("appro42", 8, n_approx_cols=n_cols)) - a * b
+    ).sum()
+    assert e_small == 0                        # 0 approx columns == exact
+
+
+# ----------------------------------------------------------- compressors ---
+
+def test_compressor_registry():
+    names = available_compressors()
+    assert {"exact", "yang1", "saturating", "momeni_or"} <= set(names)
+    prof = compressor_error_profile("exact")
+    assert prof["error_rate"] == 0.0
+    prof = compressor_error_profile("yang1")
+    assert prof["one_sided"] and prof["error_rate"] == pytest.approx(1 / 16)
+    prof = compressor_error_profile("orplane")
+    assert prof["one_sided"] and prof["error_rate"] == pytest.approx(5 / 16)
+
+
+def test_user_truth_table_compressor():
+    """OpenACM's 'tailor your own compressor' feature."""
+    table = [(min(bin(i).count("1"), 3) & 1, min(bin(i).count("1"), 3) >> 1)
+             for i in range(16)]
+    c = truth_table_compressor("user_sat", table)
+    assert not c.exact
+    a, b = _grid(8)
+    p = multiply_unsigned(a, b, MultiplierSpec("appro42", 8,
+                                               compressor="user_sat"))
+    err = p - a * b
+    assert (err <= 0).all() and np.abs(err).max() < (1 << 10)

@@ -1,0 +1,51 @@
+"""End-to-end behaviour: the OpenACM compile flow from config to
+executable macro, integrated into a model forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CiMConfig, compile_macro
+from repro.core.dse import best_under_budget
+
+
+def test_compile_macro_end_to_end():
+    m = compile_macro(CiMConfig(family="log_our", bits=8, mode="surrogate"))
+    assert m.metrics.nmed < 5e-3           # paper Table IV: 4.40e-3
+    assert m.ppa.energy_per_mac_j > 0
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    out = m.matmul(x, w, key=jax.random.PRNGKey(2))
+    assert out.shape == (8, 4) and bool(jnp.isfinite(out).all())
+
+
+def test_energy_accuracy_tradeoff_visible():
+    """The paper's core claim: approx families trade accuracy for energy."""
+    exact = compile_macro(CiMConfig(family="exact", bits=32))
+    log = compile_macro(CiMConfig(family="log_our", bits=32))
+    saving = log.ppa.saving_vs(exact.ppa)
+    assert 0.60 <= saving <= 0.70          # "reducing power by nearly 64%"
+
+
+def test_dse_selects_cheaper_design_under_loose_budget():
+    tight = best_under_budget(bits=8, max_nmed=1e-12)
+    loose = best_under_budget(bits=8, max_nmed=5e-2)
+    assert tight.spec.family == "exact"
+    assert loose.spec.family != "exact"
+    assert loose.energy_per_mac_j <= tight.energy_per_mac_j
+
+
+def test_macro_in_model_layer():
+    """The technique as a first-class model feature (DESIGN.md §4)."""
+    from repro.configs import get_config
+    from repro.models.transformer import LM
+
+    cfg = get_config("qwen3-1.7b", smoke=True,
+                     cim=CiMConfig(family="appro42", bits=8,
+                                   mode="surrogate"))
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 32)))
+    loss, _ = lm.loss_fn(params, {"tokens": toks}, jax.random.PRNGKey(1))
+    assert bool(jnp.isfinite(loss))
