@@ -1,0 +1,175 @@
+"""Per-kernel GEMM benchmark harness -> BENCH_kernels.json.
+
+Times every registered kernel of the dispatch engine
+(core/approx_gemm.py, DESIGN.md §8) on a small shape sweep and records,
+per (kernel, family, mode, shape):
+
+  * ``us_per_call``   — median wall time after a warmup (compile excluded)
+  * ``gflops``        — 2*M*K*N / t (MAC throughput; for the surrogate
+                        kernels the second A^2@B^2 contraction is NOT
+                        counted, so the number is comparable across rows)
+  * ``bytes_moved``   — ideal HBM traffic: int8 operands once + f32 out
+                        (+ the LUT for the gather kernel)
+  * ``ai_flops_byte`` — arithmetic intensity (gflops-work / bytes)
+  * ``energy_per_mac_pj`` — the compiled macro's energy model for the row's
+                        multiplier family (core/energy_model.py)
+  * ``block`` / ``backend`` / ``interpret`` — how the row actually ran
+
+Off TPU the Pallas rows run in interpret mode — the absolute numbers
+are then only a trend line (and the XLA rows the real CPU baseline),
+which is exactly what the JSON records via the ``interpret`` flag.
+Future PRs diff BENCH_kernels.json to see the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune, energy_model
+from repro.core.approx_gemm import GemmParams, cim_matmul, plan_gemm
+from repro.core.multipliers import MultiplierSpec
+from repro.kernels import ops
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_kernels.json")
+
+# (family, mode) rows exercising every registry entry reachable on this
+# backend; shapes kept modest so interpret mode stays sub-second per row
+ROWS = [
+    ("exact", "exact"),              # mxu_dot
+    ("appro42", "bit_exact"),        # jnp_lut
+    ("exact", "hardware"),           # pallas_lut_gather
+    ("appro42", "hardware"),         # pallas_lut_gather
+    ("mitchell", "hardware"),        # pallas_log
+    ("log_our", "hardware"),         # pallas_log
+    ("log_our", "surrogate"),        # xla_surrogate / pallas fused on TPU
+    ("log_our", "surrogate_fast"),   # xla_surrogate rank-1 variant
+    ("log_our", "pallas_surrogate"),  # fused kernel, forced (interpret off-TPU)
+]
+
+SHAPES = [(64, 64, 64), (128, 128, 128)]
+SHAPES_FULL = SHAPES + [(256, 256, 256)]
+
+
+def _median_time(fn, reps: int = 3) -> float:
+    jax.block_until_ready(fn())                    # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _surrogate_macro(family: str):
+    from repro.core import CiMConfig, compile_macro
+
+    return compile_macro(CiMConfig(family=family, bits=8))
+
+
+def _bench_row(family: str, mode: str, shape) -> dict:
+    m, k, n = shape
+    rng = np.random.default_rng(0)
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+
+    if mode == "pallas_surrogate":
+        # force the fused Pallas surrogate (off-TPU it would otherwise
+        # route to the XLA twin); interpret mode documents the semantics
+        xq = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
+        wq = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
+        sx = jnp.float32(0.01)
+        sw = jnp.full((n,), 0.01, jnp.float32)
+        eps = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+        macro = _surrogate_macro(family)
+        gp = macro.gemm_params("surrogate")
+        block = autotune.best_block("pallas_fused_surrogate", 8, m, k, n)
+
+        def fn():
+            return ops.surrogate_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0,
+                                      gp.c1, block=block)
+
+        entry_name, block_used, interpret = ("pallas_fused_surrogate",
+                                             block, ops.default_interpret())
+    else:
+        macro = _surrogate_macro(family)
+        gp = macro.gemm_params(mode)
+        plan = plan_gemm(family, mode, 8, m, k, n)
+        key = jax.random.PRNGKey(2)
+
+        def fn():
+            return cim_matmul(x, w, gp, key)
+
+        entry_name, block_used, interpret = (plan.entry.name, plan.block,
+                                             plan.interpret)
+
+    us = _median_time(fn) * 1e6
+    flops = 2.0 * m * k * n
+    bytes_moved = m * k + k * n + 4 * m * n          # int8 in, f32 out
+    if entry_name in ("pallas_lut_gather", "jnp_lut"):
+        bytes_moved += 4 * (1 << 16)                 # the 256 KiB LUT
+    gflops = flops / (us * 1e-6) / 1e9
+    return {
+        "kernel": entry_name,
+        "family": family,
+        "mode": mode if mode != "pallas_surrogate" else "surrogate",
+        "shape": [m, k, n],
+        "block": list(block_used) if block_used else None,
+        "backend": jax.default_backend(),
+        "interpret": bool(interpret),
+        "us_per_call": round(us, 1),
+        "gflops": round(gflops, 3),
+        "bytes_moved": int(bytes_moved),
+        "ai_flops_byte": round(flops / bytes_moved, 2),
+        "energy_per_mac_pj": round(
+            energy_model.energy_per_mac_j(family, 8) * 1e12, 3),
+    }
+
+
+def run(fast: bool = True):
+    """Benchmark every kernel; write BENCH_kernels.json; return CSV rows
+    in the (name, us_per_call, derived) shape benchmarks/run.py prints."""
+    shapes = SHAPES if fast else SHAPES_FULL
+    records = []
+    for family, mode in ROWS:
+        for shape in shapes:
+            try:
+                records.append(_bench_row(family, mode, shape))
+            except Exception as e:  # noqa: BLE001 — keep the sweep alive
+                records.append({"kernel": mode, "family": family,
+                                "shape": list(shape),
+                                "error": f"{type(e).__name__}: {e}"})
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "shapes": [list(s) for s in shapes],
+        "records": records,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    rows = []
+    for r in records:
+        if "error" in r:
+            rows.append((f"kern_{r['kernel']}_{r['family']}", 0.0,
+                         f"ERROR:{r['error'].split(':')[0]}"))
+            continue
+        shape = "x".join(map(str, r["shape"]))
+        rows.append((f"kern_{r['kernel']}_{r['family']}_{r['mode']}_{shape}",
+                     r["us_per_call"], f"{r['gflops']}GFLOP/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    for name, us, derived in run(fast="--full" not in sys.argv):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {OUT_PATH}")

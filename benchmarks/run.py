@@ -1,5 +1,11 @@
-"""Benchmark driver: one entry per paper table + the roofline report.
-Prints ``name,us_per_call,derived`` CSV at the end."""
+"""Benchmark driver: one entry per paper table, the roofline report and
+the per-kernel GEMM harness (bench_kernels -> BENCH_kernels.json).
+Prints ``name,us_per_call,derived`` CSV at the end.
+
+Flags:
+  --fast      skip the slow CNN table; smaller kernel shape sweep
+  --kernels   run only the kernel harness (still writes the JSON)
+"""
 
 from __future__ import annotations
 
@@ -8,12 +14,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (roofline, table2_ppa, table3_psnr, table4_cnn,
-                            table5_yield)
+    from benchmarks import (bench_kernels, roofline, table2_ppa,
+                            table3_psnr, table4_cnn, table5_yield)
 
+    fast = "--fast" in sys.argv
     mods = [table2_ppa, table3_psnr, table4_cnn, table5_yield, roofline]
-    if "--fast" in sys.argv:
+    if fast:
         mods = [table2_ppa, table3_psnr, table5_yield, roofline]
+    if "--kernels" in sys.argv:
+        mods = []
     rows = []
     for mod in mods:
         try:
@@ -23,9 +32,16 @@ def main() -> None:
             rows.append((mod.__name__.split(".")[-1], 0.0,
                          f"ERROR:{type(e).__name__}"))
     try:
-        rows.extend(roofline.energy_report())
-    except Exception:  # noqa: BLE001
+        rows.extend(bench_kernels.run(fast=fast or "--kernels" in sys.argv))
+        print(f"kernel records -> {bench_kernels.OUT_PATH}")
+    except Exception as e:  # noqa: BLE001
         traceback.print_exc()
+        rows.append(("bench_kernels", 0.0, f"ERROR:{type(e).__name__}"))
+    if mods:
+        try:
+            rows.extend(roofline.energy_report())
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -26,6 +26,14 @@ y_appr = macro.matmul(x, w, key=jax.random.PRNGKey(2))
 err = jnp.abs(y_appr - y_exact).mean() / jnp.abs(y_exact).mean()
 print(f"mean relative deviation vs exact: {float(err):.4f}")
 
+# 2b. the same GEMM on the real Pallas kernel path (autotuned blocks;
+#     interpret mode off-TPU) and where the dispatcher routes it
+plan = macro.kernel_plan(128, 256, 64, mode="hardware")
+y_hw = macro.matmul(x, w, mode="hardware")
+y_be = macro.matmul(x, w, mode="bit_exact")
+print(f"hardware mode -> kernel={plan.entry.name} block={plan.block} "
+      f"(matches bit_exact: {bool(jnp.allclose(y_hw, y_be, atol=1e-5))})")
+
 # 3. what does it cost?  (workload = 1 GMAC)
 print(f"energy for 1 GMAC: {macro.energy_for(1e9)*1e6:.2f} uJ "
       f"(exact would be "

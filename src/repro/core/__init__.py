@@ -1,6 +1,10 @@
 # OpenACM's contribution as a composable JAX module: accuracy-configurable
 # approximate multipliers compiled into executable CiM "macros"
 # (LUT + calibrated surrogate + PPA + yield), consumed by the model zoo.
+from .approx_gemm import (FAMILIES, MODES, GemmParams, GemmPlan,  # noqa: F401
+                          KernelEntry, approx_matmul, cim_matmul,
+                          model_matmul, plan_gemm, registered_kernels,
+                          select_kernel)
 from .compiler import CiMConfig, CiMMacro, compile_macro  # noqa: F401
 from .error_model import ErrorMetrics, SurrogateModel, characterize  # noqa: F401
 from .multipliers import MultiplierSpec, multiply, multiply_unsigned  # noqa: F401

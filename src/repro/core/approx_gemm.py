@@ -1,42 +1,325 @@
-"""Approximate CiM GEMM — the execution front door.
+"""Approximate CiM GEMM — the execution front door and dispatch engine.
 
 Execution modes (per DESIGN.md §2):
 
   * ``exact``           — quantize-dequantize + float dot (QAT baseline).
   * ``bit_exact``       — every scalar product comes from the compiled
-                          multiplier LUT (validation scale; also the
-                          Pallas ``approx_matmul`` kernel's semantics).
+                          multiplier LUT (validation scale; pure-jnp
+                          gather, O(M*K*N) memory).
+  * ``hardware``        — the same integer semantics executed by the
+                          Pallas TPU kernels: LUT-gather for the
+                          compressor-tree families, the arithmetic
+                          log-domain kernel for mitchell/log_our.
+                          Autotuned block sizes; interpret mode off-TPU.
   * ``surrogate``       — MXU dot + calibrated error model:
                           (1+mu)*D + sigma*sqrt(A^2@B^2)*eps.
-                          2 matmuls; statistically faithful (the bias of a
-                          sign-magnitude multiplier carries the product's
-                          sign, so it folds into a scalar on D).
+                          On TPU this dispatches to the fused Pallas
+                          kernel (one HBM pass for D and SQ); elsewhere
+                          to the XLA twin (2 matmuls).
   * ``surrogate_fast``  — beyond-paper optimization: rank-1 estimate of
                           the variance term (outer product of squared row/
                           col norms / K), so the overhead over an exact
                           GEMM is O(MK+KN+MN) instead of one extra GEMM.
-                          Unbiased for uncorrelated magnitudes across k;
-                          validated against ``surrogate`` in tests.
 
-Backward pass is a straight-through estimator (exact float VJP), the
-standard choice for approximate/quantized training.
+Every (family, mode, bits, backend) combination is routed by a single
+**kernel registry** (DESIGN.md §8): `select_kernel` picks the
+highest-priority `KernelEntry` that supports the request, `plan_gemm`
+attaches an autotuned block size (core/autotune.py), and the two float
+frontends execute the plan:
+
+  * `cim_matmul`   — the macro frontend (`CiMMacro.matmul`): true
+                     int-quantization, f32 output, exact-float STE VJP.
+  * `model_matmul` — the model-zoo frontend (`models.common.cim_linear`):
+                     fake-quant STE (QAT), activation dtype preserved,
+                     rademacher surrogate noise (see models/common.py).
+
+Both share the registry, the integer kernel runners and the surrogate
+variance law, so a new kernel registered here is immediately available
+to the compiler facade, every model layer, the benchmarks and the
+dispatch tests.
+
+Backward pass everywhere is a straight-through estimator (exact float
+VJP), the standard choice for approximate/quantized training.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from . import autotune
 from .error_model import SurrogateModel
-from .luts import signed_product_lut
+from .luts import MAX_LUT_BITS, signed_product_lut
 from .multipliers import MultiplierSpec
-from .quantization import dequantize, quant_scale, quantize
+from .quantization import dequantize, fake_quant, quant_scale, quantize
 
-MODES = ("exact", "bit_exact", "surrogate", "surrogate_fast")
+MODES = ("exact", "bit_exact", "hardware", "surrogate", "surrogate_fast")
+FAMILIES = ("exact", "appro42", "mitchell", "log_our")
+
+# Surrogate noise for the model execution paths.  "normal" is the
+# calibration-faithful choice; "rademacher" (+-1 * sigma) matches the
+# first two moments at a fraction of the cost (EXPERIMENTS.md §Perf
+# it.2) — downstream contractions re-gaussianize the error by CLT.
+NOISE_KIND = "rademacher"
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One executable GEMM implementation and its routing envelope."""
+
+    name: str
+    modes: Tuple[str, ...]
+    families: Tuple[str, ...]          # () = every family
+    backends: Tuple[str, ...]          # () = every backend
+    priority: int = 0                  # highest supported entry wins
+    max_bits: int = 32
+    pallas: bool = False               # real Pallas kernel (interpretable)
+    autotuned: bool = False            # block size resolved by autotune
+    oracle: str = ""                   # kernels/ref.py oracle it must match
+    bound: str = "bit"                 # "bit" | "fp32" | "stochastic"
+    description: str = ""
+
+    def supports(self, family: str, mode: str, bits: int,
+                 backend: str) -> bool:
+        return (mode in self.modes
+                and (not self.families or family in self.families)
+                and (not self.backends or backend in self.backends)
+                and bits <= self.max_bits)
+
+
+_REGISTRY: Dict[str, KernelEntry] = {}
+
+
+def register_kernel(entry: KernelEntry) -> KernelEntry:
+    if entry.name in _REGISTRY:
+        raise ValueError(f"kernel {entry.name!r} already registered")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def registered_kernels() -> Tuple[KernelEntry, ...]:
+    return tuple(_REGISTRY.values())
+
+
+register_kernel(KernelEntry(
+    name="mxu_dot", modes=("exact",), families=(), backends=(),
+    oracle="float dot", bound="fp32",
+    description="quantize-dequantize + MXU float dot (QAT baseline)"))
+register_kernel(KernelEntry(
+    name="jnp_lut", modes=("bit_exact",), families=(), backends=(),
+    max_bits=MAX_LUT_BITS, oracle="lut_matmul_ref", bound="bit",
+    description="pure-jnp LUT gather oracle (validation scale)"))
+register_kernel(KernelEntry(
+    name="pallas_lut_gather", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), max_bits=8,
+    pallas=True, autotuned=True, oracle="lut_matmul_ref", bound="bit",
+    description="Pallas fused LUT-gather kernel (any LUT family)"))
+register_kernel(KernelEntry(
+    name="pallas_log", modes=("hardware",),
+    families=("mitchell", "log_our"), backends=(), priority=10,
+    max_bits=16, pallas=True, autotuned=True,
+    oracle="mitchell_matmul_ref", bound="bit",
+    description="Pallas arithmetic log-domain kernel (LoD+shift+OR on VPU)"))
+register_kernel(KernelEntry(
+    name="pallas_fused_surrogate", modes=("surrogate",), families=(),
+    backends=("tpu",), priority=10, max_bits=8, pallas=True,
+    autotuned=True, oracle="cim_gemm_ref", bound="fp32",
+    description="fused D / A^2@B^2 surrogate kernel, one HBM pass"))
+register_kernel(KernelEntry(
+    name="xla_surrogate", modes=("surrogate", "surrogate_fast"),
+    families=(), backends=(), oracle="cim_gemm_ref", bound="stochastic",
+    description="XLA dot + calibrated noise epilogue (surrogate twin)"))
+
+
+def select_kernel(family: str, mode: str, bits: int = 8,
+                  backend: Optional[str] = None) -> KernelEntry:
+    """Route one (family, mode, bits, backend) request to a kernel."""
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    matches = [e for e in _REGISTRY.values()
+               if e.supports(family, mode, bits, backend)]
+    if not matches:
+        raise ValueError(
+            f"no kernel for family={family!r} mode={mode!r} bits={bits} "
+            f"backend={backend!r}; registered: "
+            f"{sorted(_REGISTRY)}")
+    return max(matches, key=lambda e: e.priority)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """A routed GEMM: which kernel, which block, interpret or not."""
+
+    entry: KernelEntry
+    block: Optional[Tuple[int, int, int]]
+    interpret: bool
+    backend: str
+
+
+def plan_gemm(family: str, mode: str, bits: int, m: int, k: int, n: int,
+              backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              block: Optional[Tuple[int, int, int]] = None) -> GemmPlan:
+    """select_kernel + autotuned block size for the concrete shape."""
+    backend = backend or jax.default_backend()
+    entry = select_kernel(family, mode, bits, backend)
+    if interpret is None:
+        # only meaningful for real Pallas kernels; XLA/jnp executors run
+        # natively everywhere (the bench JSON relies on this distinction)
+        interpret = entry.pallas and backend != "tpu"
+    if block is None and entry.autotuned:
+        block = autotune.best_block(entry.name, bits, m, k, n,
+                                    backend=backend)
+    return GemmPlan(entry=entry, block=block, interpret=interpret,
+                    backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Static GEMM parameters (shared by both frontends)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmParams:
+    """Trace-time description of one approximate GEMM."""
+
+    family: str = "exact"
+    bits: int = 8
+    mode: str = "surrogate"
+    mu: float = 0.0                    # calibrated relative bias
+    c0: float = 0.0                    # variance floor (int^2 units)
+    c1: float = 0.0                    # variance slope on p^2
+    compressor: str = "yang1"
+    n_approx_cols: Optional[int] = None
+
+    @property
+    def spec(self) -> MultiplierSpec:
+        return MultiplierSpec(self.family, self.bits, True,
+                              self.compressor, self.n_approx_cols)
+
+    @classmethod
+    def from_spec(cls, spec: MultiplierSpec, surrogate: SurrogateModel,
+                  mode: str) -> "GemmParams":
+        return cls(family=spec.family, bits=spec.bits, mode=mode,
+                   mu=surrogate.mu_rel, c0=surrogate.c0_abs,
+                   c1=surrogate.c1_rel, compressor=spec.compressor,
+                   n_approx_cols=spec.n_approx_cols)
+
+
+# ---------------------------------------------------------------------------
+# Integer-domain kernel runners (one per registry entry with int core)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _signed_lut_flat(spec_key):
+    # cache the NUMPY table, never a jnp array: a jnp constant created
+    # while tracing (e.g. first touch inside a scanned layer) is a
+    # tracer, and caching it leaks it out of the trace.  jnp.asarray at
+    # use time is free under jit (constants are deduped by XLA).
+    family, bits, compressor, n_approx = spec_key
+    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
+    return signed_product_lut(spec).ravel()
+
+
+def _lut_for(gp: GemmParams) -> jnp.ndarray:
+    return jnp.asarray(_signed_lut_flat((gp.family, gp.bits, gp.compressor,
+                                         gp.n_approx_cols)))
+
+
+def _run_jnp_lut(xq, wq, gp: GemmParams, plan: GemmPlan):
+    """Bit-exact signed LUT GEMM (pure jnp oracle; O(M*K*N) gathers)."""
+    half = 1 << (gp.bits - 1)
+    n = 1 << gp.bits
+    ia = (xq.astype(jnp.int32) + half)[..., :, :, None]    # (M, K, 1)
+    ib = (wq.astype(jnp.int32) + half)[None, :, :]         # (1, K, N)
+    idx = ia * n + ib                                      # (M, K, N)
+    prods = jnp.take(_lut_for(gp), idx, axis=0)
+    return prods.sum(axis=-2)                              # (M, N)
+
+
+def _run_pallas_lut(xq, wq, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels.approx_matmul import lut_matmul
+
+    return lut_matmul(xq, wq, _lut_for(gp), bits=gp.bits,
+                      block=plan.block, interpret=plan.interpret)
+
+
+def _run_pallas_log(xq, wq, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels.mitchell_gemm import mitchell_matmul
+
+    return mitchell_matmul(xq, wq, bits=gp.bits,
+                           compensated=(gp.family == "log_our"),
+                           block=plan.block, interpret=plan.interpret)
+
+
+# entry name -> int8 (M,K) x int8 (K,N) -> int32 (M,N)
+INT_RUNNERS: Dict[str, Callable] = {
+    "jnp_lut": _run_jnp_lut,
+    "pallas_lut_gather": _run_pallas_lut,
+    "pallas_log": _run_pallas_log,
+}
+
+
+def run_int_kernel(plan: GemmPlan, xq, wq, gp: GemmParams):
+    """Execute the integer core of a routed bit_exact/hardware GEMM."""
+    try:
+        runner = INT_RUNNERS[plan.entry.name]
+    except KeyError:
+        raise ValueError(
+            f"kernel {plan.entry.name!r} has no integer runner") from None
+    return runner(xq, wq, gp, plan)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate variance law (shared by both frontends; DESIGN.md §2/§3)
+# ---------------------------------------------------------------------------
+
+
+def surrogate_variance(gp: GemmParams, scale2, k_len: int,
+                       xf=None, wf=None, fast: bool = False):
+    """var[out] = c0 * K * s^2 + c1 * (A^2 @ B^2) * s-units.
+
+    `scale2` is the squared product of quantization scales broadcastable
+    to the output; `xf`/`wf` are the (dequantized or integer) operands
+    for the c1 term — in integer units the caller folds s^2 itself.
+    Returns None when the family carries no noise.
+    """
+    if gp.c0 <= 0.0 and gp.c1 <= 0.0:
+        return None
+    var = gp.c0 * k_len * scale2
+    if gp.c1 > 0.0 and xf is not None and wf is not None:
+        if fast:
+            a2 = jnp.sum(xf * xf, axis=-1, keepdims=True)      # (M, 1)
+            b2 = jnp.sum(wf * wf, axis=0, keepdims=True)       # (1, N)
+            sq = a2 * b2 / k_len
+        else:
+            sq = (xf * xf) @ (wf * wf)
+        var = var + gp.c1 * sq
+    return var
+
+
+def surrogate_noise(key, shape, dtype, kind: str = NOISE_KIND):
+    if kind == "rademacher":
+        return jax.random.rademacher(key, shape, jnp.int8).astype(dtype)
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Macro frontend: cim_matmul / approx_matmul (f32 out, true quantization)
+# ---------------------------------------------------------------------------
 
 
 def _quantize_operands(x, w, bits):
@@ -47,84 +330,172 @@ def _quantize_operands(x, w, bits):
     return xq, sx, wq, sw
 
 
-def _lut_matmul_int(xq, wq, lut_flat, bits):
-    """Bit-exact signed LUT GEMM (pure jnp oracle; O(M*K*N) gathers)."""
-    half = 1 << (bits - 1)
-    n = 1 << bits
-    ia = (xq.astype(jnp.int32) + half)[..., :, :, None]    # (M, K, 1)
-    ib = (wq.astype(jnp.int32) + half)[None, :, :]         # (1, K, N)
-    idx = ia * n + ib                                      # (M, K, N)
-    prods = jnp.take(lut_flat, idx, axis=0)
-    return prods.sum(axis=-2)                              # (M, N)
+def _ste_matmul(forward):
+    """Wrap a (xf, wf) -> out forward with an exact-float STE VJP."""
+
+    @jax.custom_vjp
+    def f(xf, wf):
+        return forward(xf, wf)
+
+    def fwd(xf, wf):
+        return forward(xf, wf), (xf, wf)
+
+    def bwd(res, g):
+        xf, wf = res
+        return (g @ wf.T).astype(xf.dtype), (xf.T @ g).astype(wf.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
 
 
-def _surrogate_terms(xf, wf, model: SurrogateModel, key, fast: bool, scale2):
-    d = xf @ wf
-    if model.is_exact:
-        return d
-    k_len = xf.shape[-1]
-    sq_dot = None
-    if key is not None and model.c1_rel > 0.0:
-        if fast:
-            a2 = jnp.sum(xf ** 2, axis=-1, keepdims=True)          # (M,1)
-            b2 = jnp.sum(wf ** 2, axis=0, keepdims=True)           # (1,N)
-            sq_dot = a2 * b2 / k_len
-        else:
-            sq_dot = (xf ** 2) @ (wf ** 2)
-    noise = None
-    if key is not None:
-        noise = jax.random.normal(key, d.shape, dtype=d.dtype)
-    return model.apply_dot(d, sq_dot, k_len, scale2, noise)
+def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
+               key: Optional[jax.Array] = None, *,
+               noise_kind: str = "normal",
+               interpret: Optional[bool] = None,
+               block: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Dispatch + execute one approximate GEMM (macro semantics).
 
+    x: (..., K) float; w: (K, N) float.  Returns float32 (..., N) with
+    straight-through exact gradients.
+    """
+    if gp.mode not in MODES:
+        raise ValueError(f"mode {gp.mode!r} not in {MODES}")
+    lead = x.shape[:-1]
+    xf2 = x.reshape((-1, x.shape[-1]))
+    m, k = xf2.shape
+    n = w.shape[-1]
+    plan = plan_gemm(gp.family, gp.mode, gp.bits, m, k, n,
+                     interpret=interpret, block=block)
 
-@functools.lru_cache(maxsize=32)
-def _signed_lut_flat(spec_key):
-    family, bits, compressor, n_approx = spec_key
-    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
-    return jnp.asarray(signed_product_lut(spec).ravel())
+    def _forward(xf, wf):
+        xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
+        if gp.mode in ("bit_exact", "hardware"):
+            acc = run_int_kernel(plan, xq, wq, gp)
+            return (acc.astype(jnp.float32) * sx) * sw
+        if gp.mode == "exact":
+            return dequantize(xq, sx) @ dequantize(wq, sw)
+        # surrogate / surrogate_fast
+        scale2 = (sx * sw) ** 2                    # (1, N): per-out-channel
+        eps = None
+        if key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0):
+            eps = surrogate_noise(key, (xf.shape[0], wf.shape[-1]),
+                                  jnp.float32, noise_kind)
+        if plan.entry.name == "pallas_fused_surrogate":
+            from repro.kernels.cim_gemm import cim_gemm
+
+            return cim_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0, gp.c1,
+                            block=plan.block, interpret=plan.interpret)
+        xdq = dequantize(xq, sx)
+        wdq = dequantize(wq, sw)
+        d = xdq @ wdq
+        out = (1.0 + gp.mu) * d
+        if eps is not None:
+            var = surrogate_variance(gp, scale2, k, xdq, wdq,
+                                     fast=(gp.mode == "surrogate_fast"))
+            if var is not None:
+                out = out + jnp.sqrt(jnp.maximum(var, 0.0)) * eps
+        return out
+
+    out = _ste_matmul(_forward)(xf2, w)
+    return out.reshape(lead + (w.shape[-1],))
 
 
 def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, spec: MultiplierSpec,
                   surrogate: SurrogateModel, mode: str = "surrogate",
-                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+                  key: Optional[jax.Array] = None,
+                  interpret: Optional[bool] = None,
+                  block: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
     """Approximate x @ w with straight-through exact gradients.
 
-    x: (..., K) float; w: (K, N) float.  Returns float32 (..., N).
+    Back-compat wrapper over `cim_matmul` (the dispatch engine entry).
     """
-    if mode not in MODES:
-        raise ValueError(f"mode {mode!r} not in {MODES}")
+    gp = GemmParams.from_spec(spec, surrogate, mode)
+    return cim_matmul(x, w, gp, key, interpret=interpret, block=block)
 
+
+# ---------------------------------------------------------------------------
+# Model frontend: model_matmul (dtype-preserving, fake-quant STE)
+# ---------------------------------------------------------------------------
+
+
+def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
+                 key: Optional[jax.Array] = None, *,
+                 apply: bool = True,
+                 noise_kind: str = NOISE_KIND) -> jnp.ndarray:
+    """The model-zoo execution path (cim_linear core), dispatcher-routed.
+
+    Differences from `cim_matmul` (both deliberate, DESIGN.md §8):
+    fake-quant STE (QAT: gradients flow through the quantizer), the
+    activation dtype is preserved end-to-end (a bf16 stream stays bf16),
+    and surrogate noise defaults to rademacher.  `apply=False` runs the
+    exact int8 macro (mixed-macro allocation, DESIGN.md §4).
+    """
     lead = x.shape[:-1]
-    xf2 = x.reshape((-1, x.shape[-1]))
+    m = 1
+    for s in lead:
+        m *= int(s)
+    k = x.shape[-1]
+    n = w.shape[-1]
+    plan = plan_gemm(gp.family, gp.mode if apply else "exact",
+                     gp.bits, m, k, n)
 
-    @jax.custom_vjp
-    def _fwd_fn(xf, wf):
-        return _forward(xf, wf)
+    # the STE custom_vjp's backward does xf.T @ g, so the kernel-backed
+    # branches must see a rank-2 x: flatten leading dims OUTSIDE the vjp
+    if gp.mode in ("bit_exact", "hardware") and apply:
+        def _forward(x2, wf):
+            xq, sx, wq, sw = _quantize_operands(x2.astype(jnp.float32),
+                                                wf.astype(jnp.float32),
+                                                gp.bits)
+            acc = run_int_kernel(plan, xq, wq, gp)
+            out = (acc.astype(jnp.float32) * sx) * sw
+            return out.astype(x2.dtype)
 
-    def _forward(xf, wf):
-        bits = spec.bits
-        xq, sx, wq, sw = _quantize_operands(xf, wf, bits)
-        if mode == "bit_exact":
-            lut = _signed_lut_flat((spec.family, bits, spec.compressor,
-                                    spec.n_approx_cols))
-            acc = _lut_matmul_int(xq, wq, lut, bits)
-            return (acc.astype(jnp.float32) * sx) * sw
-        xdq = dequantize(xq, sx)
-        wdq = dequantize(wq, sw)
-        if mode == "exact":
-            return xdq @ wdq
-        scale2 = (sx * sw) ** 2                    # (1, N): per-out-channel
-        return _surrogate_terms(xdq, wdq, surrogate, key,
-                                fast=(mode == "surrogate_fast"),
-                                scale2=scale2)
+        out = _ste_matmul(_forward)(x.reshape((-1, k)), w)
+        return out.reshape(lead + (n,))
 
-    def _vjp_fwd(xf, wf):
-        return _forward(xf, wf), (xf, wf)
+    if plan.entry.name == "pallas_fused_surrogate" and apply:
+        # TPU production path: one HBM pass computes D and A^2@B^2 fused
+        def _forward(x2, wf):
+            xq, sx, wq, sw = _quantize_operands(x2.astype(jnp.float32),
+                                                wf.astype(jnp.float32),
+                                                gp.bits)
+            eps = None
+            if key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0):
+                eps = surrogate_noise(key, (x2.shape[0], n), jnp.float32,
+                                      noise_kind)
+            from repro.kernels.cim_gemm import cim_gemm
 
-    def _vjp_bwd(res, g):
-        xf, wf = res
-        return (g @ wf.T).astype(xf.dtype), (xf.T @ g).astype(wf.dtype)
+            out = cim_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0, gp.c1,
+                           block=plan.block, interpret=plan.interpret)
+            return out.astype(x2.dtype)
 
-    _fwd_fn.defvjp(_vjp_fwd, _vjp_bwd)
-    out = _fwd_fn(xf2, w)
-    return out.reshape(lead + (w.shape[-1],))
+        out = _ste_matmul(_forward)(x.reshape((-1, k)), w)
+        return out.reshape(lead + (n,))
+
+    # exact / surrogate paths: fake-quant QAT form.  fake-quant the
+    # weight in ITS dtype: an f32 upcast here gets hoisted out of the
+    # layer scan by XLA and materializes the whole stacked weight in f32
+    # (54 GB/instance at 671B, EXPERIMENTS.md §Perf).
+    xq = fake_quant(x, gp.bits)
+    wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
+    d = xq @ wq
+    if not apply or gp.mode == "exact":
+        # mixed-macro allocation / QAT baseline: exact int8 macro
+        return d
+    out = (1.0 + gp.mu) * d
+    if gp.mode in ("surrogate", "surrogate_fast") and key is not None \
+            and (gp.c0 > 0.0 or gp.c1 > 0.0):
+        sx = quant_scale(jax.lax.stop_gradient(x), gp.bits)
+        sw = quant_scale(jax.lax.stop_gradient(w), gp.bits, axis=0)
+        scale2 = (sx * sw).astype(jnp.float32) ** 2
+        xf = wf = None
+        if gp.c1 > 0.0:
+            xf = jax.lax.stop_gradient(xq).astype(jnp.float32)
+            wf = jax.lax.stop_gradient(wq).astype(jnp.float32)
+        var = surrogate_variance(gp, scale2, k, xf, wf,
+                                 fast=(gp.mode == "surrogate_fast"))
+        if var is not None:
+            eps = surrogate_noise(key, d.shape, d.dtype, noise_kind)
+            out = out + jax.lax.stop_gradient(
+                jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
+    return out

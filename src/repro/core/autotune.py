@@ -1,0 +1,222 @@
+"""Block-size autotuning for the Pallas CiM-GEMM kernels (DESIGN.md §8).
+
+Every kernel in the registry (core/approx_gemm.py) is tiled by a
+(bm, bk, bn) block triple.  The right triple depends on the kernel's
+VMEM footprint, the operand shapes and the backend, so the dispatcher
+asks this module instead of hard-coding one:
+
+  * on TPU, `best_block` sweeps a small candidate set, times each
+    configuration end-to-end (compile excluded via a warmup call) and
+    persists the winner to a JSON cache on disk keyed by
+    (kernel, bits, bucketed shape, backend);
+  * off TPU (this container: CPU interpret mode, where timings are
+    meaningless) it returns a shape-clipped heuristic default without
+    touching the disk cache;
+  * tests inject a fake `measure` callable and a tmp `cache_file` to
+    exercise the sweep + persistence logic deterministically.
+
+Shapes are bucketed to the next power of two so one sweep serves a
+whole family of nearby GEMMs — the cache stays tiny (a few dozen rows).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+Block = Tuple[int, int, int]
+
+# Per-kernel default blocks: the hand-picked values the kernels shipped
+# with, now demoted to sweep seeds / off-TPU heuristics.  The candidate
+# sets stay small on purpose: an autotune sweep runs once per bucketed
+# shape and must not dominate the first-call latency.
+DEFAULT_BLOCKS: Dict[str, Block] = {
+    "pallas_lut_gather": (32, 32, 128),
+    "pallas_log": (32, 32, 32),
+    "pallas_fused_surrogate": (128, 128, 128),
+}
+
+_CANDIDATES: Dict[str, List[Block]] = {
+    # gather-bound: bn rides the 128-lane dimension, bm*bk*bn bounded by
+    # the (bm, bk, bn) index/product temporaries in VMEM
+    "pallas_lut_gather": [(16, 32, 128), (32, 32, 128), (32, 64, 128),
+                          (64, 32, 128), (32, 32, 256)],
+    # VPU select/shift chains materialize (bm, bk, bn) int32 temporaries;
+    # keep ~8 of them under the VMEM budget
+    "pallas_log": [(16, 32, 64), (32, 32, 32), (32, 32, 64),
+                   (64, 32, 32), (32, 64, 32)],
+    # MXU-bound: native 128x128 systolic tiles, bk trades VMEM for
+    # fewer accumulator flushes
+    "pallas_fused_surrogate": [(128, 128, 128), (128, 256, 128),
+                               (256, 128, 128), (128, 128, 256),
+                               (64, 128, 128)],
+}
+
+_ENV_CACHE = "OPENACM_AUTOTUNE_CACHE"
+_mem_cache: Dict[str, Block] = {}
+_lock = threading.Lock()
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        _ENV_CACHE,
+        os.path.join(os.path.expanduser("~"), ".cache", "openacm",
+                     "autotune.json"))
+
+
+def _bucket(v: int) -> int:
+    b = 8
+    while b < v:
+        b <<= 1
+    return b
+
+
+def cache_key(kernel: str, bits: int, m: int, k: int, n: int,
+              backend: str) -> str:
+    return f"{kernel}:b{bits}:{_bucket(m)}x{_bucket(k)}x{_bucket(n)}:{backend}"
+
+
+def _load_disk(path: str) -> Dict[str, Block]:
+    try:
+        with open(path) as fh:
+            raw = json.load(fh)
+        return {k: tuple(v) for k, v in raw.items()}
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_disk(path: str, table: Dict[str, Block]) -> None:
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({k: list(v) for k, v in sorted(table.items())}, fh,
+                      indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: fall back to the in-memory cache only
+
+
+def _clip_block(block: Block, m: int, k: int, n: int) -> Block:
+    """Shrink a block to the bucketed problem size (never below the
+    TPU minimum tile of 8 sublanes; the lane dim stays as given)."""
+    bm, bk, bn = block
+    return (max(8, min(bm, _bucket(m))), max(8, min(bk, _bucket(k))),
+            max(8, min(bn, _bucket(n))))
+
+
+def heuristic_block(kernel: str, m: int, k: int, n: int) -> Block:
+    return _clip_block(DEFAULT_BLOCKS.get(kernel, (32, 32, 128)), m, k, n)
+
+
+def candidate_blocks(kernel: str, m: int, k: int, n: int) -> List[Block]:
+    cands = _CANDIDATES.get(kernel, [DEFAULT_BLOCKS.get(kernel,
+                                                        (32, 32, 128))])
+    clipped = [_clip_block(c, m, k, n) for c in cands]
+    out: List[Block] = []
+    for c in clipped:  # dedupe, keep order
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def clear_memory_cache() -> None:
+    with _lock:
+        _mem_cache.clear()
+
+
+def best_block(kernel: str, bits: int, m: int, k: int, n: int,
+               backend: Optional[str] = None,
+               measure: Optional[Callable[[Block], float]] = None,
+               cache_file: Optional[str] = None) -> Block:
+    """Resolve the block triple for one kernel/shape/backend.
+
+    `measure(block) -> seconds` runs the sweep when provided (tests) or
+    when the backend is a real TPU (production); anything else gets the
+    clipped heuristic default, cached in memory only.
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    key = cache_key(kernel, bits, m, k, n, backend)
+    with _lock:
+        if key in _mem_cache:
+            return _mem_cache[key]
+    path = cache_file or cache_path()
+    disk = _load_disk(path)
+    if key in disk:
+        with _lock:
+            _mem_cache[key] = disk[key]
+        return disk[key]
+
+    if measure is None and backend == "tpu":
+        measure = _default_measure(kernel, bits, m, k, n)
+    if measure is None:
+        block = heuristic_block(kernel, m, k, n)
+        with _lock:
+            _mem_cache[key] = block
+        return block
+
+    timings = []
+    for block in candidate_blocks(kernel, m, k, n):
+        try:
+            timings.append((measure(block), block))
+        except Exception:  # noqa: BLE001 — a block can exceed VMEM
+            continue
+    if not timings:
+        block = heuristic_block(kernel, m, k, n)
+    else:
+        block = min(timings)[1]
+    with _lock:
+        _mem_cache[key] = block
+        # merge-on-save: re-load under the lock so concurrent tuners
+        # (multi-host workers, pytest-xdist) don't drop each other's rows
+        merged = _load_disk(path)
+        merged[key] = block
+        _save_disk(path, merged)
+    return block
+
+
+def _default_measure(kernel: str, bits: int, m: int, k: int,
+                     n: int) -> Callable[[Block], float]:
+    """Wall-clock measure for the real (non-interpret) kernels."""
+    import time
+
+    import jax
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
+
+    def run(block: Block):
+        from repro.kernels import ops
+
+        if kernel == "pallas_lut_gather":
+            from repro.core.multipliers import MultiplierSpec
+
+            spec = MultiplierSpec("exact", bits, True)
+            return ops.approx_matmul_bit_exact(xq, wq, spec, block=block,
+                                               interpret=False)
+        if kernel == "pallas_log":
+            return ops.log_matmul(xq, wq, bits=bits, block=block,
+                                  interpret=False)
+        if kernel == "pallas_fused_surrogate":
+            return ops.cim_gemm_core(xq, wq, need_sq=True, block=block,
+                                     interpret=False)[0]
+        raise ValueError(f"no measure recipe for kernel {kernel!r}")
+
+    def measure(block: Block) -> float:
+        jax.block_until_ready(run(block))          # compile + warm
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run(block))
+        return (time.perf_counter() - t0) / reps
+
+    return measure

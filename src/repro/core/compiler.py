@@ -20,7 +20,8 @@ from typing import Optional
 import jax
 
 from . import energy_model, sram_model, yield_analysis
-from .approx_gemm import MODES, approx_matmul
+from .approx_gemm import (MODES, GemmParams, GemmPlan, cim_matmul,
+                          plan_gemm)
 from .error_model import ErrorMetrics, SurrogateModel, characterize
 from .multipliers import MultiplierSpec
 
@@ -34,7 +35,8 @@ class CiMConfig:
     signed: bool = True
     compressor: str = "yang1"
     n_approx_cols: Optional[int] = None
-    mode: str = "surrogate"          # one of approx_gemm.MODES
+    mode: str = "surrogate"          # one of approx_gemm.MODES; "hardware"
+                                     # runs the Pallas kernels (DESIGN.md §2)
     # per-module allocation (beyond-paper DSE extension): apply the
     # approximate family only to matmuls whose name starts with one of
     # these prefixes ("mlp", "moe", "shared", "wq", ...); everything else
@@ -64,10 +66,20 @@ class CiMMacro:
     ppa: energy_model.PPAReport
     yield_report: Optional[yield_analysis.YieldResult]
 
+    def gemm_params(self, mode: Optional[str] = None) -> GemmParams:
+        """Static dispatch parameters for this macro (DESIGN.md §8)."""
+        return GemmParams.from_spec(self.config.spec, self.surrogate,
+                                    mode or self.config.mode)
+
     def matmul(self, x, w, key: Optional[jax.Array] = None,
                mode: Optional[str] = None):
-        return approx_matmul(x, w, self.config.spec, self.surrogate,
-                             mode=mode or self.config.mode, key=key)
+        return cim_matmul(x, w, self.gemm_params(mode), key)
+
+    def kernel_plan(self, m: int, k: int, n: int,
+                    mode: Optional[str] = None) -> GemmPlan:
+        """Which kernel (and block size) a (m, k, n) GEMM routes to."""
+        return plan_gemm(self.config.family, mode or self.config.mode,
+                         self.config.bits, m, k, n)
 
     def energy_for(self, n_macs: float) -> float:
         return energy_model.workload_energy_j(

@@ -1,7 +1,12 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 `interpret` defaults to True off-TPU (this container is CPU-only; the
-kernels target TPU and are validated in interpret mode per DESIGN.md).
+kernels target TPU and are validated in interpret mode per DESIGN.md §2).
+`block` defaults to None, which resolves through the autotuner
+(core/autotune.py): a measured sweep on TPU, a shape-clipped heuristic
+elsewhere.  Routing across kernels lives in the registry
+(core/approx_gemm.py, DESIGN.md §8); these wrappers are the low-level
+per-kernel entry points it executes.
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.luts import signed_product_lut
 from repro.core.multipliers import MultiplierSpec
 
@@ -24,34 +30,52 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve_block(kernel: str, bits: int, m: int, k: int, n: int, block):
+    if block is not None:
+        return block
+    return autotune.best_block(kernel, bits, m, k, n)
+
+
 @functools.lru_cache(maxsize=16)
-def _lut_for(family: str, bits: int, compressor: str, n_approx) -> jnp.ndarray:
+def _lut_np(family: str, bits: int, compressor: str, n_approx):
+    # numpy on purpose: caching a jnp array created under a trace would
+    # leak a tracer (see core/approx_gemm._signed_lut_flat)
     spec = MultiplierSpec(family, bits, True, compressor, n_approx)
-    return jnp.asarray(signed_product_lut(spec).ravel())
+    return signed_product_lut(spec).ravel()
+
+
+def _lut_for(family: str, bits: int, compressor: str, n_approx) -> jnp.ndarray:
+    return jnp.asarray(_lut_np(family, bits, compressor, n_approx))
 
 
 def approx_matmul_bit_exact(xq, wq, spec: MultiplierSpec,
-                            block=(32, 32, 128),
+                            block=None,
                             interpret: Optional[bool] = None):
     """Bit-exact kernel GEMM for any LUT-representable multiplier."""
     interp = default_interpret() if interpret is None else interpret
+    (m, k), n = xq.shape, wq.shape[-1]
+    block = _resolve_block("pallas_lut_gather", spec.bits, m, k, n, block)
     lut = _lut_for(spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
     return lut_matmul(xq, wq, lut, bits=spec.bits, block=block,
                       interpret=interp)
 
 
 def log_matmul(xq, wq, bits: int = 8, compensated: bool = True,
-               block=(32, 32, 32), interpret: Optional[bool] = None):
+               block=None, interpret: Optional[bool] = None):
     """Arithmetic log-domain kernel GEMM (mitchell / log_our)."""
     interp = default_interpret() if interpret is None else interpret
+    (m, k), n = xq.shape, wq.shape[-1]
+    block = _resolve_block("pallas_log", bits, m, k, n, block)
     return mitchell_matmul(xq, wq, bits=bits, compensated=compensated,
                            block=block, interpret=interp)
 
 
 def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
-                   block=(128, 128, 128), interpret: Optional[bool] = None):
+                   block=None, interpret: Optional[bool] = None):
     """Fused production surrogate GEMM."""
     interp = default_interpret() if interpret is None else interpret
+    (m, k), n = xq.shape, wq.shape[-1]
+    block = _resolve_block("pallas_fused_surrogate", 8, m, k, n, block)
     return cim_gemm(xq, wq, sx, sw, eps, mu, c0, c1, block=block,
                     interpret=interp)
 

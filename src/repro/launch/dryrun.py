@@ -165,7 +165,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.xla_cost_dict(compiled)
     hlo_text = compiled.as_text()
     hlo = hlo_analysis.analyze(hlo_text)
     # persist the per-device HLO so the roofline can be re-derived without

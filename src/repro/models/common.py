@@ -11,6 +11,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.approx_gemm import (NOISE_KIND, GemmParams, model_matmul,
+                                    surrogate_noise)
 from repro.core.compiler import CiMConfig, CiMMacro, compile_macro
 from repro.core.quantization import fake_quant, quant_scale
 
@@ -173,13 +175,21 @@ def apply_rope(x, tables):
 
 @dataclasses.dataclass(frozen=True)
 class CiMParams:
-    """Static (trace-time) CiM execution parameters, from a compiled macro."""
+    """Static (trace-time) CiM execution parameters, from a compiled macro.
 
-    mode: str = "off"            # off | exact | surrogate | surrogate_fast | bit_exact
+    Execution is delegated to the kernel dispatch engine in
+    core/approx_gemm.py (DESIGN.md §8); this class only carries the
+    routing inputs (family/mode/bits) and the calibrated surrogate
+    coefficients, plus the per-module allocation filter."""
+
+    mode: str = "off"            # off | one of core.approx_gemm.MODES
     bits: int = 8
+    family: str = "exact"        # exact | appro42 | mitchell | log_our
     mu: float = 0.0
     c0: float = 0.0
     c1: float = 0.0
+    compressor: str = "yang1"
+    n_approx_cols: Optional[int] = None
     apply_to: tuple = ()         # name prefixes; () = every matmul
 
     @classmethod
@@ -188,8 +198,17 @@ class CiMParams:
             return cls()
         macro: CiMMacro = compile_macro(cim)
         s = macro.surrogate
-        return cls(mode=cim.mode, bits=cim.bits, mu=s.mu_rel, c0=s.c0_abs,
-                   c1=s.c1_rel, apply_to=tuple(getattr(cim, "apply_to", ())))
+        return cls(mode=cim.mode, bits=cim.bits, family=cim.family,
+                   mu=s.mu_rel, c0=s.c0_abs, c1=s.c1_rel,
+                   compressor=cim.compressor,
+                   n_approx_cols=cim.n_approx_cols,
+                   apply_to=tuple(getattr(cim, "apply_to", ())))
+
+    def gemm_params(self) -> GemmParams:
+        return GemmParams(family=self.family, bits=self.bits,
+                          mode=self.mode, mu=self.mu, c0=self.c0,
+                          c1=self.c1, compressor=self.compressor,
+                          n_approx_cols=self.n_approx_cols)
 
     def selects(self, name: str) -> bool:
         """Mixed-macro allocation (beyond-paper DSE extension): does the
@@ -215,20 +234,15 @@ class CiMContext:
 
 OFF = CiMContext(CiMParams())
 
-# Surrogate noise distribution for the model execution paths.  "normal"
-# is the calibration-faithful choice; "rademacher" (+-1 * sigma) matches
-# the first two moments at a fraction of the cost — sampling a gaussian
+# NOISE_KIND / surrogate_noise live in core/approx_gemm.py now (they are
+# part of the shared dispatch engine) and are re-exported here for
+# backward compatibility.  "rademacher" matches the surrogate's first
+# two moments at a fraction of a gaussian's cost — sampling a gaussian
 # lowers to an erf_inv chain materializing f32 tensors of the full
 # activation shape (measured ~20% of HBM bytes at 671B scale), while
-# rademacher is one bit-sample + select.  Downstream contractions
+# rademacher is one bit-sample + select; downstream contractions
 # re-gaussianize the error by CLT (EXPERIMENTS.md §Perf it.2).
-NOISE_KIND = "rademacher"
-
-
-def surrogate_noise(key, shape, dtype):
-    if NOISE_KIND == "rademacher":
-        return jax.random.rademacher(key, shape, jnp.int8).astype(dtype)
-    return jax.random.normal(key, shape, dtype=dtype)
+_ = (NOISE_KIND, surrogate_noise)
 
 
 def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
@@ -236,58 +250,21 @@ def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
     """y = approx(x @ w) per the CiM context; STE-quantized for training.
 
     x: (..., K); w.value: (K, N) (higher-rank weights are 2D-ified).
+    Routing — which kernel runs this matmul for the context's
+    (family, mode, bits, backend) — is delegated to the dispatch engine
+    (core/approx_gemm.model_matmul, DESIGN.md §8); this wrapper only
+    resolves sharding, the per-name noise key and the per-module
+    allocation filter.
     """
     wv = fsdp_gather(w)
     assert wv.ndim == 2, "cim_linear expects 2-D weights (flatten heads)"
     p = ctx.p
     if p.mode == "off":
         out = x @ wv
-    elif p.mode == "bit_exact":
-        from repro.core.approx_gemm import approx_matmul
-        from repro.core.error_model import SurrogateModel
-        from repro.core.multipliers import MultiplierSpec
-
-        spec = MultiplierSpec("exact", p.bits, True)  # LUT carries semantics
-        out = approx_matmul(x.astype(jnp.float32), wv.astype(jnp.float32),
-                            spec, SurrogateModel.exact(spec), mode="bit_exact")
-        out = out.astype(x.dtype)
     else:
-        xq = fake_quant(x, p.bits)
-        # fake-quant the weight in ITS dtype: an f32 upcast here gets
-        # hoisted out of the layer scan by XLA and materializes the whole
-        # stacked weight in f32 (54 GB/instance at 671B, §Perf; the
-        # residual f32 stacks still visible in decode cells are XLA:CPU's
-        # bf16-dot legalization, a dry-run backend artifact — TPU MXUs
-        # consume bf16 natively)
-        wq = fake_quant(wv, p.bits, axis=0).astype(x.dtype)
-        d = xq @ wq
-        if not p.selects(name):
-            # mixed-macro allocation: this matmul runs the exact int8
-            # macro (quantized, no approximation error)
-            out = d
-            return out if bias is None else out + bias.value
-        out = (1.0 + p.mu) * d
         key = ctx.child(name).key if name else ctx.key
-        if p.mode in ("surrogate", "surrogate_fast") and key is not None \
-                and (p.c0 > 0.0 or p.c1 > 0.0):
-            sx = quant_scale(jax.lax.stop_gradient(x), p.bits)
-            sw = quant_scale(jax.lax.stop_gradient(wv), p.bits, axis=0)
-            scale2 = (sx * sw).astype(jnp.float32) ** 2
-            k_len = x.shape[-1]
-            var = p.c0 * k_len * scale2
-            if p.c1 > 0.0:
-                xf = jax.lax.stop_gradient(xq).astype(jnp.float32)
-                wf = jax.lax.stop_gradient(wq).astype(jnp.float32)
-                if p.mode == "surrogate_fast":
-                    a2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
-                    b2 = jnp.sum(wf * wf, axis=0)
-                    sq = a2 * b2 / k_len
-                else:
-                    sq = (xf * xf) @ (wf * wf)
-                var = var + p.c1 * sq
-            eps = surrogate_noise(key, d.shape, d.dtype)
-            out = out + jax.lax.stop_gradient(
-                jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
+        out = model_matmul(x, wv, p.gemm_params(), key,
+                           apply=p.selects(name))
     if bias is not None:
         out = out + bias.value
     return out

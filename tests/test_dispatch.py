@@ -1,0 +1,266 @@
+"""Kernel registry / dispatcher coverage (DESIGN.md §8).
+
+Every (family, mode) pair must route to a registered kernel whose
+output matches the kernels/ref.py oracle within the family's documented
+error bound: bit-for-bit for the integer paths, fp32-allclose for the
+exact/surrogate deterministic terms, and moment-level for the
+stochastic surrogate (covered separately in test_error_model.py).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CiMConfig, compile_macro
+from repro.core import autotune
+from repro.core.approx_gemm import (FAMILIES, MODES, GemmParams,
+                                    cim_matmul, plan_gemm, run_int_kernel,
+                                    select_kernel, registered_kernels)
+from repro.core.quantization import dequantize, quant_scale, quantize
+from repro.kernels import ref
+
+ALL_PAIRS = [(f, m) for f in FAMILIES for m in MODES]
+
+
+def _float_ops(m, k, n, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (m, k)), jax.random.normal(kw, (k, n)))
+
+
+def _int_ops(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
+    return xq, wq
+
+
+# ------------------------------------------------------------- routing ----
+
+
+@pytest.mark.parametrize("family,mode", ALL_PAIRS)
+def test_every_pair_routes_to_a_kernel(family, mode):
+    entry = select_kernel(family, mode, bits=8)
+    assert entry.supports(family, mode, 8, jax.default_backend())
+
+
+@pytest.mark.parametrize("family,mode", ALL_PAIRS)
+def test_macro_matmul_executes_every_pair(family, mode):
+    macro = compile_macro(CiMConfig(family=family, bits=8, mode=mode))
+    x, w = _float_ops(9, 33, 7)
+    out = macro.matmul(x, w, key=jax.random.PRNGKey(3))
+    assert out.shape == (9, 7) and bool(jnp.isfinite(out).all())
+
+
+def test_surrogate_routes_to_fused_kernel_on_tpu_only():
+    cpu = select_kernel("log_our", "surrogate", 8, backend="cpu")
+    tpu = select_kernel("log_our", "surrogate", 8, backend="tpu")
+    assert cpu.name == "xla_surrogate"
+    assert tpu.name == "pallas_fused_surrogate"
+
+
+def test_hardware_mode_prefers_arithmetic_kernel_for_log_families():
+    assert select_kernel("mitchell", "hardware", 8).name == "pallas_log"
+    assert select_kernel("log_our", "hardware", 8).name == "pallas_log"
+    assert select_kernel("appro42", "hardware", 8).name == "pallas_lut_gather"
+    assert select_kernel("exact", "hardware", 8).name == "pallas_lut_gather"
+
+
+def test_unroutable_request_raises_with_inventory():
+    with pytest.raises(ValueError, match="no kernel"):
+        # no hardware kernel covers a 20-bit compressor-tree family
+        select_kernel("appro42", "hardware", bits=20)
+    with pytest.raises(ValueError, match="not in"):
+        select_kernel("exact", "warp_drive")
+
+
+def test_registry_entries_document_oracles():
+    for e in registered_kernels():
+        assert e.oracle, f"kernel {e.name} lacks an oracle reference"
+        assert e.bound in ("bit", "fp32", "stochastic")
+
+
+# ------------------------------------------------- oracle equivalence ----
+
+
+@pytest.mark.parametrize("family", ["exact", "appro42"])
+def test_hardware_lut_kernel_bit_matches_oracle(family):
+    xq, wq = _int_ops(17, 40, 9, seed=1)
+    gp = GemmParams(family=family, bits=8, mode="hardware")
+    plan = plan_gemm(family, "hardware", 8, 17, 40, 9)
+    got = run_int_kernel(plan, xq, wq, gp)
+    from repro.core.luts import signed_product_lut
+
+    lut = jnp.asarray(signed_product_lut(gp.spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("family", ["mitchell", "log_our"])
+def test_hardware_log_kernel_bit_matches_oracle(family):
+    xq, wq = _int_ops(17, 40, 9, seed=2)
+    gp = GemmParams(family=family, bits=8, mode="hardware")
+    plan = plan_gemm(family, "hardware", 8, 17, 40, 9)
+    got = run_int_kernel(plan, xq, wq, gp)
+    want = ref.mitchell_matmul_ref(xq, wq,
+                                   compensated=(family == "log_our"))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_hardware_mode_equals_bit_exact_mode(family):
+    """The Pallas kernels and the jnp LUT oracle implement the same
+    integer semantics (quantization clips to [-127, 127], so the
+    sign-magnitude -128 edge case never arises)."""
+    macro = compile_macro(CiMConfig(family=family, bits=8))
+    x, w = _float_ops(13, 29, 11, seed=4)
+    be = macro.matmul(x, w, mode="bit_exact")
+    hw = macro.matmul(x, w, mode="hardware")
+    np.testing.assert_allclose(np.asarray(be), np.asarray(hw),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_exact_mode_is_quantize_dequantize_dot():
+    macro = compile_macro(CiMConfig(family="exact", bits=8, mode="exact"))
+    x, w = _float_ops(8, 32, 4, seed=5)
+    got = macro.matmul(x, w)
+    sx = quant_scale(x, 8)
+    sw = quant_scale(w, 8, axis=0)
+    want = dequantize(quantize(x, sx, 8), sx) @ dequantize(
+        quantize(w, sw, 8), sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_surrogate_without_key_is_deterministic_bias_term():
+    macro = compile_macro(CiMConfig(family="log_our", bits=8))
+    x, w = _float_ops(8, 64, 8, seed=6)
+    a = macro.matmul(x, w)                 # key=None: no noise drawn
+    b = macro.matmul(x, w)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    gp = macro.gemm_params()
+    exact = macro.matmul(x, w, mode="exact")
+    np.testing.assert_allclose(np.asarray(a),
+                               (1.0 + gp.mu) * np.asarray(exact),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_model_path_hardware_matches_macro_path():
+    """cim_linear (model frontend) and CiMMacro.matmul (macro frontend)
+    execute the same routed kernel for hardware mode."""
+    from repro.models.common import CiMContext, CiMParams, Param, cim_linear
+
+    macro = compile_macro(CiMConfig(family="appro42", bits=8,
+                                    mode="hardware"))
+    x, w = _float_ops(12, 24, 8, seed=7)
+    p = CiMParams.from_config(macro.config)
+    got = cim_linear(x, Param(w, None), CiMContext(p))
+    want = macro.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_model_path_hardware_grads_with_3d_activations():
+    """Model-zoo activations are (batch, seq, K); the STE backward must
+    see a flattened x (regression: xf.T @ g crashed for rank-3 x)."""
+    from repro.models.common import CiMContext, CiMParams, Param, cim_linear
+
+    p = CiMParams(mode="hardware", family="appro42", bits=8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+
+    def loss(xv, wv):
+        return jnp.sum(cim_linear(xv, Param(wv, None), CiMContext(p)) ** 2)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert gx.shape == x.shape and gw.shape == w.shape
+    assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all())
+
+
+def test_model_path_hardware_has_ste_gradients():
+    from repro.models.common import CiMContext, CiMParams, Param, cim_linear
+
+    p = CiMParams(mode="hardware", family="log_our", bits=8)
+    x, w = _float_ops(6, 16, 4, seed=8)
+
+    def loss(xv, wv):
+        return jnp.sum(cim_linear(xv, Param(wv, None), CiMContext(p)) ** 2)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all())
+    assert float(jnp.abs(gx).max()) > 0 and float(jnp.abs(gw).max()) > 0
+
+
+def test_lut_cache_first_touched_under_trace_does_not_leak():
+    """Regression: _signed_lut_flat must cache numpy, not a jnp array —
+    a jnp constant created during tracing is a tracer, and caching it
+    leaked it out of the trace (UnexpectedTracerError when a scanned
+    model layer was the first hardware-mode caller)."""
+    from repro.core import approx_gemm
+
+    approx_gemm._signed_lut_flat.cache_clear()
+    gp = GemmParams(family="appro42", bits=8, mode="hardware")
+
+    @jax.jit
+    def first_touch_inside_trace(x, w):
+        return cim_matmul(x, w, gp)
+
+    x, w = _float_ops(4, 16, 4, seed=9)
+    inside = first_touch_inside_trace(x, w)
+    outside = cim_matmul(x, w, gp)       # reuses the cached table
+    np.testing.assert_allclose(np.asarray(inside), np.asarray(outside),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------- autotune ----
+
+
+def test_autotune_sweep_persists_and_caches(tmp_path):
+    cache = os.path.join(tmp_path, "tune.json")
+    calls = []
+
+    def fake_measure(block):
+        calls.append(block)
+        bm, bk, bn = block
+        return abs(bm - 32) + abs(bk - 64) + abs(bn - 128) + 1.0
+
+    autotune.clear_memory_cache()
+    best = autotune.best_block("pallas_lut_gather", 8, 512, 512, 512,
+                               backend="tpu", measure=fake_measure,
+                               cache_file=cache)
+    assert best == (32, 64, 128)
+    assert len(calls) == len(
+        autotune.candidate_blocks("pallas_lut_gather", 512, 512, 512))
+    assert os.path.exists(cache)
+
+    # second resolve: served from disk, measure never invoked
+    autotune.clear_memory_cache()
+    calls.clear()
+    again = autotune.best_block("pallas_lut_gather", 8, 512, 512, 512,
+                                backend="tpu", measure=fake_measure,
+                                cache_file=cache)
+    assert again == best and not calls
+
+
+def test_autotune_off_tpu_returns_clipped_heuristic(tmp_path):
+    autotune.clear_memory_cache()
+    blk = autotune.best_block("pallas_log", 8, 16, 16, 16, backend="cpu",
+                              cache_file=os.path.join(tmp_path, "t.json"))
+    bm, bk, bn = blk
+    assert bm <= 16 and bk <= 16 and bn <= 16
+    assert min(blk) >= 8
+    # off-TPU heuristics must not pollute the disk cache
+    assert not os.path.exists(os.path.join(tmp_path, "t.json"))
+
+
+def test_autotune_rejecting_measure_falls_back(tmp_path):
+    def oom(block):
+        raise RuntimeError("RESOURCE_EXHAUSTED: VMEM")
+
+    autotune.clear_memory_cache()
+    blk = autotune.best_block("pallas_log", 8, 64, 64, 64, backend="tpu",
+                              measure=oom,
+                              cache_file=os.path.join(tmp_path, "t.json"))
+    assert blk == autotune.heuristic_block("pallas_log", 64, 64, 64)

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need the optional "
+    "hypothesis dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.compressors import (available_compressors,
                                     compressor_error_profile,
