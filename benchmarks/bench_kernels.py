@@ -1,24 +1,42 @@
-"""Per-kernel GEMM benchmark harness -> BENCH_kernels.json.
+"""Per-kernel GEMM benchmark harness -> BENCH_kernels.json +
+BENCH_dispatch.json.
 
-Times every registered kernel of the dispatch engine
+``run`` times every registered kernel of the dispatch engine
 (core/approx_gemm.py, DESIGN.md §8) on a small shape sweep and records,
 per (kernel, family, mode, shape):
 
-  * ``us_per_call``   — median wall time after a warmup (compile excluded)
+  * ``us_per_call``   — median wall time over ``reps`` steady-state
+                        calls, each individually ``block_until_ready``'d
+                        (compile excluded)
+  * ``us_first_call`` — the separately-measured first call (compile +
+                        trace included), so cold-start and steady state
+                        are distinguishable
   * ``gflops``        — 2*M*K*N / t (MAC throughput; for the surrogate
                         kernels the second A^2@B^2 contraction is NOT
                         counted, so the number is comparable across rows)
-  * ``bytes_moved``   — ideal HBM traffic: int8 operands once + f32 out
-                        (+ the LUT for the gather kernel)
+  * ``bytes_moved``   — ideal end-to-end HBM traffic of the *pipeline
+                        as executed* (each operand/LUT read once per
+                        pass, each intermediate written+read once, the
+                        output written once).  Fused-quantization
+                        kernels execute in one pass; where a row has a
+                        pre-fusion (PR 1) pipeline, its traffic is
+                        recorded as ``bytes_moved_unfused`` so the
+                        reduction is visible in-file.
   * ``ai_flops_byte`` — arithmetic intensity (gflops-work / bytes)
   * ``energy_per_mac_pj`` — the compiled macro's energy model for the row's
                         multiplier family (core/energy_model.py)
   * ``block`` / ``backend`` / ``interpret`` — how the row actually ran
 
+``run_dispatch`` times the *dispatch engine itself*: steady-state
+per-call latency of an eager ``cim_matmul``/``model_matmul`` through
+the zero-retrace executable cache vs. the legacy rebuild-the-closure-
+per-call path (``cached=False``), with a trace-count probe asserting
+the cached loop never retraces.  Results -> BENCH_dispatch.json.
+
 Off TPU the Pallas rows run in interpret mode — the absolute numbers
 are then only a trend line (and the XLA rows the real CPU baseline),
 which is exactly what the JSON records via the ``interpret`` flag.
-Future PRs diff BENCH_kernels.json to see the perf trajectory.
+Future PRs diff the JSONs to see the perf trajectory.
 """
 
 from __future__ import annotations
@@ -31,77 +49,127 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune, energy_model
-from repro.core.approx_gemm import GemmParams, cim_matmul, plan_gemm
-from repro.core.multipliers import MultiplierSpec
+from repro.core import approx_gemm, autotune, energy_model
+from repro.core.approx_gemm import (GemmParams, cim_matmul, model_matmul,
+                                    plan_gemm, trace_count)
 from repro.kernels import ops
 
-OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                        "BENCH_kernels.json")
+_DIR = os.path.dirname(os.path.abspath(__file__))
+OUT_PATH = os.path.join(_DIR, "BENCH_kernels.json")
+DISPATCH_PATH = os.path.join(_DIR, "BENCH_dispatch.json")
+# smoke mode (tiny shapes, 1 rep — CI rot check) writes to separate
+# paths so it can never clobber the committed trajectory artifacts
+OUT_PATH_SMOKE = os.path.join(_DIR, "BENCH_kernels.smoke.json")
+DISPATCH_PATH_SMOKE = os.path.join(_DIR, "BENCH_dispatch.smoke.json")
 
-# (family, mode) rows exercising every registry entry reachable on this
-# backend; shapes kept modest so interpret mode stays sub-second per row
+# (family, mode, n_approx_cols) rows exercising every registry entry
+# reachable on this backend; shapes kept modest so interpret mode stays
+# sub-second per row.  appro42/4c routes to the nibble kernel (its
+# approximated columns fit the low half-word); appro42 default (8c)
+# exercises the full-LUT k-sliced fallback.
 ROWS = [
-    ("exact", "exact"),              # mxu_dot
-    ("appro42", "bit_exact"),        # jnp_lut
-    ("exact", "hardware"),           # pallas_lut_gather
-    ("appro42", "hardware"),         # pallas_lut_gather
-    ("mitchell", "hardware"),        # pallas_log
-    ("log_our", "hardware"),         # pallas_log
-    ("log_our", "surrogate"),        # xla_surrogate / pallas fused on TPU
-    ("log_our", "surrogate_fast"),   # xla_surrogate rank-1 variant
-    ("log_our", "pallas_surrogate"),  # fused kernel, forced (interpret off-TPU)
+    ("exact", "exact", None),            # mxu_dot
+    ("appro42", "bit_exact", None),      # jnp_lut
+    ("exact", "hardware", None),         # pallas_lut_nibble
+    ("appro42", "hardware", None),       # pallas_lut_gather (fallback)
+    ("appro42", "hardware", 4),          # pallas_lut_nibble (appro42/4c)
+    ("mitchell", "hardware", None),      # pallas_log
+    ("log_our", "hardware", None),       # pallas_log
+    ("log_our", "surrogate", None),      # xla_surrogate / pallas fused on TPU
+    ("log_our", "surrogate_fast", None),  # xla_surrogate rank-1 variant
+    ("log_our", "pallas_surrogate", None),  # fused kernel, forced
 ]
 
 SHAPES = [(64, 64, 64), (128, 128, 128)]
 SHAPES_FULL = SHAPES + [(256, 256, 256)]
+SHAPES_SMOKE = [(16, 16, 16)]
+
+DEFAULT_REPS = 5
 
 
-def _median_time(fn, reps: int = 3) -> float:
-    jax.block_until_ready(fn())                    # compile + warm
+def _timeit(fn, reps: int = DEFAULT_REPS):
+    """(us_first_call, us_per_call): first call (compile + trace)
+    measured separately; steady state is the MEDIAN over `reps` calls,
+    each blocked on individually so async dispatch can't hide work."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    first = time.perf_counter() - t0
     ts = []
-    for _ in range(reps):
+    for _ in range(max(1, reps)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return first * 1e6, float(np.median(ts)) * 1e6
 
 
-def _surrogate_macro(family: str):
+def _lut_bytes(kernel: str, bits: int = 8) -> int:
+    if kernel in ("pallas_lut_gather", "jnp_lut"):
+        return 4 * (1 << (2 * bits))           # full signed-product table
+    if kernel == "pallas_lut_nibble":
+        return 4 * 4 * (1 << bits)             # four 2^{b/2} x 2^{b/2} subs
+    return 0
+
+
+def _pipeline_bytes(kernel: str, m: int, k: int, n: int,
+                    fused: bool) -> int:
+    """Ideal HBM traffic of the full GEMM pipeline (see module doc)."""
+    f32_in = 4 * (m * k + k * n)
+    int8_rt = 2 * (m * k + k * n)              # int8 write + read back
+    out = 4 * m * n
+    lut = _lut_bytes(kernel)
+    scales = 4 * (n + 1)
+    if kernel == "mxu_dot":
+        # quantize-dequantize fuses into the dot read on XLA
+        return f32_in + out
+    if kernel == "xla_surrogate":
+        # D and SQ are two separate contractions over the operands
+        return 2 * f32_in + out
+    if kernel == "pallas_fused_surrogate":
+        eps = 4 * m * n
+        if fused:
+            return f32_in + out + eps + scales
+        return f32_in + int8_rt + 3 * out + eps + scales
+    # LUT / log hardware kernels
+    if fused:
+        return f32_in + out + lut + scales
+    # pre-fusion pipeline: f32 quantize pass, int8 round trip, int32
+    # accumulator written then re-read by the XLA dequant epilogue
+    return f32_in + int8_rt + lut + 3 * out + scales
+
+
+def _surrogate_macro(family: str, n_approx_cols=None):
     from repro.core import CiMConfig, compile_macro
 
-    return compile_macro(CiMConfig(family=family, bits=8))
+    return compile_macro(CiMConfig(family=family, bits=8,
+                                   n_approx_cols=n_approx_cols))
 
 
-def _bench_row(family: str, mode: str, shape) -> dict:
+def _bench_row(family: str, mode: str, shape, nac=None,
+               reps: int = DEFAULT_REPS) -> dict:
     m, k, n = shape
-    rng = np.random.default_rng(0)
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (m, k))
     w = jax.random.normal(kw, (k, n))
+    label = family if nac is None else f"{family}[{nac}c]"
 
     if mode == "pallas_surrogate":
         # force the fused Pallas surrogate (off-TPU it would otherwise
         # route to the XLA twin); interpret mode documents the semantics
-        xq = jnp.asarray(rng.integers(-127, 128, (m, k), dtype=np.int8))
-        wq = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int8))
-        sx = jnp.float32(0.01)
-        sw = jnp.full((n,), 0.01, jnp.float32)
         eps = jax.random.normal(jax.random.PRNGKey(1), (m, n))
-        macro = _surrogate_macro(family)
+        macro = _surrogate_macro(family, nac)
         gp = macro.gemm_params("surrogate")
         block = autotune.best_block("pallas_fused_surrogate", 8, m, k, n)
 
         def fn():
-            return ops.surrogate_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0,
-                                      gp.c1, block=block)
+            return ops.surrogate_gemm_fused(x, w, eps, gp.mu, gp.c0,
+                                            gp.c1, block=block)
 
         entry_name, block_used, interpret = ("pallas_fused_surrogate",
                                              block, ops.default_interpret())
     else:
-        macro = _surrogate_macro(family)
+        macro = _surrogate_macro(family, nac)
         gp = macro.gemm_params(mode)
-        plan = plan_gemm(family, mode, 8, m, k, n)
+        plan = plan_gemm(family, mode, 8, m, k, n, spec=gp.spec)
         key = jax.random.PRNGKey(2)
 
         def fn():
@@ -110,50 +178,61 @@ def _bench_row(family: str, mode: str, shape) -> dict:
         entry_name, block_used, interpret = (plan.entry.name, plan.block,
                                              plan.interpret)
 
-    us = _median_time(fn) * 1e6
+    first_us, us = _timeit(fn, reps)
     flops = 2.0 * m * k * n
-    bytes_moved = m * k + k * n + 4 * m * n          # int8 in, f32 out
-    if entry_name in ("pallas_lut_gather", "jnp_lut"):
-        bytes_moved += 4 * (1 << 16)                 # the 256 KiB LUT
+    fused = entry_name in ("pallas_lut_gather", "pallas_lut_nibble",
+                           "pallas_log", "pallas_fused_surrogate")
+    bytes_moved = _pipeline_bytes(entry_name, m, k, n, fused=fused)
     gflops = flops / (us * 1e-6) / 1e9
-    return {
+    rec = {
         "kernel": entry_name,
-        "family": family,
+        "family": label,
         "mode": mode if mode != "pallas_surrogate" else "surrogate",
         "shape": [m, k, n],
         "block": list(block_used) if block_used else None,
         "backend": jax.default_backend(),
         "interpret": bool(interpret),
         "us_per_call": round(us, 1),
+        "us_first_call": round(first_us, 1),
+        "reps": reps,
         "gflops": round(gflops, 3),
         "bytes_moved": int(bytes_moved),
         "ai_flops_byte": round(flops / bytes_moved, 2),
         "energy_per_mac_pj": round(
             energy_model.energy_per_mac_j(family, 8) * 1e12, 3),
     }
+    if fused:
+        rec["bytes_moved_unfused"] = int(
+            _pipeline_bytes(entry_name, m, k, n, fused=False))
+    return rec
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, smoke: bool = False, reps: int = DEFAULT_REPS):
     """Benchmark every kernel; write BENCH_kernels.json; return CSV rows
     in the (name, us_per_call, derived) shape benchmarks/run.py prints."""
-    shapes = SHAPES if fast else SHAPES_FULL
+    if smoke:
+        shapes, reps = SHAPES_SMOKE, 1
+    else:
+        shapes = SHAPES if fast else SHAPES_FULL
     records = []
-    for family, mode in ROWS:
+    for family, mode, nac in ROWS:
         for shape in shapes:
             try:
-                records.append(_bench_row(family, mode, shape))
+                records.append(_bench_row(family, mode, shape, nac, reps))
             except Exception as e:  # noqa: BLE001 — keep the sweep alive
                 records.append({"kernel": mode, "family": family,
                                 "shape": list(shape),
                                 "error": f"{type(e).__name__}: {e}"})
     payload = {
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
         "device": str(jax.devices()[0]),
         "shapes": [list(s) for s in shapes],
+        "smoke": smoke,
+        "bytes_accounting": "pipeline-v2 (see benchmarks/README.md)",
         "records": records,
     }
-    with open(OUT_PATH, "w") as fh:
+    with open(OUT_PATH_SMOKE if smoke else OUT_PATH, "w") as fh:
         json.dump(payload, fh, indent=1)
     rows = []
     for r in records:
@@ -167,9 +246,103 @@ def run(fast: bool = True):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Dispatch-engine latency: cached executables vs retrace-per-call
+# ---------------------------------------------------------------------------
+
+DISPATCH_ROWS = [
+    ("exact", "exact"),            # mxu_dot: dispatch overhead dominates
+    ("appro42", "hardware"),       # Pallas kernel behind the cache
+    ("log_our", "surrogate"),      # stochastic epilogue + noise key
+]
+
+
+def _dispatch_row(family: str, mode: str, shape, frontend: str,
+                  reps_cached: int, reps_retrace: int) -> dict:
+    m, k, n = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    macro = _surrogate_macro(family)
+    gp = macro.gemm_params(mode)
+    key = jax.random.PRNGKey(2)
+    front = cim_matmul if frontend == "cim" else model_matmul
+
+    def cached():
+        return front(x, w, gp, key)
+
+    def retrace():
+        return front(x, w, gp, key, cached=False)
+
+    first_us, us_cached = _timeit(cached, reps_cached)
+    t0 = trace_count()
+    jax.block_until_ready(cached())
+    steady_retraces = trace_count() - t0
+    _, us_retrace = _timeit(retrace, reps_retrace)
+    return {
+        "frontend": frontend,
+        "family": family,
+        "mode": mode,
+        "shape": [m, k, n],
+        "us_cached": round(us_cached, 1),
+        "us_first_call": round(first_us, 1),
+        "us_retrace_per_call": round(us_retrace, 1),
+        "speedup": round(us_retrace / us_cached, 2),
+        "steady_state_retraces": steady_retraces,   # must be 0
+        "backend": jax.default_backend(),
+    }
+
+
+def run_dispatch(fast: bool = True, smoke: bool = False):
+    """Benchmark eager-call dispatch latency; write BENCH_dispatch.json."""
+    if smoke:
+        shapes, rc, rr = SHAPES_SMOKE, 3, 1
+    else:
+        # enough repeats for stable medians: the cached path is O(100us)
+        # per call, so short sampling windows are noise-dominated
+        shapes = SHAPES if fast else SHAPES_FULL
+        rc, rr = 100, 20
+    records = []
+    for family, mode in DISPATCH_ROWS:
+        for shape in shapes:
+            for frontend in ("cim", "model"):
+                try:
+                    records.append(_dispatch_row(family, mode, shape,
+                                                 frontend, rc, rr))
+                except Exception as e:  # noqa: BLE001
+                    records.append({"frontend": frontend, "family": family,
+                                    "mode": mode, "shape": list(shape),
+                                    "error": f"{type(e).__name__}: {e}"})
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "smoke": smoke,
+        "executable_cache_entries": approx_gemm.executable_cache_size(),
+        "records": records,
+    }
+    with open(DISPATCH_PATH_SMOKE if smoke else DISPATCH_PATH, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    rows = []
+    for r in records:
+        if "error" in r:
+            rows.append((f"disp_{r['frontend']}_{r['family']}", 0.0,
+                         f"ERROR:{r['error'].split(':')[0]}"))
+            continue
+        shape = "x".join(map(str, r["shape"]))
+        rows.append((f"disp_{r['frontend']}_{r['family']}_{r['mode']}_{shape}",
+                     r["us_cached"], f"{r['speedup']}x_vs_retrace"))
+    return rows
+
+
 if __name__ == "__main__":
     import sys
 
-    for name, us, derived in run(fast="--full" not in sys.argv):
+    smoke = "--smoke" in sys.argv
+    fast = "--full" not in sys.argv
+    for name, us, derived in run(fast=fast, smoke=smoke):
         print(f"{name},{us:.1f},{derived}")
-    print(f"wrote {OUT_PATH}")
+    for name, us, derived in run_dispatch(fast=fast, smoke=smoke):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {OUT_PATH_SMOKE if smoke else OUT_PATH}")
+    print(f"wrote {DISPATCH_PATH_SMOKE if smoke else DISPATCH_PATH}")

@@ -1,10 +1,12 @@
 """Benchmark driver: one entry per paper table, the roofline report and
-the per-kernel GEMM harness (bench_kernels -> BENCH_kernels.json).
-Prints ``name,us_per_call,derived`` CSV at the end.
+the per-kernel GEMM harnesses (bench_kernels -> BENCH_kernels.json +
+BENCH_dispatch.json).  Prints ``name,us_per_call,derived`` CSV at the
+end.
 
 Flags:
   --fast      skip the slow CNN table; smaller kernel shape sweep
-  --kernels   run only the kernel harness (still writes the JSON)
+  --kernels   run only the kernel harness (still writes the JSONs)
+  --smoke     tiny shapes, 1 repeat (CI rot check for the harness)
 """
 
 from __future__ import annotations
@@ -18,10 +20,11 @@ def main() -> None:
                             table3_psnr, table4_cnn, table5_yield)
 
     fast = "--fast" in sys.argv
+    smoke = "--smoke" in sys.argv
     mods = [table2_ppa, table3_psnr, table4_cnn, table5_yield, roofline]
     if fast:
         mods = [table2_ppa, table3_psnr, table5_yield, roofline]
-    if "--kernels" in sys.argv:
+    if "--kernels" in sys.argv or smoke:
         mods = []
     rows = []
     for mod in mods:
@@ -31,12 +34,24 @@ def main() -> None:
             traceback.print_exc()
             rows.append((mod.__name__.split(".")[-1], 0.0,
                          f"ERROR:{type(e).__name__}"))
+    kern_path = (bench_kernels.OUT_PATH_SMOKE if smoke
+                 else bench_kernels.OUT_PATH)
+    disp_path = (bench_kernels.DISPATCH_PATH_SMOKE if smoke
+                 else bench_kernels.DISPATCH_PATH)
     try:
-        rows.extend(bench_kernels.run(fast=fast or "--kernels" in sys.argv))
-        print(f"kernel records -> {bench_kernels.OUT_PATH}")
+        rows.extend(bench_kernels.run(fast=fast or "--kernels" in sys.argv,
+                                      smoke=smoke))
+        print(f"kernel records -> {kern_path}")
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_kernels", 0.0, f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(bench_kernels.run_dispatch(
+            fast=fast or "--kernels" in sys.argv, smoke=smoke))
+        print(f"dispatch records -> {disp_path}")
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_dispatch", 0.0, f"ERROR:{type(e).__name__}"))
     if mods:
         try:
             rows.extend(roofline.energy_report())

@@ -7,10 +7,13 @@ Execution modes (per DESIGN.md §2):
                           multiplier LUT (validation scale; pure-jnp
                           gather, O(M*K*N) memory).
   * ``hardware``        — the same integer semantics executed by the
-                          Pallas TPU kernels: LUT-gather for the
-                          compressor-tree families, the arithmetic
-                          log-domain kernel for mitchell/log_our.
-                          Autotuned block sizes; interpret mode off-TPU.
+                          Pallas TPU kernels: nibble-decomposed sub-LUT
+                          gather when the family's table factorizes
+                          bit-exactly (core/luts.nibble_sub_luts),
+                          k-sliced full-LUT gather otherwise, the
+                          arithmetic log-domain kernel for
+                          mitchell/log_our.  Autotuned block sizes;
+                          interpret mode off-TPU.
   * ``surrogate``       — MXU dot + calibrated error model:
                           (1+mu)*D + sigma*sqrt(A^2@B^2)*eps.
                           On TPU this dispatches to the fused Pallas
@@ -23,7 +26,8 @@ Execution modes (per DESIGN.md §2):
 
 Every (family, mode, bits, backend) combination is routed by a single
 **kernel registry** (DESIGN.md §8): `select_kernel` picks the
-highest-priority `KernelEntry` that supports the request, `plan_gemm`
+highest-priority `KernelEntry` that supports the request (entries may
+carry a per-spec predicate, e.g. nibble decomposability), `plan_gemm`
 attaches an autotuned block size (core/autotune.py), and the two float
 frontends execute the plan:
 
@@ -33,10 +37,24 @@ frontends execute the plan:
                      fake-quant STE (QAT), activation dtype preserved,
                      rademacher surrogate noise (see models/common.py).
 
-Both share the registry, the integer kernel runners and the surrogate
-variance law, so a new kernel registered here is immediately available
-to the compiler facade, every model layer, the benchmarks and the
-dispatch tests.
+**Zero-retrace execution** (DESIGN.md §8): both frontends resolve their
+work through a module-level *executable cache* keyed on
+(frontend, GemmParams, routed plan, stochasticity/noise flags, operand
+dtypes, power-of-two-bucketed shape, backend).  Each cache entry is a
+pre-built jitted STE-wrapped function, so a steady-state eager call is
+a dict hit + XLA executable-cache hit — no per-call `jax.custom_vjp`
+closure construction and no retrace.  `select_kernel`/`plan_gemm` are
+memoized for the same reason.  `trace_count()` exposes a probe that
+increments once per actual trace (tests assert it stays flat on cache
+hits); `cached=False` reproduces the legacy build-a-closure-per-call
+path (the benchmark baseline, benchmarks/bench_kernels.py).
+
+The Pallas-backed paths run **fused-quantization kernels**: float
+operands in, float out, with symmetric int quantization on tile load
+and the `(acc * sx) * sw` dequant epilogue on flush inside one
+`pallas_call` (kernels/approx_matmul.py, mitchell_gemm.py,
+cim_gemm.py).  The int-in runners (`run_int_kernel`) remain the
+registry-oracle surface validated bit-for-bit against kernels/ref.py.
 
 Backward pass everywhere is a straight-through estimator (exact float
 VJP), the standard choice for approximate/quantized training.
@@ -46,6 +64,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -53,7 +72,7 @@ import jax.numpy as jnp
 
 from . import autotune
 from .error_model import SurrogateModel
-from .luts import MAX_LUT_BITS, signed_product_lut
+from .luts import MAX_LUT_BITS, nibble_decomposable, signed_product_lut
 from .multipliers import MultiplierSpec
 from .quantization import dequantize, fake_quant, quant_scale, quantize
 
@@ -87,6 +106,13 @@ class KernelEntry:
     oracle: str = ""                   # kernels/ref.py oracle it must match
     bound: str = "bit"                 # "bit" | "fp32" | "stochastic"
     description: str = ""
+    # Optional per-spec routing gate (beyond family/mode/bits), e.g.
+    # nibble decomposability.  Entries with a predicate are only
+    # eligible when the caller supplies a MultiplierSpec and the
+    # predicate accepts it.  compare=False keeps the dataclass
+    # hashable/eq on structural fields only.
+    predicate: Optional[Callable[[MultiplierSpec], bool]] = dataclasses.field(
+        default=None, compare=False)
 
     def supports(self, family: str, mode: str, bits: int,
                  backend: str) -> bool:
@@ -103,6 +129,10 @@ def register_kernel(entry: KernelEntry) -> KernelEntry:
     if entry.name in _REGISTRY:
         raise ValueError(f"kernel {entry.name!r} already registered")
     _REGISTRY[entry.name] = entry
+    try:
+        clear_dispatch_caches()    # late registration invalidates routing
+    except NameError:
+        pass                       # module import: caches not built yet
     return entry
 
 
@@ -122,7 +152,14 @@ register_kernel(KernelEntry(
     name="pallas_lut_gather", modes=("hardware",),
     families=("exact", "appro42"), backends=(), max_bits=8,
     pallas=True, autotuned=True, oracle="lut_matmul_ref", bound="bit",
-    description="Pallas fused LUT-gather kernel (any LUT family)"))
+    description="Pallas k-sliced LUT-gather kernel (any LUT family)"))
+register_kernel(KernelEntry(
+    name="pallas_lut_nibble", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), priority=20, max_bits=8,
+    pallas=True, autotuned=True, oracle="lut_matmul_ref", bound="bit",
+    predicate=nibble_decomposable,
+    description="Pallas nibble-decomposed kernel (4 x 2^{b/2} sub-LUTs; "
+                "bit-exactness verified at LUT build time)"))
 register_kernel(KernelEntry(
     name="pallas_log", modes=("hardware",),
     families=("mitchell", "log_our"), backends=(), priority=10,
@@ -140,22 +177,36 @@ register_kernel(KernelEntry(
     description="XLA dot + calibrated noise epilogue (surrogate twin)"))
 
 
-def select_kernel(family: str, mode: str, bits: int = 8,
-                  backend: Optional[str] = None) -> KernelEntry:
-    """Route one (family, mode, bits, backend) request to a kernel."""
-    if mode not in MODES:
-        raise ValueError(f"mode {mode!r} not in {MODES}")
-    if family not in FAMILIES:
-        raise ValueError(f"family {family!r} not in {FAMILIES}")
-    backend = backend or jax.default_backend()
+@functools.lru_cache(maxsize=1024)
+def _select_kernel_cached(family: str, mode: str, bits: int, backend: str,
+                          spec: Optional[MultiplierSpec]) -> KernelEntry:
     matches = [e for e in _REGISTRY.values()
-               if e.supports(family, mode, bits, backend)]
+               if e.supports(family, mode, bits, backend)
+               and (e.predicate is None
+                    or (spec is not None and e.predicate(spec)))]
     if not matches:
         raise ValueError(
             f"no kernel for family={family!r} mode={mode!r} bits={bits} "
             f"backend={backend!r}; registered: "
             f"{sorted(_REGISTRY)}")
     return max(matches, key=lambda e: e.priority)
+
+
+def select_kernel(family: str, mode: str, bits: int = 8,
+                  backend: Optional[str] = None,
+                  spec: Optional[MultiplierSpec] = None) -> KernelEntry:
+    """Route one (family, mode, bits, backend) request to a kernel.
+
+    `spec` unlocks predicate-gated entries (the nibble kernel); without
+    it routing is conservative and predicate entries are skipped.
+    Memoized — steady-state routing is a dict hit, not a registry scan.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    return _select_kernel_cached(family, mode, bits, backend, spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,22 +219,42 @@ class GemmPlan:
     backend: str
 
 
-def plan_gemm(family: str, mode: str, bits: int, m: int, k: int, n: int,
-              backend: Optional[str] = None,
-              interpret: Optional[bool] = None,
-              block: Optional[Tuple[int, int, int]] = None) -> GemmPlan:
-    """select_kernel + autotuned block size for the concrete shape."""
-    backend = backend or jax.default_backend()
-    entry = select_kernel(family, mode, bits, backend)
+@functools.lru_cache(maxsize=2048)
+def _plan_gemm_cached(family: str, mode: str, bits: int, mb: int, kb: int,
+                      nb: int, backend: str, interpret: Optional[bool],
+                      block: Optional[Tuple[int, int, int]],
+                      spec: Optional[MultiplierSpec]) -> GemmPlan:
+    entry = _select_kernel_cached(family, mode, bits, backend, spec)
     if interpret is None:
         # only meaningful for real Pallas kernels; XLA/jnp executors run
         # natively everywhere (the bench JSON relies on this distinction)
         interpret = entry.pallas and backend != "tpu"
     if block is None and entry.autotuned:
-        block = autotune.best_block(entry.name, bits, m, k, n,
+        block = autotune.best_block(entry.name, bits, mb, kb, nb,
                                     backend=backend)
     return GemmPlan(entry=entry, block=block, interpret=interpret,
                     backend=backend)
+
+
+def plan_gemm(family: str, mode: str, bits: int, m: int, k: int, n: int,
+              backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              block: Optional[Tuple[int, int, int]] = None,
+              spec: Optional[MultiplierSpec] = None) -> GemmPlan:
+    """select_kernel + autotuned block size for the concrete shape.
+
+    Memoized on the power-of-two-bucketed shape (autotune.bucket): one
+    plan serves a whole family of nearby GEMMs, and block resolution is
+    bucket-invariant by construction (autotune keys the same way).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    return _plan_gemm_cached(family, mode, bits, autotune.bucket(m),
+                             autotune.bucket(k), autotune.bucket(n),
+                             backend, interpret, block, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +290,7 @@ class GemmParams:
 
 
 # ---------------------------------------------------------------------------
-# Integer-domain kernel runners (one per registry entry with int core)
+# Integer-domain kernel runners (the registry-oracle surface)
 # ---------------------------------------------------------------------------
 
 
@@ -257,6 +328,13 @@ def _run_pallas_lut(xq, wq, gp: GemmParams, plan: GemmPlan):
                       block=plan.block, interpret=plan.interpret)
 
 
+def _run_pallas_nibble(xq, wq, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels import ops
+
+    return ops.nibble_matmul_bit_exact(xq, wq, gp.spec, block=plan.block,
+                                       interpret=plan.interpret)
+
+
 def _run_pallas_log(xq, wq, gp: GemmParams, plan: GemmPlan):
     from repro.kernels.mitchell_gemm import mitchell_matmul
 
@@ -269,6 +347,7 @@ def _run_pallas_log(xq, wq, gp: GemmParams, plan: GemmPlan):
 INT_RUNNERS: Dict[str, Callable] = {
     "jnp_lut": _run_jnp_lut,
     "pallas_lut_gather": _run_pallas_lut,
+    "pallas_lut_nibble": _run_pallas_nibble,
     "pallas_log": _run_pallas_log,
 }
 
@@ -281,6 +360,42 @@ def run_int_kernel(plan: GemmPlan, xq, wq, gp: GemmParams):
         raise ValueError(
             f"kernel {plan.entry.name!r} has no integer runner") from None
     return runner(xq, wq, gp, plan)
+
+
+# ---------------------------------------------------------------------------
+# Fused-quantization runners (f32 in -> f32 out, one pallas_call)
+# ---------------------------------------------------------------------------
+
+
+def _run_fused_lut(xf, wf, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels import ops
+
+    return ops.approx_matmul_fused(xf, wf, gp.spec, block=plan.block,
+                                   interpret=plan.interpret)
+
+
+def _run_fused_nibble(xf, wf, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels import ops
+
+    return ops.nibble_matmul_fused(xf, wf, gp.spec, block=plan.block,
+                                   interpret=plan.interpret)
+
+
+def _run_fused_log(xf, wf, gp: GemmParams, plan: GemmPlan):
+    from repro.kernels import ops
+
+    return ops.log_matmul_fused(xf, wf, bits=gp.bits,
+                                compensated=(gp.family == "log_our"),
+                                block=plan.block, interpret=plan.interpret)
+
+
+# entry name -> f32 (M,K) x f32 (K,N) -> f32 (M,N); quantization and the
+# (acc * sx) * sw epilogue run inside the kernel (DESIGN.md §8)
+FUSED_RUNNERS: Dict[str, Callable] = {
+    "pallas_lut_gather": _run_fused_lut,
+    "pallas_lut_nibble": _run_fused_nibble,
+    "pallas_log": _run_fused_log,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -318,7 +433,7 @@ def surrogate_noise(key, shape, dtype, kind: str = NOISE_KIND):
 
 
 # ---------------------------------------------------------------------------
-# Macro frontend: cim_matmul / approx_matmul (f32 out, true quantization)
+# Quantization + STE plumbing (shared by both frontends)
 # ---------------------------------------------------------------------------
 
 
@@ -348,56 +463,333 @@ def _ste_matmul(forward):
     return f
 
 
-def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
-               key: Optional[jax.Array] = None, *,
-               noise_kind: str = "normal",
-               interpret: Optional[bool] = None,
-               block: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
-    """Dispatch + execute one approximate GEMM (macro semantics).
+def _ste_matmul_eps(forward):
+    """STE wrapper for a (xf, wf, eps) -> out forward; the pre-drawn
+    surrogate noise rides through with a zero cotangent."""
 
-    x: (..., K) float; w: (K, N) float.  Returns float32 (..., N) with
-    straight-through exact gradients.
-    """
-    if gp.mode not in MODES:
-        raise ValueError(f"mode {gp.mode!r} not in {MODES}")
-    lead = x.shape[:-1]
-    xf2 = x.reshape((-1, x.shape[-1]))
-    m, k = xf2.shape
-    n = w.shape[-1]
-    plan = plan_gemm(gp.family, gp.mode, gp.bits, m, k, n,
-                     interpret=interpret, block=block)
+    @jax.custom_vjp
+    def f(xf, wf, eps):
+        return forward(xf, wf, eps)
 
-    def _forward(xf, wf):
-        xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
-        if gp.mode in ("bit_exact", "hardware"):
-            acc = run_int_kernel(plan, xq, wq, gp)
-            return (acc.astype(jnp.float32) * sx) * sw
-        if gp.mode == "exact":
+    def fwd(xf, wf, eps):
+        return forward(xf, wf, eps), (xf, wf, eps)
+
+    def bwd(res, g):
+        xf, wf, eps = res
+        return ((g @ wf.T).astype(xf.dtype), (xf.T @ g).astype(wf.dtype),
+                jnp.zeros_like(eps))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# Trace probe: bumps once per actual trace of a frontend forward (i.e.
+# per executable build / shape specialization), never on a steady-state
+# cache-hit call.  tests/test_dispatch.py asserts it stays flat.
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT[0]
+
+
+def _mark_trace() -> None:
+    _TRACE_COUNT[0] += 1
+
+
+# ---------------------------------------------------------------------------
+# Forward builders (shared by the cached and legacy-uncached paths)
+# ---------------------------------------------------------------------------
+
+
+def _cim_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
+                 stochastic: bool, fused: bool):
+    """(forward, takes_eps) for the macro frontend.  `fused=False`
+    reproduces the pre-cache pipeline (separate quantize/epilogue XLA
+    passes around the int kernels) — kept as the benchmark baseline."""
+    mode = gp.mode
+    if mode == "exact":
+        def forward(xf, wf):
+            _mark_trace()
+            xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
             return dequantize(xq, sx) @ dequantize(wq, sw)
-        # surrogate / surrogate_fast
-        scale2 = (sx * sw) ** 2                    # (1, N): per-out-channel
-        eps = None
-        if key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0):
-            eps = surrogate_noise(key, (xf.shape[0], wf.shape[-1]),
-                                  jnp.float32, noise_kind)
-        if plan.entry.name == "pallas_fused_surrogate":
-            from repro.kernels.cim_gemm import cim_gemm
+        return forward, False
 
-            return cim_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0, gp.c1,
-                            block=plan.block, interpret=plan.interpret)
+    if mode in ("bit_exact", "hardware"):
+        if fused and plan.entry.name in FUSED_RUNNERS:
+            runner = FUSED_RUNNERS[plan.entry.name]
+
+            def forward(xf, wf):
+                _mark_trace()
+                return runner(xf.astype(jnp.float32),
+                              wf.astype(jnp.float32), gp, plan)
+        else:
+            def forward(xf, wf):
+                _mark_trace()
+                xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
+                acc = run_int_kernel(plan, xq, wq, gp)
+                return (acc.astype(jnp.float32) * sx) * sw
+        return forward, False
+
+    # surrogate / surrogate_fast
+    if plan.entry.name == "pallas_fused_surrogate":
+        from repro.kernels.cim_gemm import cim_gemm_fused
+
+        def forward(xf, wf, eps=None):
+            _mark_trace()
+            return cim_gemm_fused(xf.astype(jnp.float32),
+                                  wf.astype(jnp.float32), eps, gp.mu,
+                                  gp.c0, gp.c1, bits=gp.bits,
+                                  block=plan.block,
+                                  interpret=plan.interpret)
+        return forward, stochastic
+
+    def forward(xf, wf, eps=None):
+        _mark_trace()
+        xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
         xdq = dequantize(xq, sx)
         wdq = dequantize(wq, sw)
-        d = xdq @ wdq
-        out = (1.0 + gp.mu) * d
+        out = (1.0 + gp.mu) * (xdq @ wdq)
         if eps is not None:
-            var = surrogate_variance(gp, scale2, k, xdq, wdq,
+            scale2 = (sx * sw) ** 2                # (1, N): per-out-channel
+            var = surrogate_variance(gp, scale2, xf.shape[-1], xdq, wdq,
                                      fast=(gp.mode == "surrogate_fast"))
             if var is not None:
                 out = out + jnp.sqrt(jnp.maximum(var, 0.0)) * eps
         return out
 
-    out = _ste_matmul(_forward)(xf2, w)
-    return out.reshape(lead + (w.shape[-1],))
+    return forward, stochastic
+
+
+def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
+                   stochastic: bool, apply: bool, fused: bool):
+    """Model-frontend forward.  Returns ("ste", forward, takes_eps) for
+    kernel-backed rank-2 paths or ("plain", fn, needs_key) for the
+    fake-quant XLA paths (gradients flow through the quantizer)."""
+    if apply and gp.mode in ("bit_exact", "hardware"):
+        if fused and plan.entry.name in FUSED_RUNNERS:
+            runner = FUSED_RUNNERS[plan.entry.name]
+
+            def forward(x2, wf):
+                _mark_trace()
+                out = runner(x2.astype(jnp.float32),
+                             wf.astype(jnp.float32), gp, plan)
+                return out.astype(x2.dtype)
+        else:
+            def forward(x2, wf):
+                _mark_trace()
+                xq, sx, wq, sw = _quantize_operands(
+                    x2.astype(jnp.float32), wf.astype(jnp.float32), gp.bits)
+                acc = run_int_kernel(plan, xq, wq, gp)
+                out = (acc.astype(jnp.float32) * sx) * sw
+                return out.astype(x2.dtype)
+        return "ste", forward, False
+
+    if apply and plan.entry.name == "pallas_fused_surrogate":
+        # TPU production path: one HBM pass computes D and A^2@B^2 fused
+        from repro.kernels.cim_gemm import cim_gemm_fused
+
+        def forward(x2, wf, eps=None):
+            _mark_trace()
+            out = cim_gemm_fused(x2.astype(jnp.float32),
+                                 wf.astype(jnp.float32), eps, gp.mu,
+                                 gp.c0, gp.c1, bits=gp.bits,
+                                 block=plan.block, interpret=plan.interpret)
+            return out.astype(x2.dtype)
+        return "ste", forward, stochastic
+
+    # exact / surrogate paths: fake-quant QAT form.  fake-quant the
+    # weight in ITS dtype: an f32 upcast here gets hoisted out of the
+    # layer scan by XLA and materializes the whole stacked weight in f32
+    # (54 GB/instance at 671B, EXPERIMENTS.md §Perf).
+    def fn(x, w, key=None):
+        _mark_trace()
+        xq = fake_quant(x, gp.bits)
+        wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
+        d = xq @ wq
+        if not apply or gp.mode == "exact":
+            # mixed-macro allocation / QAT baseline: exact int8 macro
+            return d
+        out = (1.0 + gp.mu) * d
+        if stochastic and key is not None:
+            k_len = x.shape[-1]
+            sx = quant_scale(jax.lax.stop_gradient(x), gp.bits)
+            sw = quant_scale(jax.lax.stop_gradient(w), gp.bits, axis=0)
+            scale2 = (sx * sw).astype(jnp.float32) ** 2
+            xf = wf = None
+            if gp.c1 > 0.0:
+                xf = jax.lax.stop_gradient(xq).astype(jnp.float32)
+                wf = jax.lax.stop_gradient(wq).astype(jnp.float32)
+            var = surrogate_variance(gp, scale2, k_len, xf, wf,
+                                     fast=(gp.mode == "surrogate_fast"))
+            if var is not None:
+                eps = surrogate_noise(key, d.shape, d.dtype, noise_kind)
+                out = out + jax.lax.stop_gradient(
+                    jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
+        return out
+
+    return "plain", fn, stochastic
+
+
+# ---------------------------------------------------------------------------
+# Executable cache (zero-retrace steady state, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: Dict[Tuple, Callable] = {}
+_EXEC_LOCK = threading.Lock()
+
+
+def _exec_key(frontend: str, gp: GemmParams, plan: GemmPlan,
+              stochastic: bool, noise_kind: str, apply: bool,
+              x, w, m: int, k: int, n: int) -> Tuple:
+    return (frontend, gp, plan.entry.name, plan.block, plan.interpret,
+            plan.backend, stochastic, noise_kind, apply,
+            x.dtype, w.dtype, x.ndim,
+            autotune.bucket(m), autotune.bucket(k), autotune.bucket(n))
+
+
+def _wrap_ste(forward: Callable, takes_eps: bool,
+              noise_kind: str) -> Callable:
+    """Jit an STE-wrapped rank-2 forward behind a flatten/restore shell;
+    stochastic variants draw the noise from an explicit key argument
+    (zero-cotangent through the STE).  Shared by both frontends."""
+    if takes_eps:
+        ste = _ste_matmul_eps(forward)
+
+        @jax.jit
+        def run(x, w, key):
+            x2 = x.reshape((-1, x.shape[-1]))
+            eps = surrogate_noise(key, (x2.shape[0], w.shape[-1]),
+                                  jnp.float32, noise_kind)
+            out = ste(x2, w, eps)
+            return out.reshape(x.shape[:-1] + (w.shape[-1],))
+    else:
+        ste = _ste_matmul(forward)
+
+        @jax.jit
+        def run(x, w):
+            x2 = x.reshape((-1, x.shape[-1]))
+            out = ste(x2, w)
+            return out.reshape(x.shape[:-1] + (w.shape[-1],))
+    return run
+
+
+def _build_executable(frontend: str, gp: GemmParams, plan: GemmPlan,
+                      stochastic: bool, noise_kind: str,
+                      apply: bool) -> Callable:
+    if frontend == "cim":
+        forward, takes_eps = _cim_forward(gp, plan, noise_kind, stochastic,
+                                          fused=True)
+        return _wrap_ste(forward, takes_eps, noise_kind)
+
+    kind, f, flag = _model_forward(gp, plan, noise_kind, stochastic, apply,
+                                   fused=True)
+    if kind == "plain":
+        if flag:                       # stochastic fake-quant path
+            @jax.jit
+            def run(x, w, key):
+                return f(x, w, key)
+        else:
+            @jax.jit
+            def run(x, w):
+                return f(x, w)
+        return run
+    return _wrap_ste(f, flag, noise_kind)
+
+
+def _executable_for(frontend: str, gp: GemmParams, plan: GemmPlan,
+                    stochastic: bool, noise_kind: str, apply: bool,
+                    x, w, m: int, k: int, n: int) -> Callable:
+    key = _exec_key(frontend, gp, plan, stochastic, noise_kind, apply,
+                    x, w, m, k, n)
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        with _EXEC_LOCK:
+            fn = _EXEC_CACHE.get(key)
+            if fn is None:
+                fn = _build_executable(frontend, gp, plan, stochastic,
+                                       noise_kind, apply)
+                _EXEC_CACHE[key] = fn
+    return fn
+
+
+def executable_cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+# Front cache: collapses a steady-state eager call's full resolution
+# (plan_gemm -> _exec_key -> executable) into ONE dict hit on a key of
+# cheap hashables — the per-call overhead on top of the jitted
+# executable is a tuple hash + dict get.  Values are (run, stochastic).
+_FAST_CACHE: Dict[Tuple, Tuple[Callable, bool]] = {}
+
+
+def clear_dispatch_caches() -> None:
+    """Drop the executable cache and the memoized routing tables (tests;
+    also invoked when the registry mutates)."""
+    with _EXEC_LOCK:
+        _EXEC_CACHE.clear()
+        _FAST_CACHE.clear()
+    _select_kernel_cached.cache_clear()
+    _plan_gemm_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Macro frontend: cim_matmul / approx_matmul (f32 out, true quantization)
+# ---------------------------------------------------------------------------
+
+
+def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
+               key: Optional[jax.Array] = None, *,
+               noise_kind: str = "normal",
+               interpret: Optional[bool] = None,
+               block: Optional[Tuple[int, int, int]] = None,
+               cached: bool = True) -> jnp.ndarray:
+    """Dispatch + execute one approximate GEMM (macro semantics).
+
+    x: (..., K) float; w: (K, N) float.  Returns float32 (..., N) with
+    straight-through exact gradients.  `cached=True` (default) executes
+    a pre-built jitted STE function from the module-level executable
+    cache — a steady-state eager call never retraces.  `cached=False`
+    rebuilds the closure per call (legacy behavior; benchmark baseline).
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = 1
+    for s in lead:
+        m *= int(s)
+    if cached:
+        fkey = ("cim", gp, x.dtype, w.dtype, x.ndim, autotune.bucket(m),
+                autotune.bucket(k), autotune.bucket(n), key is not None,
+                noise_kind, interpret, block, jax.default_backend())
+        hit = _FAST_CACHE.get(fkey)
+        if hit is not None:
+            run, stochastic = hit
+            return run(x, w, key) if stochastic else run(x, w)
+    if gp.mode not in MODES:
+        raise ValueError(f"mode {gp.mode!r} not in {MODES}")
+    plan = plan_gemm(gp.family, gp.mode, gp.bits, m, k, n,
+                     interpret=interpret, block=block, spec=gp.spec)
+    stochastic = (gp.mode in ("surrogate", "surrogate_fast")
+                  and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
+    if cached:
+        run = _executable_for("cim", gp, plan, stochastic, noise_kind,
+                              True, x, w, m, k, n)
+        with _EXEC_LOCK:
+            _FAST_CACHE[fkey] = (run, stochastic)
+        return run(x, w, key) if stochastic else run(x, w)
+
+    forward, takes_eps = _cim_forward(gp, plan, noise_kind, stochastic,
+                                      fused=False)
+    xf2 = x.reshape((-1, k))
+    if takes_eps:
+        eps = surrogate_noise(key, (xf2.shape[0], n), jnp.float32,
+                              noise_kind)
+        out = _ste_matmul_eps(forward)(xf2, w, eps)
+    else:
+        out = _ste_matmul(forward)(xf2, w)
+    return out.reshape(lead + (n,))
 
 
 def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, spec: MultiplierSpec,
@@ -421,14 +813,16 @@ def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, spec: MultiplierSpec,
 def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                  key: Optional[jax.Array] = None, *,
                  apply: bool = True,
-                 noise_kind: str = NOISE_KIND) -> jnp.ndarray:
+                 noise_kind: str = NOISE_KIND,
+                 cached: bool = True) -> jnp.ndarray:
     """The model-zoo execution path (cim_linear core), dispatcher-routed.
 
     Differences from `cim_matmul` (both deliberate, DESIGN.md §8):
     fake-quant STE (QAT: gradients flow through the quantizer), the
     activation dtype is preserved end-to-end (a bf16 stream stays bf16),
     and surrogate noise defaults to rademacher.  `apply=False` runs the
-    exact int8 macro (mixed-macro allocation, DESIGN.md §4).
+    exact int8 macro (mixed-macro allocation, DESIGN.md §4).  Executes
+    through the same zero-retrace executable cache as `cim_matmul`.
     """
     lead = x.shape[:-1]
     m = 1
@@ -436,66 +830,36 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
         m *= int(s)
     k = x.shape[-1]
     n = w.shape[-1]
-    plan = plan_gemm(gp.family, gp.mode if apply else "exact",
-                     gp.bits, m, k, n)
+    if cached:
+        fkey = ("model", gp, x.dtype, w.dtype, x.ndim, autotune.bucket(m),
+                autotune.bucket(k), autotune.bucket(n), key is not None,
+                noise_kind, apply, jax.default_backend())
+        hit = _FAST_CACHE.get(fkey)
+        if hit is not None:
+            run, stochastic = hit
+            return run(x, w, key) if stochastic else run(x, w)
+    mode = gp.mode if apply else "exact"
+    plan = plan_gemm(gp.family, mode, gp.bits, m, k, n, spec=gp.spec)
+    stochastic = (apply and gp.mode in ("surrogate", "surrogate_fast")
+                  and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
+    if cached:
+        run = _executable_for("model", gp, plan, stochastic, noise_kind,
+                              apply, x, w, m, k, n)
+        with _EXEC_LOCK:
+            _FAST_CACHE[fkey] = (run, stochastic)
+        return run(x, w, key) if stochastic else run(x, w)
 
-    # the STE custom_vjp's backward does xf.T @ g, so the kernel-backed
-    # branches must see a rank-2 x: flatten leading dims OUTSIDE the vjp
-    if gp.mode in ("bit_exact", "hardware") and apply:
-        def _forward(x2, wf):
-            xq, sx, wq, sw = _quantize_operands(x2.astype(jnp.float32),
-                                                wf.astype(jnp.float32),
-                                                gp.bits)
-            acc = run_int_kernel(plan, xq, wq, gp)
-            out = (acc.astype(jnp.float32) * sx) * sw
-            return out.astype(x2.dtype)
-
-        out = _ste_matmul(_forward)(x.reshape((-1, k)), w)
-        return out.reshape(lead + (n,))
-
-    if plan.entry.name == "pallas_fused_surrogate" and apply:
-        # TPU production path: one HBM pass computes D and A^2@B^2 fused
-        def _forward(x2, wf):
-            xq, sx, wq, sw = _quantize_operands(x2.astype(jnp.float32),
-                                                wf.astype(jnp.float32),
-                                                gp.bits)
-            eps = None
-            if key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0):
-                eps = surrogate_noise(key, (x2.shape[0], n), jnp.float32,
-                                      noise_kind)
-            from repro.kernels.cim_gemm import cim_gemm
-
-            out = cim_gemm(xq, wq, sx, sw, eps, gp.mu, gp.c0, gp.c1,
-                           block=plan.block, interpret=plan.interpret)
-            return out.astype(x2.dtype)
-
-        out = _ste_matmul(_forward)(x.reshape((-1, k)), w)
-        return out.reshape(lead + (n,))
-
-    # exact / surrogate paths: fake-quant QAT form.  fake-quant the
-    # weight in ITS dtype: an f32 upcast here gets hoisted out of the
-    # layer scan by XLA and materializes the whole stacked weight in f32
-    # (54 GB/instance at 671B, EXPERIMENTS.md §Perf).
-    xq = fake_quant(x, gp.bits)
-    wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
-    d = xq @ wq
-    if not apply or gp.mode == "exact":
-        # mixed-macro allocation / QAT baseline: exact int8 macro
-        return d
-    out = (1.0 + gp.mu) * d
-    if gp.mode in ("surrogate", "surrogate_fast") and key is not None \
-            and (gp.c0 > 0.0 or gp.c1 > 0.0):
-        sx = quant_scale(jax.lax.stop_gradient(x), gp.bits)
-        sw = quant_scale(jax.lax.stop_gradient(w), gp.bits, axis=0)
-        scale2 = (sx * sw).astype(jnp.float32) ** 2
-        xf = wf = None
-        if gp.c1 > 0.0:
-            xf = jax.lax.stop_gradient(xq).astype(jnp.float32)
-            wf = jax.lax.stop_gradient(wq).astype(jnp.float32)
-        var = surrogate_variance(gp, scale2, k, xf, wf,
-                                 fast=(gp.mode == "surrogate_fast"))
-        if var is not None:
-            eps = surrogate_noise(key, d.shape, d.dtype, noise_kind)
-            out = out + jax.lax.stop_gradient(
-                jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)
-    return out
+    kind, f, flag = _model_forward(gp, plan, noise_kind, stochastic, apply,
+                                   fused=False)
+    if kind == "plain":
+        return f(x, w, key)
+    # STE kernel-backed paths must see a rank-2 x: the custom_vjp
+    # backward does xf.T @ g, so flatten leading dims OUTSIDE the vjp
+    x2 = x.reshape((-1, k))
+    if flag:
+        eps = surrogate_noise(key, (x2.shape[0], n), jnp.float32,
+                              noise_kind)
+        out = _ste_matmul_eps(f)(x2, w, eps)
+    else:
+        out = _ste_matmul(f)(x2, w)
+    return out.reshape(lead + (n,))

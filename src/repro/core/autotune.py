@@ -34,15 +34,21 @@ Block = Tuple[int, int, int]
 # shape and must not dominate the first-call latency.
 DEFAULT_BLOCKS: Dict[str, Block] = {
     "pallas_lut_gather": (32, 32, 128),
+    "pallas_lut_nibble": (32, 64, 128),
     "pallas_log": (32, 32, 32),
     "pallas_fused_surrogate": (128, 128, 128),
 }
 
 _CANDIDATES: Dict[str, List[Block]] = {
-    # gather-bound: bn rides the 128-lane dimension, bm*bk*bn bounded by
-    # the (bm, bk, bn) index/product temporaries in VMEM
+    # gather-bound: bn rides the 128-lane dimension; the live index
+    # tensor is bounded by the kernel's k_slice, so bk trades HBM
+    # re-fetches against VMEM operand footprint
     "pallas_lut_gather": [(16, 32, 128), (32, 32, 128), (32, 64, 128),
                           (64, 32, 128), (32, 32, 256)],
+    # sub-LUTs are 4 KiB instead of 256 KiB, so the candidate set skews
+    # to larger operand tiles than the full-LUT gather kernel
+    "pallas_lut_nibble": [(32, 32, 128), (32, 64, 128), (64, 64, 128),
+                          (64, 128, 128), (32, 64, 256)],
     # VPU select/shift chains materialize (bm, bk, bn) int32 temporaries;
     # keep ~8 of them under the VMEM budget
     "pallas_log": [(16, 32, 64), (32, 32, 32), (32, 32, 64),
@@ -66,11 +72,17 @@ def cache_path() -> str:
                      "autotune.json"))
 
 
-def _bucket(v: int) -> int:
+def bucket(v: int) -> int:
+    """Next power of two >= v (floor 8) — one sweep/plan serves a whole
+    family of nearby GEMM shapes (also the dispatch-engine executable
+    cache's shape key, core/approx_gemm.py)."""
     b = 8
     while b < v:
         b <<= 1
     return b
+
+
+_bucket = bucket  # back-compat alias
 
 
 def cache_key(kernel: str, bits: int, m: int, k: int, n: int,
@@ -79,12 +91,23 @@ def cache_key(kernel: str, bits: int, m: int, k: int, n: int,
 
 
 def _load_disk(path: str) -> Dict[str, Block]:
+    """Parse the disk cache defensively: a corrupt/truncated file, a
+    non-dict payload or malformed rows are *ignored* (the next sweep
+    rewrites the file through _save_disk's merge), never fatal."""
     try:
         with open(path) as fh:
             raw = json.load(fh)
-        return {k: tuple(v) for k, v in raw.items()}
     except (OSError, ValueError):
         return {}
+    if not isinstance(raw, dict):
+        return {}
+    out: Dict[str, Block] = {}
+    for k, v in raw.items():
+        if (isinstance(v, (list, tuple)) and len(v) == 3
+                and all(isinstance(i, int) and not isinstance(i, bool)
+                        and i > 0 for i in v)):
+            out[k] = tuple(v)
+    return out
 
 
 def _save_disk(path: str, table: Dict[str, Block]) -> None:
@@ -200,8 +223,14 @@ def _default_measure(kernel: str, bits: int, m: int, k: int,
         if kernel == "pallas_lut_gather":
             from repro.core.multipliers import MultiplierSpec
 
-            spec = MultiplierSpec("exact", bits, True)
+            spec = MultiplierSpec("appro42", bits, True)
             return ops.approx_matmul_bit_exact(xq, wq, spec, block=block,
+                                               interpret=False)
+        if kernel == "pallas_lut_nibble":
+            from repro.core.multipliers import MultiplierSpec
+
+            spec = MultiplierSpec("exact", bits, True)
+            return ops.nibble_matmul_bit_exact(xq, wq, spec, block=block,
                                                interpret=False)
         if kernel == "pallas_log":
             return ops.log_matmul(xq, wq, bits=bits, block=block,

@@ -77,9 +77,42 @@ class CiMMacro:
 
     def kernel_plan(self, m: int, k: int, n: int,
                     mode: Optional[str] = None) -> GemmPlan:
-        """Which kernel (and block size) a (m, k, n) GEMM routes to."""
+        """Which kernel (and block size) a (m, k, n) GEMM routes to.
+
+        Passes the multiplier spec so predicate-gated entries (the
+        nibble-decomposed LUT kernel) are eligible, exactly as the
+        execution frontends route."""
         return plan_gemm(self.config.family, mode or self.config.mode,
-                         self.config.bits, m, k, n)
+                         self.config.bits, m, k, n, spec=self.config.spec)
+
+    def warmup(self, shapes, mode: Optional[str] = None,
+               dtype=None) -> int:
+        """Pre-build + compile the macro-frontend executables for a set
+        of (m, k, n) GEMM shapes (serving/training cold-start control).
+
+        Builds both the deterministic and — when the macro carries
+        calibrated noise in a surrogate mode — the stochastic (keyed)
+        executable, so the first real `matmul` call at any of *these
+        exact shapes* is a pure cache hit (no trace, no XLA compile)
+        with or without a noise key.  Other shapes in the same bucket
+        reuse the cached executable but still pay jit's per-shape
+        specialization on first touch — warm every concrete hot shape
+        (e.g. each serving batch size).  Returns the number of shapes
+        compiled."""
+        import jax.numpy as jnp
+
+        dtype = dtype or jnp.float32
+        gp = self.gemm_params(mode)
+        stochastic = (gp.mode in ("surrogate", "surrogate_fast")
+                      and (gp.c0 > 0.0 or gp.c1 > 0.0))
+        for (m, k, n) in shapes:
+            x = jnp.zeros((m, k), dtype)
+            w = jnp.zeros((k, n), dtype)
+            jax.block_until_ready(cim_matmul(x, w, gp))
+            if stochastic:
+                jax.block_until_ready(
+                    cim_matmul(x, w, gp, jax.random.PRNGKey(0)))
+        return len(shapes)
 
     def energy_for(self, n_macs: float) -> float:
         return energy_model.workload_energy_j(

@@ -58,4 +58,96 @@ def signed_product_lut(spec: MultiplierSpec) -> np.ndarray:
     signs = np.sign(vals)
     p = u[np.ix_(mags, mags)].astype(np.int64)
     out = p * np.outer(signs, signs)
+    # Padding-correctness invariant (kernels/approx_matmul.py): the
+    # Pallas GEMMs zero-pad ragged tiles, so every padded lane gathers
+    # the (0, b) / (a, 0) entries — those MUST be 0 for any family.  An
+    # approximate compressor tree does not guarantee 0*0 == 0 on its
+    # own; here the sign-magnitude wrapper enforces it (sign(0) == 0
+    # annihilates the row/column), and this check keeps any future
+    # signedness refactor honest instead of silently corrupting ragged
+    # shapes.
+    assert_zero_annihilation(out, half, spec.short_name())
     return out.astype(np.int32)
+
+
+def assert_zero_annihilation(signed_lut: np.ndarray, zero_index: int,
+                             name: str) -> None:
+    """Raise unless the signed table maps (0, b) and (a, 0) to 0 — the
+    precondition for the Pallas kernels' zero-padding of ragged tiles."""
+    if (signed_lut[zero_index, :] != 0).any() \
+            or (signed_lut[:, zero_index] != 0).any():
+        raise AssertionError(
+            f"LUT for {name} does not annihilate zero "
+            "operands; the Pallas kernels' zero-padding would corrupt "
+            "ragged shapes (mask padded lanes instead)")
+
+
+# ---------------------------------------------------------------------------
+# Nibble (half-width) sub-LUT decomposition
+# ---------------------------------------------------------------------------
+#
+# A full b-bit product LUT has 2^{2b} entries (256 KiB of int32 at
+# 8-bit) and its gather kernel materializes a (bm, bk, bn) int32 index
+# tensor into it.  Splitting each magnitude into high/low half-words,
+#     |a| = ah << h | al,   |b| = bh << h | bl,       h = bits // 2,
+# an *exact* multiplier factorizes as
+#     |a|*|b| = S_hh[ah,bh] + S_hl[ah,bl] + S_lh[al,bh] + S_ll[al,bl]
+# with S_xy the family's own product of half-word-scaled operands
+# (S_hh[u,v] = U(u<<h, v<<h), etc.), i.e. four 2^h x 2^h sub-LUTs — 4 KiB
+# total at 8-bit instead of 256 KiB.  For approximate families the
+# factorization holds only when every approximated column's partial
+# products come from a single sub-product (e.g. appro42 with its
+# approximated columns confined to one half-word); rather than encode
+# that condition analytically we VERIFY it bit-for-bit over the whole
+# magnitude grid at build time and return None when it fails, so the
+# dispatcher (core/approx_gemm.py) can fall back to the full-LUT
+# k-sliced gather.  This mirrors how multi-precision DCiM compilers
+# reuse narrow subcircuits to build wide multipliers (SEGA-DCIM /
+# SynDCIM, PAPERS.md).
+
+
+@functools.lru_cache(maxsize=64)
+def _nibble_sub_luts_cached(key: Tuple):
+    family, bits, compressor, n_approx = key
+    if bits < 2 or bits % 2 or bits > MAX_LUT_BITS:
+        return None
+    spec = MultiplierSpec(family=family, bits=bits, signed=False,
+                          compressor=compressor, n_approx_cols=n_approx)
+    h = bits // 2
+    hb = 1 << h
+    u, v = np.meshgrid(np.arange(hb, dtype=np.int64),
+                       np.arange(hb, dtype=np.int64), indexing="ij")
+    uf, vf = u.ravel(), v.ravel()
+    subs = np.stack([
+        multiply_unsigned(uf << h, vf << h, spec).reshape(hb, hb),
+        multiply_unsigned(uf << h, vf, spec).reshape(hb, hb),
+        multiply_unsigned(uf, vf << h, spec).reshape(hb, hb),
+        multiply_unsigned(uf, vf, spec).reshape(hb, hb),
+    ]).astype(np.int64)
+    # bit-exactness check over the magnitude domain the signed kernels
+    # index (quantization clips to qmax, so magnitudes are < 2^{bits-1})
+    half = 1 << (bits - 1)
+    full = build_lut(spec).astype(np.int64)[:half, :half]
+    a = np.arange(half, dtype=np.int64)
+    ah, al = a >> h, a & (hb - 1)
+    recomposed = (subs[0][np.ix_(ah, ah)] + subs[1][np.ix_(ah, al)]
+                  + subs[2][np.ix_(al, ah)] + subs[3][np.ix_(al, al)])
+    if not np.array_equal(recomposed, full):
+        return None
+    assert subs.max() < np.iinfo(np.int32).max
+    return subs.astype(np.int32)
+
+
+def nibble_sub_luts(spec: MultiplierSpec):
+    """(4, 2^{bits//2}, 2^{bits//2}) int32 sub-tables [S_hh, S_hl, S_lh,
+    S_ll] when the family's LUT is bit-exactly half-word-decomposable,
+    else None.  Order matches kernels/approx_matmul.nibble_lut_matmul."""
+    return _nibble_sub_luts_cached(_spec_key(spec))
+
+
+def nibble_decomposable(spec: MultiplierSpec) -> bool:
+    """Routing predicate for the nibble-decomposed Pallas kernel."""
+    try:
+        return nibble_sub_luts(spec) is not None
+    except ValueError:
+        return False

@@ -1,20 +1,38 @@
-"""Pallas TPU kernel: bit-exact LUT-gather approximate GEMM.
+"""Pallas TPU kernels: bit-exact LUT-gather approximate GEMMs.
 
-The compiled CiM macro *is* a product LUT (core/luts.py); this kernel
-executes it: for int8 operand tiles resident in VMEM it gathers
-LUT[a, b] per scalar pair and accumulates int32 partial sums, one HBM
-pass over A and B.
+The compiled CiM macro *is* a product LUT (core/luts.py); these kernels
+execute it.  Two table layouts (DESIGN.md §8):
+
+  * **full LUT** — the 2^{2b}-entry signed-product table resident in
+    VMEM; each scalar pair gathers one entry.  The gather materializes a
+    (bm, ks, bn) int32 index tensor, so the k dimension is *sliced*
+    (``k_slice``) to bound that live temporary regardless of the block's
+    bk.  Works for arbitrary LUT families.
+  * **nibble sub-LUTs** — for families whose table is bit-exactly
+    half-word-decomposable (core/luts.nibble_sub_luts: ``exact`` always,
+    ``appro42`` when its approximated columns fall inside the low
+    half-word), four 2^h x 2^h sub-tables (4 KiB at 8-bit instead of
+    256 KiB) reconstruct every product as
+    S_hh[ah,bh] + S_hl[ah,bl] + S_lh[al,bh] + S_ll[al,bl] on magnitudes,
+    with the sign restored by sign(a)*sign(b).  Smaller tables gather
+    faster and free VMEM for larger operand tiles.
+
+Each layout has an int-in entry point (``lut_matmul`` /
+``nibble_lut_matmul``: int8 operands -> int32, the registry-oracle
+surface) and a **fused-quantization** entry point (``lut_matmul_fused``
+/ ``nibble_lut_matmul_fused``: f32 operands -> f32 in ONE pallas_call —
+per-tensor/per-channel quantization on tile load, the
+``(acc * sx) * sw`` dequant epilogue on flush, scales passed as
+SMEM/VMEM operands).  The fused forms remove the two extra HBM round
+trips (int8 operand materialization + int32 accumulator re-read) the
+dispatch engine previously paid around every hardware-mode GEMM.
 
 TPU mapping (DESIGN.md §2): one (bm x bk) A-tile is a CiM subarray's
-stored word block; the LUT (2^16 entries, 256 KiB int32) sits in VMEM
-like the macro's compute fabric.  Grid = (M/bm, N/bn, K/bk), k innermost
-so the f32/int32 accumulator lives in a VMEM scratch across the k steps.
-
-This is the *validation-scale* path (it is gather-bound by design — the
-arithmetic-strength families use `mitchell_gemm`, and production runs
-the `cim_gemm` surrogate on the MXU).  Correctness is asserted against
-``ref.lut_matmul_ref`` in interpret mode; on hardware the gather lowers
-to the TPU dynamic-gather unit.
+stored word block; the LUT sits in VMEM like the macro's compute
+fabric.  Grid = (M/bm, N/bn, K/bk), k innermost so the int32
+accumulator lives in a VMEM scratch across the k steps.  Correctness is
+asserted against ``ref.lut_matmul_ref`` in interpret mode; on hardware
+the gather lowers to the TPU dynamic-gather unit.
 """
 
 from __future__ import annotations
@@ -26,40 +44,105 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Bound on the live (bm, k_slice, bn) int32 index/product temporaries a
+# single gather step materializes, independent of the block's bk.
+DEFAULT_K_SLICE = 16
 
-def _kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *, bits: int):
+
+def _quantize_tile(v, scale, qmax: int):
+    """Symmetric quantization of a VMEM tile (matches core.quantization:
+    round-half-to-even, clip to [-qmax, qmax])."""
+    q = jnp.round(v / scale)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int32)
+
+
+def _gather_full(lut, ia, ib, n: int, k_slice: int):
+    """sum_k LUT[ia[:,k], ib[k,:]] with the k dim sliced so the live
+    (bm, ks, bn) index tensor never exceeds k_slice in its middle dim."""
+    bk = ia.shape[1]
+    acc = None
+    for s in range(0, bk, k_slice):
+        e = min(s + k_slice, bk)
+        idx = ia[:, s:e, None] * n + ib[None, s:e, :]
+        part = jnp.take(lut, idx, axis=0).sum(axis=1, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _gather_nibble(subs, am, bm_, sa, sb, h: int, k_slice: int):
+    """Nibble-decomposed signed product sum: four 2^h x 2^h sub-table
+    gathers per k-slice, sign restored from the operand signs."""
+    hb = 1 << h
+    sz = hb * hb
+    ah, al = am >> h, am & (hb - 1)
+    bh, bl = bm_ >> h, bm_ & (hb - 1)
+    bk = am.shape[1]
+    acc = None
+    for s in range(0, bk, k_slice):
+        e = min(s + k_slice, bk)
+        a_hi = ah[:, s:e, None]
+        a_lo = al[:, s:e, None]
+        b_hi = bh[None, s:e, :]
+        b_lo = bl[None, s:e, :]
+        mag = (jnp.take(subs, a_hi * hb + b_hi, axis=0)
+               + jnp.take(subs, sz + a_hi * hb + b_lo, axis=0)
+               + jnp.take(subs, 2 * sz + a_lo * hb + b_hi, axis=0)
+               + jnp.take(subs, 3 * sz + a_lo * hb + b_lo, axis=0))
+        prods = sa[:, s:e, None] * sb[None, s:e, :] * mag
+        part = prods.sum(axis=1, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _pad2(m, k, n, block):
+    bm, bk, bn = block
+    return (-m) % bm, (-k) % bk, (-n) % bn
+
+
+# ---------------------------------------------------------------------------
+# Full-LUT kernels
+# ---------------------------------------------------------------------------
+
+
+def _int_kernel(x_ref, w_ref, lut_ref, o_ref, acc_ref, *, bits: int,
+                k_slice: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     half = 1 << (bits - 1)
     n = 1 << bits
-    a = x_ref[...].astype(jnp.int32) + half          # (bm, bk)
-    b = w_ref[...].astype(jnp.int32) + half          # (bk, bn)
-    idx = a[:, :, None] * n + b[None, :, :]          # (bm, bk, bn)
-    prods = jnp.take(lut_ref[...], idx, axis=0)      # LUT gather
-    acc_ref[...] += prods.sum(axis=1, dtype=jnp.int32)
+    ia = x_ref[...].astype(jnp.int32) + half          # (bm, bk)
+    ib = w_ref[...].astype(jnp.int32) + half          # (bk, bn)
+    acc_ref[...] += _gather_full(lut_ref[...], ia, ib, n, k_slice)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
 def lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
                bits: int = 8, block: tuple = (32, 32, 128),
-               interpret: bool = True) -> jnp.ndarray:
-    """Bit-exact signed LUT GEMM. xq (M,K) int8, wq (K,N) int8 -> int32."""
+               interpret: bool = True,
+               k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Bit-exact signed LUT GEMM. xq (M,K) int8, wq (K,N) int8 -> int32.
+
+    Zero padding of ragged tiles is correct because every LUT
+    annihilates zero operands (asserted at build time in
+    core.luts.signed_product_lut).
+    """
     m, k = xq.shape
     k2, n = wq.shape
     assert k == k2, (xq.shape, wq.shape)
     bm, bk, bn = block
-    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
-    xp = jnp.pad(xq, ((0, pm), (0, pk)))             # zero pads: LUT[0,0]=0
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(xq, ((0, pm), (0, pk)))
     wp = jnp.pad(wq, ((0, pk), (0, pn)))
     gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits),
+        functools.partial(_int_kernel, bits=bits, k_slice=k_slice),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -71,4 +154,192 @@ def lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(xp, wp, lut_flat)
+    return out[:m, :n]
+
+
+def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
+                  bits: int, k_slice: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    half = 1 << (bits - 1)
+    n = 1 << bits
+    qmax = half - 1
+    sx = sx_ref[0, 0]
+    ia = _quantize_tile(x_ref[...], sx, qmax) + half
+    ib = _quantize_tile(w_ref[...], sw_ref[...], qmax) + half
+    acc_ref[...] += _gather_full(lut_ref[...], ia, ib, n, k_slice)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[0, 0]) * sw_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray, lut_flat: jnp.ndarray,
+                     sx: jnp.ndarray, sw: jnp.ndarray, bits: int = 8,
+                     block: tuple = (32, 32, 128), interpret: bool = True,
+                     k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Fused-quantization LUT GEMM: f32 x (M,K), w (K,N) -> f32 (M,N).
+
+    Quantization (per-tensor ``sx`` scalar in SMEM, per-out-channel
+    ``sw`` (1,N) tiled through VMEM) and the ``(acc * sx) * sw``
+    epilogue run inside the single pallas_call — one HBM pass, no int8
+    operand or int32 accumulator round trips.  Bit-identical to
+    quantize -> ``lut_matmul`` -> dequantize.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, k_slice=k_slice),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1 << (2 * bits),), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(sx2, xp, wp, swp, lut_flat)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Nibble sub-LUT kernels
+# ---------------------------------------------------------------------------
+
+
+def _nibble_int_kernel(x_ref, w_ref, subs_ref, o_ref, acc_ref, *, bits: int,
+                       k_slice: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = bits // 2
+    qmax = (1 << (bits - 1)) - 1
+    a = x_ref[...].astype(jnp.int32)
+    b = w_ref[...].astype(jnp.int32)
+    # |-2^{b-1}| saturates to qmax, matching signed_product_lut's
+    # sign-magnitude wrapper (the quantization contract never emits it,
+    # but the int-in oracle surface must agree with lut_matmul_ref)
+    am = jnp.minimum(jnp.abs(a), qmax)
+    bm_ = jnp.minimum(jnp.abs(b), qmax)
+    acc_ref[...] += _gather_nibble(subs_ref[...], am, bm_,
+                                   jnp.sign(a), jnp.sign(b), h, k_slice)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def nibble_lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
+                      subs_flat: jnp.ndarray, bits: int = 8,
+                      block: tuple = (32, 32, 128), interpret: bool = True,
+                      k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Bit-exact signed GEMM over four 2^{b/2} x 2^{b/2} sub-LUTs.
+
+    ``subs_flat`` is core.luts.nibble_sub_luts(spec).ravel() — order
+    [S_hh, S_hl, S_lh, S_ll].  Operand magnitudes must be < 2^{b-1}
+    (the quantization contract: clip to [-qmax, qmax]).
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(xq, ((0, pm), (0, pk)))    # sign(0) == 0 annihilates pads
+    wp = jnp.pad(wq, ((0, pk), (0, pn)))
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    sub_len = 4 * (1 << (bits // 2)) ** 2
+    out = pl.pallas_call(
+        functools.partial(_nibble_int_kernel, bits=bits, k_slice=k_slice),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((sub_len,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, subs_flat)
+    return out[:m, :n]
+
+
+def _nibble_fused_kernel(sx_ref, x_ref, w_ref, sw_ref, subs_ref, o_ref,
+                         acc_ref, *, bits: int, k_slice: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = bits // 2
+    qmax = (1 << (bits - 1)) - 1
+    sx = sx_ref[0, 0]
+    a = _quantize_tile(x_ref[...], sx, qmax)
+    b = _quantize_tile(w_ref[...], sw_ref[...], qmax)
+    acc_ref[...] += _gather_nibble(subs_ref[...], jnp.abs(a), jnp.abs(b),
+                                   jnp.sign(a), jnp.sign(b), h, k_slice)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[0, 0]) * sw_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def nibble_lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray,
+                            subs_flat: jnp.ndarray, sx: jnp.ndarray,
+                            sw: jnp.ndarray, bits: int = 8,
+                            block: tuple = (32, 32, 128),
+                            interpret: bool = True,
+                            k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Fused-quantization nibble GEMM: f32 in -> f32 out, one HBM pass."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    sub_len = 4 * (1 << (bits // 2)) ** 2
+    out = pl.pallas_call(
+        functools.partial(_nibble_fused_kernel, bits=bits, k_slice=k_slice),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((sub_len,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(sx2, xp, wp, swp, subs_flat)
     return out[:m, :n]

@@ -13,6 +13,13 @@ Grid = (M/bm, N/bn, K/bk); k innermost with an int32 VMEM accumulator.
 Per k-step the kernel materializes a (bm, bk, bn) product tile, so
 block sizes are chosen to keep ~8 such temporaries under the VMEM
 budget (default 32x32x32 -> ~1 MiB).
+
+Two entry points (DESIGN.md §8): ``mitchell_matmul`` (int8 in -> int32,
+the registry-oracle surface) and ``mitchell_matmul_fused`` (f32 in ->
+f32 in ONE pallas_call: per-tensor/per-channel quantization on tile
+load, ``(acc * sx) * sw`` dequant epilogue on flush, scales as
+SMEM/VMEM operands — no int8 operand or int32 accumulator HBM round
+trips).
 """
 
 from __future__ import annotations
@@ -23,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .approx_matmul import _pad2, _quantize_tile
 
 
 def _leading_one(x, bits):
@@ -100,4 +109,64 @@ def mitchell_matmul(xq: jnp.ndarray, wq: jnp.ndarray, bits: int = 8,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(xp, wp)
+    return out[:m, :n]
+
+
+def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, bits,
+                  compensated):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qmax = (1 << (bits - 1)) - 1
+    sx = sx_ref[0, 0]
+    a = _quantize_tile(x_ref[...], sx, qmax)[:, :, None]     # (bm, bk, 1)
+    b = _quantize_tile(w_ref[...], sw_ref[...], qmax)[None, :, :]
+    prods = _log_product(a, b, bits, compensated)            # (bm, bk, bn)
+    acc_ref[...] += prods.sum(axis=1, dtype=jnp.int32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[0, 0]) * sw_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "compensated", "block",
+                                    "interpret"))
+def mitchell_matmul_fused(x: jnp.ndarray, w: jnp.ndarray, sx: jnp.ndarray,
+                          sw: jnp.ndarray, bits: int = 8,
+                          compensated: bool = True,
+                          block: tuple = (32, 32, 32),
+                          interpret: bool = True) -> jnp.ndarray:
+    """Fused-quantization log-domain GEMM: f32 x (M,K), w (K,N) -> f32.
+
+    Bit-identical integer core to quantize -> ``mitchell_matmul`` ->
+    dequantize, executed in a single pallas_call (one HBM pass)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, compensated=compensated),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(sx2, xp, wp, swp)
     return out[:m, :n]

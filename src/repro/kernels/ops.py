@@ -7,6 +7,12 @@ kernels target TPU and are validated in interpret mode per DESIGN.md §2).
 elsewhere.  Routing across kernels lives in the registry
 (core/approx_gemm.py, DESIGN.md §8); these wrappers are the low-level
 per-kernel entry points it executes.
+
+Each kernel family exposes an int-in wrapper (the registry-oracle
+surface, bit-for-bit against kernels/ref.py) and — for the Pallas
+hardware kernels — a ``*_fused`` wrapper taking float operands, with
+quantization and the dequant epilogue fused into the single pallas_call
+(DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -18,12 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autotune
-from repro.core.luts import signed_product_lut
+from repro.core.luts import nibble_sub_luts, signed_product_lut
 from repro.core.multipliers import MultiplierSpec
+from repro.core.quantization import quant_scale
 
-from .approx_matmul import lut_matmul
-from .cim_gemm import cim_gemm, cim_gemm_core
-from .mitchell_gemm import mitchell_matmul
+from .approx_matmul import (lut_matmul, lut_matmul_fused, nibble_lut_matmul,
+                            nibble_lut_matmul_fused)
+from .cim_gemm import cim_gemm, cim_gemm_core, cim_gemm_fused
+from .mitchell_gemm import mitchell_matmul, mitchell_matmul_fused
 
 
 def default_interpret() -> bool:
@@ -48,6 +56,25 @@ def _lut_for(family: str, bits: int, compressor: str, n_approx) -> jnp.ndarray:
     return jnp.asarray(_lut_np(family, bits, compressor, n_approx))
 
 
+@functools.lru_cache(maxsize=16)
+def _subs_np(family: str, bits: int, compressor: str, n_approx):
+    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
+    subs = nibble_sub_luts(spec)
+    if subs is None:
+        raise ValueError(
+            f"{spec.short_name()} is not nibble-decomposable; route to the "
+            "full-LUT kernel (core/approx_gemm handles this fallback)")
+    return subs.ravel()
+
+
+def _subs_for(family, bits, compressor, n_approx) -> jnp.ndarray:
+    return jnp.asarray(_subs_np(family, bits, compressor, n_approx))
+
+
+def _scales(x, w, bits: int):
+    return quant_scale(x, bits), quant_scale(w, bits, axis=0)
+
+
 def approx_matmul_bit_exact(xq, wq, spec: MultiplierSpec,
                             block=None,
                             interpret: Optional[bool] = None):
@@ -60,6 +87,43 @@ def approx_matmul_bit_exact(xq, wq, spec: MultiplierSpec,
                       interpret=interp)
 
 
+def approx_matmul_fused(x, w, spec: MultiplierSpec, block=None,
+                        interpret: Optional[bool] = None):
+    """Fused-quantization full-LUT GEMM: f32 in -> f32 out, one HBM pass."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_gather", spec.bits, m, k, n, block)
+    lut = _lut_for(spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    sx, sw = _scales(x, w, spec.bits)
+    return lut_matmul_fused(x, w, lut, sx, sw, bits=spec.bits, block=block,
+                            interpret=interp)
+
+
+def nibble_matmul_bit_exact(xq, wq, spec: MultiplierSpec, block=None,
+                            interpret: Optional[bool] = None):
+    """Bit-exact nibble-decomposed GEMM (spec must be decomposable)."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = xq.shape, wq.shape[-1]
+    block = _resolve_block("pallas_lut_nibble", spec.bits, m, k, n, block)
+    subs = _subs_for(spec.family, spec.bits, spec.compressor,
+                     spec.n_approx_cols)
+    return nibble_lut_matmul(xq, wq, subs, bits=spec.bits, block=block,
+                             interpret=interp)
+
+
+def nibble_matmul_fused(x, w, spec: MultiplierSpec, block=None,
+                        interpret: Optional[bool] = None):
+    """Fused-quantization nibble GEMM: f32 in -> f32 out, one HBM pass."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_nibble", spec.bits, m, k, n, block)
+    subs = _subs_for(spec.family, spec.bits, spec.compressor,
+                     spec.n_approx_cols)
+    sx, sw = _scales(x, w, spec.bits)
+    return nibble_lut_matmul_fused(x, w, subs, sx, sw, bits=spec.bits,
+                                   block=block, interpret=interp)
+
+
 def log_matmul(xq, wq, bits: int = 8, compensated: bool = True,
                block=None, interpret: Optional[bool] = None):
     """Arithmetic log-domain kernel GEMM (mitchell / log_our)."""
@@ -70,9 +134,21 @@ def log_matmul(xq, wq, bits: int = 8, compensated: bool = True,
                            block=block, interpret=interp)
 
 
+def log_matmul_fused(x, w, bits: int = 8, compensated: bool = True,
+                     block=None, interpret: Optional[bool] = None):
+    """Fused-quantization log-domain GEMM: f32 in -> f32 out."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_log", bits, m, k, n, block)
+    sx, sw = _scales(x, w, bits)
+    return mitchell_matmul_fused(x, w, sx, sw, bits=bits,
+                                 compensated=compensated, block=block,
+                                 interpret=interp)
+
+
 def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
                    block=None, interpret: Optional[bool] = None):
-    """Fused production surrogate GEMM."""
+    """Fused production surrogate GEMM (int-in oracle surface)."""
     interp = default_interpret() if interpret is None else interpret
     (m, k), n = xq.shape, wq.shape[-1]
     block = _resolve_block("pallas_fused_surrogate", 8, m, k, n, block)
@@ -80,5 +156,19 @@ def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
                     interpret=interp)
 
 
-__all__ = ["approx_matmul_bit_exact", "log_matmul", "surrogate_gemm",
+def surrogate_gemm_fused(x, w, eps, mu, c0, c1, bits: int = 8,
+                         block=None, interpret: Optional[bool] = None):
+    """Fused production surrogate GEMM: f32 in, quantization + full
+    epilogue inside the single pallas_call."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_fused_surrogate", bits, m, k, n, block)
+    return cim_gemm_fused(x, w, eps, mu, c0, c1, bits=bits, block=block,
+                          interpret=interp)
+
+
+__all__ = ["approx_matmul_bit_exact", "approx_matmul_fused",
+           "nibble_matmul_bit_exact", "nibble_matmul_fused",
+           "log_matmul", "log_matmul_fused",
+           "surrogate_gemm", "surrogate_gemm_fused",
            "cim_gemm_core", "default_interpret"]

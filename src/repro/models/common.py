@@ -254,7 +254,10 @@ def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
     (family, mode, bits, backend) — is delegated to the dispatch engine
     (core/approx_gemm.model_matmul, DESIGN.md §8); this wrapper only
     resolves sharding, the per-name noise key and the per-module
-    allocation filter.
+    allocation filter.  model_matmul executes through the engine's
+    zero-retrace executable cache, so eager layer calls (serving,
+    notebooks) are dict hits after the first touch; inside a jitted
+    train step the cached jit inlines into the outer trace.
     """
     wv = fsdp_gather(w)
     assert wv.ndim == 2, "cim_linear expects 2-D weights (flatten heads)"

@@ -7,6 +7,7 @@ exact/surrogate deterministic terms, and moment-level for the
 stochastic surrogate (covered separately in test_error_model.py).
 """
 
+import json
 import os
 
 import jax
@@ -15,10 +16,12 @@ import numpy as np
 import pytest
 
 from repro.core import CiMConfig, compile_macro
-from repro.core import autotune
+from repro.core import approx_gemm, autotune
 from repro.core.approx_gemm import (FAMILIES, MODES, GemmParams,
-                                    cim_matmul, plan_gemm, run_int_kernel,
-                                    select_kernel, registered_kernels)
+                                    cim_matmul, model_matmul, plan_gemm,
+                                    run_int_kernel, select_kernel,
+                                    registered_kernels, trace_count)
+from repro.core.multipliers import MultiplierSpec
 from repro.core.quantization import dequantize, quant_scale, quantize
 from repro.kernels import ref
 
@@ -65,7 +68,38 @@ def test_hardware_mode_prefers_arithmetic_kernel_for_log_families():
     assert select_kernel("mitchell", "hardware", 8).name == "pallas_log"
     assert select_kernel("log_our", "hardware", 8).name == "pallas_log"
     assert select_kernel("appro42", "hardware", 8).name == "pallas_lut_gather"
+    # without a spec, predicate-gated entries (nibble) are not eligible
     assert select_kernel("exact", "hardware", 8).name == "pallas_lut_gather"
+
+
+def test_nibble_routing_requires_decomposable_spec():
+    """The nibble kernel outranks the full-LUT gather exactly when the
+    family's table factorizes bit-exactly into half-word sub-LUTs."""
+    exact = MultiplierSpec("exact", 8, True)
+    assert select_kernel("exact", "hardware", 8, spec=exact).name \
+        == "pallas_lut_nibble"
+    # appro42 default approximates columns 0..7: cross sub-products
+    # differ from the full tree -> fall back to the k-sliced gather
+    a8 = MultiplierSpec("appro42", 8, True)
+    assert select_kernel("appro42", "hardware", 8, spec=a8).name \
+        == "pallas_lut_gather"
+    # approximated columns confined to the low half-word -> decomposable
+    a4 = MultiplierSpec("appro42", 8, True, n_approx_cols=4)
+    assert select_kernel("appro42", "hardware", 8, spec=a4).name \
+        == "pallas_lut_nibble"
+    # odd widths never decompose (half-words must be equal width)
+    from repro.core.luts import nibble_decomposable
+
+    assert not nibble_decomposable(MultiplierSpec("exact", 9, True))
+
+
+def test_gemm_params_route_through_nibble_predicate():
+    gp = GemmParams(family="exact", bits=8, mode="hardware")
+    plan = plan_gemm("exact", "hardware", 8, 16, 16, 16, spec=gp.spec)
+    assert plan.entry.name == "pallas_lut_nibble"
+    gp8 = GemmParams(family="appro42", bits=8, mode="hardware")
+    plan8 = plan_gemm("appro42", "hardware", 8, 16, 16, 16, spec=gp8.spec)
+    assert plan8.entry.name == "pallas_lut_gather"
 
 
 def test_unroutable_request_raises_with_inventory():
@@ -90,6 +124,23 @@ def test_hardware_lut_kernel_bit_matches_oracle(family):
     xq, wq = _int_ops(17, 40, 9, seed=1)
     gp = GemmParams(family=family, bits=8, mode="hardware")
     plan = plan_gemm(family, "hardware", 8, 17, 40, 9)
+    got = run_int_kernel(plan, xq, wq, gp)
+    from repro.core.luts import signed_product_lut
+
+    lut = jnp.asarray(signed_product_lut(gp.spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("family,nac", [("exact", None), ("appro42", 4)])
+def test_nibble_kernel_bit_matches_oracle(family, nac):
+    """The nibble-decomposed kernel is bit-identical to the full-LUT
+    oracle for every spec it routes (ragged shape exercises padding)."""
+    xq, wq = _int_ops(17, 40, 9, seed=3)
+    gp = GemmParams(family=family, bits=8, mode="hardware",
+                    n_approx_cols=nac)
+    plan = plan_gemm(family, "hardware", 8, 17, 40, 9, spec=gp.spec)
+    assert plan.entry.name == "pallas_lut_nibble"
     got = run_int_kernel(plan, xq, wq, gp)
     from repro.core.luts import signed_product_lut
 
@@ -214,6 +265,98 @@ def test_lut_cache_first_touched_under_trace_does_not_leak():
                                rtol=1e-6, atol=1e-6)
 
 
+# -------------------------------------------------- executable cache ----
+
+
+def test_executable_cache_no_retrace_on_reuse():
+    """Same GemmParams + shape + dtype reuses a cached executable: the
+    trace probe must stay flat over repeated eager calls."""
+    gp = GemmParams(family="appro42", bits=8, mode="hardware", mu=0.001)
+    x, w = _float_ops(24, 32, 16, seed=11)
+    cim_matmul(x, w, gp)                       # build + compile
+    t0 = trace_count()
+    for _ in range(4):
+        cim_matmul(x, w, gp)
+    assert trace_count() == t0, "cached eager calls retraced"
+    # model frontend shares the cache machinery
+    model_matmul(x, w, gp)
+    t0 = trace_count()
+    for _ in range(4):
+        model_matmul(x, w, gp)
+    assert trace_count() == t0
+
+
+def test_executable_cache_semantics_match_uncached():
+    gp = GemmParams(family="log_our", bits=8, mode="surrogate",
+                    mu=-0.01, c0=120.0, c1=2e-4)
+    x, w = _float_ops(12, 40, 8, seed=12)
+    key = jax.random.PRNGKey(5)
+    a = cim_matmul(x, w, gp, key)
+    b = cim_matmul(x, w, gp, key, cached=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+    am = model_matmul(x, w, gp, key)
+    bm = model_matmul(x, w, gp, key, cached=False)
+    np.testing.assert_allclose(np.asarray(am), np.asarray(bm),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_executable_cache_misses_on_bucket_dtype_params():
+    """Different shape-bucket / dtype / GemmParams miss correctly (new
+    entries); same-bucket different shapes share one executable."""
+    gp = GemmParams(family="exact", bits=8, mode="exact")
+    x, w = _float_ops(16, 32, 16, seed=13)
+    cim_matmul(x, w, gp)
+    n0 = approx_gemm.executable_cache_size()
+    # same bucket (m=16 vs m=12 both bucket to 16): no new entry
+    cim_matmul(x[:12], w, gp)
+    assert approx_gemm.executable_cache_size() == n0
+    # new shape bucket
+    x2, w2 = _float_ops(200, 32, 16, seed=13)
+    cim_matmul(x2, w2, gp)
+    assert approx_gemm.executable_cache_size() == n0 + 1
+    # new dtype
+    cim_matmul(x.astype(jnp.bfloat16), w, gp)
+    assert approx_gemm.executable_cache_size() == n0 + 2
+    # new params
+    cim_matmul(x, w, GemmParams(family="exact", bits=8, mode="exact",
+                                mu=0.5))
+    assert approx_gemm.executable_cache_size() == n0 + 3
+
+
+def test_executable_cache_key_distinguishes_backend():
+    """Backend is part of the executable key (a TPU plan must never be
+    served to a CPU call)."""
+    gp = GemmParams(family="log_our", bits=8, mode="surrogate")
+    plan_cpu = plan_gemm("log_our", "surrogate", 8, 16, 16, 16,
+                         backend="cpu", spec=gp.spec)
+    plan_tpu = plan_gemm("log_our", "surrogate", 8, 16, 16, 16,
+                         backend="tpu", spec=gp.spec)
+    x, w = _float_ops(16, 16, 16, seed=14)
+    k_cpu = approx_gemm._exec_key("cim", gp, plan_cpu, False, "normal",
+                                  True, x, w, 16, 16, 16)
+    k_tpu = approx_gemm._exec_key("cim", gp, plan_tpu, False, "normal",
+                                  True, x, w, 16, 16, 16)
+    assert k_cpu != k_tpu
+
+
+def test_cached_path_grads_match_uncached():
+    gp = GemmParams(family="appro42", bits=8, mode="hardware")
+    x, w = _float_ops(8, 24, 8, seed=15)
+
+    def loss_cached(xv, wv):
+        return jnp.sum(cim_matmul(xv, wv, gp) ** 2)
+
+    def loss_uncached(xv, wv):
+        return jnp.sum(cim_matmul(xv, wv, gp, cached=False) ** 2)
+
+    gc = jax.grad(loss_cached, argnums=(0, 1))(x, w)
+    gu = jax.grad(loss_uncached, argnums=(0, 1))(x, w)
+    for a, b in zip(gc, gu):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
 # ----------------------------------------------------------- autotune ----
 
 
@@ -264,3 +407,51 @@ def test_autotune_rejecting_measure_falls_back(tmp_path):
                               measure=oom,
                               cache_file=os.path.join(tmp_path, "t.json"))
     assert blk == autotune.heuristic_block("pallas_log", 64, 64, 64)
+
+
+@pytest.mark.parametrize("garbage", [
+    "{not json",                                  # truncated / corrupt
+    "[1, 2, 3]",                                  # wrong top-level type
+    '{"k": 5}',                                   # wrong row type
+    '{"k": [1, 2]}',                              # wrong row arity
+    '{"k": ["a", "b", "c"]}',                     # wrong element type
+])
+def test_autotune_corrupt_cache_is_ignored_and_rewritten(tmp_path, garbage):
+    cache = os.path.join(tmp_path, "tune.json")
+    with open(cache, "w") as fh:
+        fh.write(garbage)
+
+    autotune.clear_memory_cache()
+    best = autotune.best_block("pallas_log", 8, 64, 64, 64, backend="tpu",
+                               measure=lambda b: float(sum(b)),
+                               cache_file=cache)
+    assert best in autotune.candidate_blocks("pallas_log", 64, 64, 64)
+    # the sweep rewrote the file as valid JSON holding the winner
+    with open(cache) as fh:
+        disk = json.load(fh)
+    assert list(disk.values()) == [list(best)]
+
+
+def test_autotune_env_override_respected(tmp_path, monkeypatch):
+    cache = os.path.join(tmp_path, "envtune.json")
+    monkeypatch.setenv("OPENACM_AUTOTUNE_CACHE", cache)
+    assert autotune.cache_path() == cache
+    autotune.clear_memory_cache()
+    autotune.best_block("pallas_lut_nibble", 8, 64, 64, 64, backend="tpu",
+                        measure=lambda b: float(sum(b)))
+    assert os.path.exists(cache)
+    # and the override is where a second resolve reads from
+    autotune.clear_memory_cache()
+    calls = []
+    autotune.best_block("pallas_lut_nibble", 8, 64, 64, 64, backend="tpu",
+                        measure=lambda b: calls.append(b) or 1.0)
+    assert not calls, "disk row under OPENACM_AUTOTUNE_CACHE was ignored"
+
+
+def test_autotune_off_tpu_heuristic_never_writes_disk(tmp_path, monkeypatch):
+    cache = os.path.join(tmp_path, "never.json")
+    monkeypatch.setenv("OPENACM_AUTOTUNE_CACHE", cache)
+    autotune.clear_memory_cache()
+    for kernel in ("pallas_lut_gather", "pallas_lut_nibble", "pallas_log"):
+        autotune.best_block(kernel, 8, 128, 128, 128, backend="cpu")
+    assert not os.path.exists(cache)

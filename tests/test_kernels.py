@@ -40,6 +40,161 @@ def test_lut_kernel_exact_family_is_integer_matmul():
     assert (np.asarray(got) == want).all()
 
 
+@pytest.mark.parametrize("k_slice", [4, 16, 64])
+def test_lut_kernel_k_slice_invariant(k_slice):
+    """The k-sliced gather (bounding the live index tensor) is exact for
+    any slice width."""
+    from repro.kernels.approx_matmul import lut_matmul
+
+    xq, wq = _ops(33, 70, 17, seed=2)
+    spec = MultiplierSpec("appro42", 8, signed=True)
+    lut = jnp.asarray(signed_product_lut(spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    got = lut_matmul(xq, wq, lut, block=(32, 32, 128), k_slice=k_slice)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+# ------------------------------------------------- nibble sub-LUT path ----
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("family,nac", [("exact", None), ("appro42", 4),
+                                        ("appro42", 2)])
+def test_nibble_kernel_matches_ref(shape, family, nac):
+    """Nibble-decomposed kernel is bit-identical to the full-LUT oracle
+    for every family/shape it routes (ragged shapes exercise padding)."""
+    m, k, n = shape
+    xq, wq = _ops(m, k, n, seed=5)
+    spec = MultiplierSpec(family, 8, signed=True, n_approx_cols=nac)
+    lut = jnp.asarray(signed_product_lut(spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    got = ops.nibble_matmul_bit_exact(xq, wq, spec)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+def test_nibble_kernel_saturates_int8_min_like_signed_lut():
+    """|-128| saturates to 127 in the signed LUT's sign-magnitude
+    wrapper; the nibble kernel must agree on the int-in oracle surface
+    (quantization never emits -128, but run_int_kernel can see it)."""
+    xq = jnp.asarray([[-128, 3], [-128, -128]], jnp.int8)
+    wq = jnp.asarray([[5, -128], [7, 1]], jnp.int8)
+    spec = MultiplierSpec("exact", 8, signed=True)
+    lut = jnp.asarray(signed_product_lut(spec).ravel())
+    want = ref.lut_matmul_ref(xq, wq, lut)
+    got = ops.nibble_matmul_bit_exact(xq, wq, spec)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+def test_nibble_rejects_undecomposable_family():
+    from repro.core.luts import nibble_decomposable
+
+    spec = MultiplierSpec("appro42", 8, signed=True)   # 8 approx cols
+    assert not nibble_decomposable(spec)
+    xq, wq = _ops(8, 8, 8)
+    with pytest.raises(ValueError, match="not nibble-decomposable"):
+        ops.nibble_matmul_bit_exact(xq, wq, spec)
+
+
+# ------------------------------------------- fused-quantization kernels ----
+
+
+def _quant_pipeline(x, w, bits=8):
+    from repro.core.quantization import quant_scale, quantize
+
+    sx = quant_scale(x, bits)
+    sw = quant_scale(w, bits, axis=0)
+    return quantize(x, sx, bits), sx, quantize(w, sw, bits), sw
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_lut_kernel_equals_quantize_kernel_dequantize(shape):
+    """One-pallas_call fused kernel == the 3-pass pipeline, bit for bit
+    (same integer core, same f32 epilogue order)."""
+    m, k, n = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    spec = MultiplierSpec("appro42", 8, signed=True)
+    xq, sx, wq, sw = _quant_pipeline(x, w)
+    want = (ops.approx_matmul_bit_exact(xq, wq, spec)
+            .astype(jnp.float32) * sx) * sw
+    got = ops.approx_matmul_fused(x, w, spec)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_nibble_kernel_equals_pipeline(shape):
+    m, k, n = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + n + 1))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    spec = MultiplierSpec("exact", 8, signed=True)
+    xq, sx, wq, sw = _quant_pipeline(x, w)
+    want = (ops.nibble_matmul_bit_exact(xq, wq, spec)
+            .astype(jnp.float32) * sx) * sw
+    got = ops.nibble_matmul_fused(x, w, spec)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+@pytest.mark.parametrize("compensated", [False, True])
+def test_fused_log_kernel_equals_pipeline(compensated):
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (33, 70))
+    w = jax.random.normal(kw, (70, 17))
+    xq, sx, wq, sw = _quant_pipeline(x, w)
+    want = (ops.log_matmul(xq, wq, compensated=compensated)
+            .astype(jnp.float32) * sx) * sw
+    got = ops.log_matmul_fused(x, w, compensated=compensated)
+    assert (np.asarray(want) == np.asarray(got)).all()
+
+
+def test_fused_surrogate_kernel_matches_ref_epilogue():
+    """cim_gemm_fused runs quantization + the full surrogate epilogue
+    (scale, bias, noise) in one pallas_call; must match the XLA ref."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.normal(kx, (33, 70))
+    w = jax.random.normal(kw, (70, 17))
+    eps = jax.random.normal(jax.random.PRNGKey(10), (33, 17))
+    xq, sx, wq, sw = _quant_pipeline(x, w)
+    mu, c0, c1 = -0.013, 1480.0, 2.1e-4
+    want = ref.cim_gemm_ref(xq, wq, sx, jnp.ravel(sw), eps, mu, c0, c1)
+    got = ops.surrogate_gemm_fused(x, w, eps, mu, c0, c1)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=3e-5, atol=3e-5)
+    # deterministic variant (eps=None): bias term only
+    det = ops.surrogate_gemm_fused(x, w, None, mu, c0, c1)
+    want_det = (1.0 + mu) * (xq.astype(jnp.float32)
+                             @ wq.astype(jnp.float32)) * (sx * sw)
+    np.testing.assert_allclose(np.asarray(det), np.asarray(want_det),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------- LUT padding invariant ----
+
+
+def test_signed_lut_annihilates_zero_for_all_families():
+    """The Pallas kernels zero-pad ragged tiles; every family's signed
+    LUT must map (0, b) and (a, 0) to 0 (asserted at build time)."""
+    for family in ("exact", "appro42", "mitchell", "log_our"):
+        lut = signed_product_lut(MultiplierSpec(family, 8, signed=True))
+        half = 1 << 7
+        assert not lut[half, :].any() and not lut[:, half].any()
+
+
+def test_lut_build_rejects_non_annihilating_table():
+    """A signed table violating 0*b == 0 must fail loudly at LUT build
+    time instead of silently corrupting ragged (zero-padded) shapes."""
+    from repro.core.luts import assert_zero_annihilation
+
+    n = 16
+    bad = np.zeros((n, n), np.int64)
+    bad[n // 2, 3] = 7       # approximate cell emitting garbage at zero
+    with pytest.raises(AssertionError, match="annihilate"):
+        assert_zero_annihilation(bad, n // 2, "bad4b")
+    bad[:] = 0
+    assert_zero_annihilation(bad, n // 2, "good4b")   # no raise
+
+
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("compensated", [False, True])
 def test_mitchell_kernel_matches_ref(shape, compensated):
