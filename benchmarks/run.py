@@ -1,7 +1,7 @@
 """Benchmark driver: one entry per paper table, the roofline report and
-the per-kernel GEMM harnesses (bench_kernels -> BENCH_kernels.json +
-BENCH_dispatch.json).  Prints ``name,us_per_call,derived`` CSV at the
-end.
+the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
+BENCH_dispatch.json; bench_conv -> BENCH_conv.json).  Prints
+``name,us_per_call,derived`` CSV at the end.
 
 Flags:
   --fast      skip the slow CNN table; smaller kernel shape sweep
@@ -16,8 +16,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, roofline, table2_ppa,
-                            table3_psnr, table4_cnn, table5_yield)
+    from benchmarks import (bench_conv, bench_kernels, roofline,
+                            table2_ppa, table3_psnr, table4_cnn,
+                            table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -52,6 +53,14 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_dispatch", 0.0, f"ERROR:{type(e).__name__}"))
+    conv_path = bench_conv.OUT_PATH_SMOKE if smoke else bench_conv.OUT_PATH
+    try:
+        rows.extend(bench_conv.run(fast=fast or "--kernels" in sys.argv,
+                                   smoke=smoke))
+        print(f"conv records -> {conv_path}")
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_conv", 0.0, f"ERROR:{type(e).__name__}"))
     if mods:
         try:
             rows.extend(roofline.energy_report())

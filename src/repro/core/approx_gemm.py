@@ -36,6 +36,12 @@ frontends execute the plan:
   * `model_matmul` — the model-zoo frontend (`models.common.cim_linear`):
                      fake-quant STE (QAT), activation dtype preserved,
                      rademacher surrogate noise (see models/common.py).
+  * `cim_conv2d`   — the conv frontend (`models.cnn.conv2d`): implicit-
+                     GEMM convolution through a conv-shaped registry
+                     universe (`plan_conv`, DESIGN.md §9) — the kh*kw
+                     patch gather runs inside the Pallas kernel, no
+                     materialized im2col; STE backward is the exact
+                     float conv VJP.
 
 **Zero-retrace execution** (DESIGN.md §8): both frontends resolve their
 work through a module-level *executable cache* keyed on
@@ -93,7 +99,7 @@ NOISE_KIND = "rademacher"
 
 @dataclasses.dataclass(frozen=True)
 class KernelEntry:
-    """One executable GEMM implementation and its routing envelope."""
+    """One executable GEMM/conv implementation and its routing envelope."""
 
     name: str
     modes: Tuple[str, ...]
@@ -106,6 +112,7 @@ class KernelEntry:
     oracle: str = ""                   # kernels/ref.py oracle it must match
     bound: str = "bit"                 # "bit" | "fp32" | "stochastic"
     description: str = ""
+    op: str = "gemm"                   # "gemm" | "conv" (routing universe)
     # Optional per-spec routing gate (beyond family/mode/bits), e.g.
     # nibble decomposability.  Entries with a predicate are only
     # eligible when the caller supplies a MultiplierSpec and the
@@ -176,12 +183,47 @@ register_kernel(KernelEntry(
     families=(), backends=(), oracle="cim_gemm_ref", bound="stochastic",
     description="XLA dot + calibrated noise epilogue (surrogate twin)"))
 
+# Conv universe (implicit-GEMM convolution, DESIGN.md §9).  The
+# materialized im2col + GEMM path stays registered at priority 0 as the
+# always-eligible fallback (and the benchmark baseline); the Pallas
+# implicit kernels outrank it when the request and the VMEM footprint
+# model admit them (`plan_conv`).
+register_kernel(KernelEntry(
+    name="conv_im2col", op="conv", modes=MODES, families=(), backends=(),
+    oracle="im2col + the routed GEMM kernel's oracle", bound="fp32",
+    description="materialized-patch fallback: im2col + the GEMM engine "
+                "(every mode; also the bench_conv.py baseline)"))
+register_kernel(KernelEntry(
+    name="pallas_conv_mxu", op="conv", modes=("exact",), families=(),
+    backends=(), priority=10, max_bits=8, pallas=True, autotuned=True,
+    oracle="float conv (lax.conv_general_dilated)", bound="fp32",
+    description="implicit-GEMM fused-quantization conv, dequantized MXU "
+                "dot per kernel tap"))
+register_kernel(KernelEntry(
+    name="pallas_conv_lut", op="conv", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), priority=10, max_bits=8,
+    pallas=True, autotuned=True, oracle="im2col + lut_matmul_ref",
+    bound="bit",
+    description="implicit-GEMM full-LUT gather conv (k-sliced)"))
+register_kernel(KernelEntry(
+    name="pallas_conv_nibble", op="conv", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), priority=20, max_bits=8,
+    pallas=True, autotuned=True, oracle="im2col + lut_matmul_ref",
+    bound="bit", predicate=nibble_decomposable,
+    description="implicit-GEMM nibble sub-LUT conv (4 x 2^{b/2} tables)"))
+register_kernel(KernelEntry(
+    name="pallas_conv_log", op="conv", modes=("hardware",),
+    families=("mitchell", "log_our"), backends=(), priority=10,
+    max_bits=16, pallas=True, autotuned=True,
+    oracle="im2col + mitchell_matmul_ref", bound="bit",
+    description="implicit-GEMM log-domain conv (LoD+shift+OR per tap)"))
+
 
 @functools.lru_cache(maxsize=1024)
 def _select_kernel_cached(family: str, mode: str, bits: int, backend: str,
                           spec: Optional[MultiplierSpec]) -> KernelEntry:
     matches = [e for e in _REGISTRY.values()
-               if e.supports(family, mode, bits, backend)
+               if e.op == "gemm" and e.supports(family, mode, bits, backend)
                and (e.predicate is None
                     or (spec is not None and e.predicate(spec)))]
     if not matches:
@@ -255,6 +297,201 @@ def plan_gemm(family: str, mode: str, bits: int, m: int, k: int, n: int,
     return _plan_gemm_cached(family, mode, bits, autotune.bucket(m),
                              autotune.bucket(k), autotune.bucket(n),
                              backend, interpret, block, spec)
+
+
+# ---------------------------------------------------------------------------
+# Conv routing: implicit-GEMM convolution plans (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvParams:
+    """Static conv geometry: kernel taps + stride, kh//2 zero padding
+    (SAME for stride 1).  Odd kernels only — an even kernel under
+    symmetric `kh//2` padding silently computes the wrong conv (the
+    pre-PR-3 `_im2col` bug this class's validation retires)."""
+
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+
+    def __post_init__(self):
+        if self.kh % 2 != 1 or self.kw % 2 != 1:
+            raise ValueError(
+                f"even conv kernels ({self.kh}x{self.kw}) need asymmetric "
+                "padding, which the symmetric kh//2 scheme cannot express")
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+
+
+def conv_out_hw(h: int, w: int, kh: int, kw: int,
+                stride: int = 1) -> Tuple[int, int]:
+    """Output plane of a (kh, kw, stride) conv under kh//2 zero padding
+    (SAME for stride 1).  The single home of this formula — the Pallas
+    kernels (kernels/conv_gemm.py) size their grids with it too."""
+    return ((h + 2 * (kh // 2) - kh) // stride + 1,
+            (w + 2 * (kw // 2) - kw) // stride + 1)
+
+
+def im2col_nhwc(x, conv: ConvParams):
+    """(B,H,W,C) -> (B,OH,OW,kh*kw*C) materialized patch matrix
+    (tap-major columns, then channel) — the HBM-resident oracle the
+    implicit-GEMM kernels replace, and the `conv_im2col` fallback."""
+    kh, kw, s = conv.kh, conv.kw, conv.stride
+    h, w = x.shape[1], x.shape[2]
+    oh, ow = conv_out_hw(h, w, kh, kw, s)
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2),
+                     (0, 0)))
+    cols = [xp[:, i:i + (oh - 1) * s + 1:s, j:j + (ow - 1) * s + 1:s]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+# VMEM footprint budget for one implicit-conv grid step.  Grid input
+# blocks (plane, weight tap-stack, LUT) are double-buffered by the
+# Pallas pipeline; the accumulator is a single-buffered scratch; the
+# bounded (M, k_slice, bn) gather/product temporary is live once.
+# Shapes that exceed it fall back to the materialized im2col path
+# (row-tiled halo DMA is the known follow-up).
+CONV_VMEM_BUDGET = 8 * 1024 * 1024
+_CONV_K_SLICE = 16                     # kernels/conv_gemm.DEFAULT_K_SLICE
+
+
+def _conv_lut_vmem(entry_name: str, bits: int) -> int:
+    if entry_name == "pallas_conv_lut":
+        return 4 * (1 << (2 * bits))           # full signed-product table
+    if entry_name == "pallas_conv_nibble":
+        return 4 * 4 * (1 << bits)             # four 2^{b/2} sub-tables
+    return 0
+
+
+def _conv_kernel_fits(entry_name: str, bits: int,
+                      block: Tuple[int, int, int], h: int, w: int,
+                      conv: ConvParams) -> bool:
+    bb, bc, bn = block
+    oh, ow = conv_out_hw(h, w, conv.kh, conv.kw, conv.stride)
+    m_blk = bb * oh * ow
+    plane = bb * (h + 2 * (conv.kh // 2)) * (w + 2 * (conv.kw // 2)) * bc * 4
+    wtile = conv.kh * conv.kw * bc * bn * 4
+    lut = _conv_lut_vmem(entry_name, bits)
+    acc = m_blk * bn * 4
+    temp = m_blk * _CONV_K_SLICE * bn * 4
+    return 2 * (plane + wtile + lut) + acc + temp <= CONV_VMEM_BUDGET
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """A routed conv: which kernel, geometry, block, interpret or not."""
+
+    entry: KernelEntry
+    conv: ConvParams
+    block: Optional[Tuple[int, int, int]]
+    interpret: bool
+    backend: str
+
+
+@functools.lru_cache(maxsize=1024)
+def _conv_entries_cached(family: str, mode: str, bits: int, backend: str,
+                         spec: Optional[MultiplierSpec]
+                         ) -> Tuple[KernelEntry, ...]:
+    matches = [e for e in _REGISTRY.values()
+               if e.op == "conv" and e.supports(family, mode, bits, backend)
+               and (e.predicate is None
+                    or (spec is not None and e.predicate(spec)))]
+    if not matches:
+        raise ValueError(
+            f"no conv kernel for family={family!r} mode={mode!r} "
+            f"bits={bits} backend={backend!r}; registered: "
+            f"{sorted(e.name for e in _REGISTRY.values() if e.op == 'conv')}")
+    return tuple(sorted(matches, key=lambda e: -e.priority))
+
+
+def select_conv_kernel(family: str, mode: str, bits: int = 8,
+                       backend: Optional[str] = None,
+                       spec: Optional[MultiplierSpec] = None) -> KernelEntry:
+    """Highest-priority conv entry for the request (no footprint gate —
+    `plan_conv` applies that against the concrete plane)."""
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    return _conv_entries_cached(family, mode, bits, backend, spec)[0]
+
+
+def _conv_bit_exact_safe(h: int, w: int, conv: ConvParams) -> bool:
+    """True iff the implicit kernels are bit-identical to the im2col
+    oracle at this geometry.  The implicit path quantizes with
+    quant_scale(x), the oracle with quant_scale(im2col(x)); the
+    max-based scales agree iff every input pixel reaches >= 1 patch:
+    stride <= min(kh, kw) keeps tap coverage contiguous, and the
+    sampling residue (Hp - kh) % stride must not exceed the padding —
+    otherwise trailing real rows/cols are never sampled.  Computed on
+    the *actual* dims (bucketing would mask the residue)."""
+    s = conv.stride
+    if s > min(conv.kh, conv.kw):
+        return False
+    return ((h + 2 * (conv.kh // 2) - conv.kh) % s <= conv.kh // 2
+            and (w + 2 * (conv.kw // 2) - conv.kw) % s <= conv.kw // 2)
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_conv_cached(family: str, mode: str, bits: int, bb: int, hb: int,
+                      wb: int, cb: int, nb: int, conv: ConvParams,
+                      bit_safe: bool, backend: str,
+                      interpret: Optional[bool],
+                      block: Optional[Tuple[int, int, int]],
+                      spec: Optional[MultiplierSpec]) -> ConvPlan:
+    for entry in _conv_entries_cached(family, mode, bits, backend, spec):
+        if entry.bound == "bit" and not bit_safe:
+            continue
+        blk = None
+        if entry.pallas:
+            blk = block
+            if blk is None and entry.autotuned:
+                blk = autotune.best_conv_block(
+                    entry.name, bits, bb, hb, wb, cb, nb, conv.kh,
+                    conv.kw, conv.stride, backend=backend)
+                if not _conv_kernel_fits(entry.name, bits, blk, hb, wb,
+                                         conv):
+                    continue           # plane too large: try lower priority
+        interp = interpret
+        if interp is None:
+            interp = entry.pallas and backend != "tpu"
+        return ConvPlan(entry=entry, conv=conv, block=blk,
+                        interpret=interp, backend=backend)
+    raise ValueError(                  # conv_im2col always matches
+        f"no eligible conv kernel for family={family!r} mode={mode!r}")
+
+
+def plan_conv(family: str, mode: str, bits: int, b: int, h: int, w: int,
+              c: int, n: int, conv: ConvParams,
+              backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              block: Optional[Tuple[int, int, int]] = None,
+              spec: Optional[MultiplierSpec] = None) -> ConvPlan:
+    """Route one conv to an entry + autotuned (bb, bc, bn) block.
+
+    Memoized on the conv-bucketed shape (autotune.bucket_conv): powers
+    of two on the data dims, kernel taps and stride exact — plus the
+    geometry's exact bit-safety flag (`_conv_bit_exact_safe`, which
+    bucketing would mask).  Entries declaring a "bit" bound are skipped
+    when the flag is False (the materialized fallback IS the oracle, so
+    the declared bound is honored by construction), and Pallas entries
+    are additionally gated on the VMEM footprint model
+    (`_conv_kernel_fits`); oversize planes fall back to `conv_im2col`.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    bb, hb, wb, cb, _, _, _ = autotune.bucket_conv(b, h, w, c, conv.kh,
+                                                   conv.kw, conv.stride)
+    return _plan_conv_cached(family, mode, bits, bb, hb, wb, cb,
+                             autotune.bucket(n), conv,
+                             _conv_bit_exact_safe(h, w, conv), backend,
+                             interpret, block, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +636,57 @@ FUSED_RUNNERS: Dict[str, Callable] = {
 
 
 # ---------------------------------------------------------------------------
+# Implicit-GEMM conv runners (f32 in -> f32 out, one pallas_call; §9)
+# ---------------------------------------------------------------------------
+
+
+def _run_conv_mxu(x4, w2, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_mxu_fused(x4, w2, bits=gp.bits, kh=plan.conv.kh,
+                                kw=plan.conv.kw, stride=plan.conv.stride,
+                                block=plan.block, interpret=plan.interpret)
+
+
+def _run_conv_lut(x4, w2, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_lut_fused(x4, w2, gp.spec, kh=plan.conv.kh,
+                                kw=plan.conv.kw, stride=plan.conv.stride,
+                                block=plan.block, interpret=plan.interpret)
+
+
+def _run_conv_nibble(x4, w2, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_nibble_fused(x4, w2, gp.spec, kh=plan.conv.kh,
+                                   kw=plan.conv.kw, stride=plan.conv.stride,
+                                   block=plan.block,
+                                   interpret=plan.interpret)
+
+
+def _run_conv_log(x4, w2, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_log_fused(x4, w2, bits=gp.bits,
+                                compensated=(gp.family == "log_our"),
+                                kh=plan.conv.kh, kw=plan.conv.kw,
+                                stride=plan.conv.stride, block=plan.block,
+                                interpret=plan.interpret)
+
+
+# entry name -> f32 (B,H,W,C) x f32 (kh*kw*C,N) -> f32 (B,OH,OW,N); the
+# patch gather, quantization and dequant epilogue all run inside one
+# pallas_call — no im2col tensor ever touches HBM (DESIGN.md §9)
+CONV_RUNNERS: Dict[str, Callable] = {
+    "pallas_conv_mxu": _run_conv_mxu,
+    "pallas_conv_lut": _run_conv_lut,
+    "pallas_conv_nibble": _run_conv_nibble,
+    "pallas_conv_log": _run_conv_log,
+}
+
+
+# ---------------------------------------------------------------------------
 # Surrogate variance law (shared by both frontends; DESIGN.md §2/§3)
 # ---------------------------------------------------------------------------
 
@@ -477,6 +765,63 @@ def _ste_matmul_eps(forward):
     def bwd(res, g):
         xf, wf, eps = res
         return ((g @ wf.T).astype(xf.dtype), (xf.T @ g).astype(wf.dtype),
+                jnp.zeros_like(eps))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _float_conv(x4, w2, conv: ConvParams):
+    """Exact float conv (the STE gradient reference): x4 (B,H,W,C),
+    w2 (kh*kw*C, N) tap-major -> (B,OH,OW,N)."""
+    c = x4.shape[-1]
+    wk = w2.reshape(conv.kh, conv.kw, c, -1)
+    return jax.lax.conv_general_dilated(
+        x4, wk, (conv.stride, conv.stride),
+        [(conv.kh // 2, conv.kh // 2), (conv.kw // 2, conv.kw // 2)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _ste_conv(forward, conv: ConvParams):
+    """STE wrapper for a (x4, w2) -> out4 conv forward: backward is the
+    exact float convolution's VJP (the conv analogue of g @ w.T /
+    x.T @ g in `_ste_matmul`)."""
+
+    @jax.custom_vjp
+    def f(x4, w2):
+        return forward(x4, w2)
+
+    def fwd(x4, w2):
+        return forward(x4, w2), (x4, w2)
+
+    def bwd(res, g):
+        x4, w2 = res
+        _, vjp = jax.vjp(lambda a, b: _float_conv(a, b, conv),
+                         x4.astype(jnp.float32), w2.astype(jnp.float32))
+        gx, gw = vjp(g.astype(jnp.float32))
+        return gx.astype(x4.dtype), gw.astype(w2.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _ste_conv_eps(forward, conv: ConvParams):
+    """STE conv wrapper for a (x4, w2, eps) forward; pre-drawn surrogate
+    noise rides through with a zero cotangent."""
+
+    @jax.custom_vjp
+    def f(x4, w2, eps):
+        return forward(x4, w2, eps)
+
+    def fwd(x4, w2, eps):
+        return forward(x4, w2, eps), (x4, w2, eps)
+
+    def bwd(res, g):
+        x4, w2, eps = res
+        _, vjp = jax.vjp(lambda a, b: _float_conv(a, b, conv),
+                         x4.astype(jnp.float32), w2.astype(jnp.float32))
+        gx, gw = vjp(g.astype(jnp.float32))
+        return (gx.astype(x4.dtype), gw.astype(w2.dtype),
                 jnp.zeros_like(eps))
 
     f.defvjp(fwd, bwd)
@@ -631,6 +976,54 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     return "plain", fn, stochastic
 
 
+def _conv_forward(gp: GemmParams, plan: ConvPlan, noise_kind: str,
+                  stochastic: bool, shape: Tuple[int, int, int, int, int]):
+    """(forward, takes_eps) for the conv frontend.  Implicit-GEMM Pallas
+    kernels for the routed hardware/exact families; the `conv_im2col`
+    fallback materializes patches and reuses the GEMM forward (every
+    mode, including the surrogates)."""
+    conv = plan.conv
+    if plan.entry.name in CONV_RUNNERS:
+        runner = CONV_RUNNERS[plan.entry.name]
+
+        def forward(x4, w2):
+            _mark_trace()
+            return runner(x4.astype(jnp.float32), w2.astype(jnp.float32),
+                          gp, plan)
+        return forward, False
+
+    # conv_im2col fallback: the inner GEMM plan is resolved once at
+    # build time from the conv-BUCKETED dims (the executable is cached
+    # per conv bucket, so deriving the plan from the first caller's
+    # concrete shape would make block selection call-order-dependent
+    # within a bucket).
+    b, h, w_, c, n = shape
+    hb, wb = autotune.bucket(h), autotune.bucket(w_)
+    oh, ow = conv_out_hw(hb, wb, conv.kh, conv.kw, conv.stride)
+    gplan = plan_gemm(gp.family, gp.mode, gp.bits,
+                      autotune.bucket(b) * oh * ow,
+                      conv.kh * conv.kw * autotune.bucket(c),
+                      autotune.bucket(n), backend=plan.backend,
+                      spec=gp.spec)
+    inner, takes_eps = _cim_forward(gp, gplan, noise_kind, stochastic,
+                                    fused=True)
+    if takes_eps:
+        def forward(x4, w2, eps):
+            _mark_trace()
+            cols = im2col_nhwc(x4.astype(jnp.float32), conv)
+            out2 = inner(cols.reshape(-1, cols.shape[-1]),
+                         w2.astype(jnp.float32), eps)
+            return out2.reshape(cols.shape[:3] + (w2.shape[-1],))
+    else:
+        def forward(x4, w2):
+            _mark_trace()
+            cols = im2col_nhwc(x4.astype(jnp.float32), conv)
+            out2 = inner(cols.reshape(-1, cols.shape[-1]),
+                         w2.astype(jnp.float32))
+            return out2.reshape(cols.shape[:3] + (w2.shape[-1],))
+    return forward, takes_eps
+
+
 # ---------------------------------------------------------------------------
 # Executable cache (zero-retrace steady state, DESIGN.md §8)
 # ---------------------------------------------------------------------------
@@ -713,6 +1106,56 @@ def _executable_for(frontend: str, gp: GemmParams, plan: GemmPlan,
     return fn
 
 
+def _conv_exec_key(gp: GemmParams, plan: ConvPlan, stochastic: bool,
+                   noise_kind: str, x, w, b: int, h: int, w_: int, c: int,
+                   n: int) -> Tuple:
+    return ("conv", gp, plan.entry.name, plan.conv, plan.block,
+            plan.interpret, plan.backend, stochastic, noise_kind,
+            x.dtype, w.dtype) + autotune.bucket_conv(
+                b, h, w_, c, plan.conv.kh, plan.conv.kw,
+                plan.conv.stride) + (autotune.bucket(n),)
+
+
+def _build_conv_executable(gp: GemmParams, plan: ConvPlan, stochastic: bool,
+                           noise_kind: str, shape) -> Callable:
+    forward, takes_eps = _conv_forward(gp, plan, noise_kind, stochastic,
+                                       shape)
+    conv = plan.conv
+    if takes_eps:
+        ste = _ste_conv_eps(forward, conv)
+
+        @jax.jit
+        def run(x, w, key):
+            oh, ow = conv_out_hw(x.shape[1], x.shape[2], conv.kh,
+                                 conv.kw, conv.stride)
+            eps = surrogate_noise(key, (x.shape[0] * oh * ow, w.shape[-1]),
+                                  jnp.float32, noise_kind)
+            return ste(x, w, eps)
+    else:
+        ste = _ste_conv(forward, conv)
+
+        @jax.jit
+        def run(x, w):
+            return ste(x, w)
+    return run
+
+
+def _conv_executable_for(gp: GemmParams, plan: ConvPlan, stochastic: bool,
+                         noise_kind: str, x, w, b: int, h: int, w_: int,
+                         c: int, n: int) -> Callable:
+    key = _conv_exec_key(gp, plan, stochastic, noise_kind, x, w, b, h, w_,
+                         c, n)
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        with _EXEC_LOCK:
+            fn = _EXEC_CACHE.get(key)
+            if fn is None:
+                fn = _build_conv_executable(gp, plan, stochastic,
+                                            noise_kind, (b, h, w_, c, n))
+                _EXEC_CACHE[key] = fn
+    return fn
+
+
 def executable_cache_size() -> int:
     return len(_EXEC_CACHE)
 
@@ -732,6 +1175,8 @@ def clear_dispatch_caches() -> None:
         _FAST_CACHE.clear()
     _select_kernel_cached.cache_clear()
     _plan_gemm_cached.cache_clear()
+    _conv_entries_cached.cache_clear()
+    _plan_conv_cached.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -803,6 +1248,77 @@ def approx_matmul(x: jnp.ndarray, w: jnp.ndarray, spec: MultiplierSpec,
     """
     gp = GemmParams.from_spec(spec, surrogate, mode)
     return cim_matmul(x, w, gp, key, interpret=interpret, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Conv frontend: cim_conv2d (implicit-GEMM convolution, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
+               key: Optional[jax.Array] = None, *,
+               kh: int = 3, kw: int = 3, stride: int = 1,
+               noise_kind: str = "normal",
+               interpret: Optional[bool] = None,
+               block: Optional[Tuple[int, int, int]] = None,
+               cached: bool = True) -> jnp.ndarray:
+    """Dispatch + execute one approximate convolution (macro semantics).
+
+    x: (B, H, W, C) float; w: (kh*kw*C, N) float with tap-major rows
+    (the `im2col_nhwc` column order, i.e. the same weight layout
+    `models/cnn.py` has always used).  Returns float32 (B, OH, OW, N)
+    with straight-through exact-float-conv gradients.
+
+    Hardware/exact modes run the implicit-GEMM Pallas kernels
+    (kernels/conv_gemm.py): the kh*kw patch gather happens inside the
+    pallas_call via index arithmetic, so the (M, kh*kw*C) im2col tensor
+    never exists in HBM — ~kh*kw x less activation traffic than the
+    materialized path.  The integer (hardware-mode) result is
+    bit-identical to `im2col + cim_matmul`; that holds when
+    stride <= min(kh, kw) (every input pixel reaches >= 1 patch, so the
+    max-based per-tensor scale agrees), and `plan_conv` *enforces* it —
+    larger strides, other modes, and planes too large for the VMEM
+    footprint model all fall back to `conv_im2col`
+    (materialize + the GEMM engine).  Executes through the same
+    zero-retrace executable cache as the GEMM frontends, keyed on the
+    conv-bucketed (B, H, W, C, kh, kw, stride) shape.
+    """
+    conv = ConvParams(kh, kw, stride)
+    b, h, w_, c = x.shape
+    n = w.shape[-1]
+    if w.shape[0] != kh * kw * c:
+        raise ValueError(
+            f"weight rows {w.shape[0]} != kh*kw*C = {kh}*{kw}*{c}")
+    if cached:
+        fkey = (("conv2d", gp, conv, x.dtype, w.dtype, key is not None,
+                 noise_kind, interpret, block, jax.default_backend())
+                + autotune.bucket_conv(b, h, w_, c, kh, kw, stride)
+                + (autotune.bucket(n),))
+        hit = _FAST_CACHE.get(fkey)
+        if hit is not None:
+            run, stochastic = hit
+            return run(x, w, key) if stochastic else run(x, w)
+    if gp.mode not in MODES:
+        raise ValueError(f"mode {gp.mode!r} not in {MODES}")
+    plan = plan_conv(gp.family, gp.mode, gp.bits, b, h, w_, c, n, conv,
+                     interpret=interpret, block=block, spec=gp.spec)
+    stochastic = (gp.mode in ("surrogate", "surrogate_fast")
+                  and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
+    if cached:
+        run = _conv_executable_for(gp, plan, stochastic, noise_kind, x, w,
+                                   b, h, w_, c, n)
+        with _EXEC_LOCK:
+            _FAST_CACHE[fkey] = (run, stochastic)
+        return run(x, w, key) if stochastic else run(x, w)
+
+    forward, takes_eps = _conv_forward(gp, plan, noise_kind, stochastic,
+                                       (b, h, w_, c, n))
+    if takes_eps:
+        oh, ow = conv_out_hw(h, w_, conv.kh, conv.kw, conv.stride)
+        eps = surrogate_noise(key, (b * oh * ow, n), jnp.float32,
+                              noise_kind)
+        return _ste_conv_eps(forward, conv)(x, w, eps)
+    return _ste_conv(forward, conv)(x, w)
 
 
 # ---------------------------------------------------------------------------

@@ -60,6 +60,33 @@ _CANDIDATES: Dict[str, List[Block]] = {
                                (64, 128, 128)],
 }
 
+# Conv kernels tile (batch, channel, out-channel): the block triple is
+# (bb, bc, bn) and the implicit-GEMM M dimension is bb*OH*OW (a whole
+# plane of output pixels per step, kernels/conv_gemm.py).  bb floors at
+# 1 — a single image is a valid batch tile.
+DEFAULT_CONV_BLOCKS: Dict[str, Block] = {
+    "pallas_conv_mxu": (8, 32, 128),
+    "pallas_conv_lut": (8, 32, 128),
+    "pallas_conv_nibble": (8, 64, 128),
+    "pallas_conv_log": (8, 32, 64),
+}
+
+_CONV_CANDIDATES: Dict[str, List[Block]] = {
+    # MXU-bound per tap: favour wide channel tiles
+    "pallas_conv_mxu": [(8, 32, 128), (16, 32, 128), (8, 64, 128),
+                        (4, 32, 256)],
+    # gather-bound: the (bb*OH*OW, k_slice, bn) index temporary scales
+    # with bb, so the candidates trade batch tile against channel tile
+    "pallas_conv_lut": [(8, 32, 128), (4, 32, 128), (8, 64, 128),
+                        (16, 32, 128)],
+    "pallas_conv_nibble": [(8, 64, 128), (8, 32, 128), (16, 64, 128),
+                           (4, 128, 128)],
+    # VPU select/shift chains: keep the (M, k_slice, bn) product
+    # temporaries small
+    "pallas_conv_log": [(8, 32, 64), (4, 16, 64), (4, 32, 64),
+                        (8, 16, 32)],
+}
+
 _ENV_CACHE = "OPENACM_AUTOTUNE_CACHE"
 _mem_cache: Dict[str, Block] = {}
 _lock = threading.Lock()
@@ -150,6 +177,44 @@ def clear_memory_cache() -> None:
         _mem_cache.clear()
 
 
+def _resolve(key: str, candidates: List[Block], fallback: Block,
+             measure: Optional[Callable[[Block], float]],
+             cache_file: Optional[str]) -> Block:
+    """Shared mem-cache -> hardened disk-cache -> sweep/heuristic logic
+    behind `best_block` and `best_conv_block`.  No `measure` (CPU
+    heuristic path) never touches the disk cache."""
+    with _lock:
+        if key in _mem_cache:
+            return _mem_cache[key]
+    path = cache_file or cache_path()
+    disk = _load_disk(path)
+    if key in disk:
+        with _lock:
+            _mem_cache[key] = disk[key]
+        return disk[key]
+
+    if measure is None:
+        with _lock:
+            _mem_cache[key] = fallback
+        return fallback
+
+    timings = []
+    for block in candidates:
+        try:
+            timings.append((measure(block), block))
+        except Exception:  # noqa: BLE001 — a block can exceed VMEM
+            continue
+    block = min(timings)[1] if timings else fallback
+    with _lock:
+        _mem_cache[key] = block
+        # merge-on-save: re-load under the lock so concurrent tuners
+        # (multi-host workers, pytest-xdist) don't drop each other's rows
+        merged = _load_disk(path)
+        merged[key] = block
+        _save_disk(path, merged)
+    return block
+
+
 def best_block(kernel: str, bits: int, m: int, k: int, n: int,
                backend: Optional[str] = None,
                measure: Optional[Callable[[Block], float]] = None,
@@ -164,43 +229,76 @@ def best_block(kernel: str, bits: int, m: int, k: int, n: int,
         import jax
 
         backend = jax.default_backend()
-    key = cache_key(kernel, bits, m, k, n, backend)
-    with _lock:
-        if key in _mem_cache:
-            return _mem_cache[key]
-    path = cache_file or cache_path()
-    disk = _load_disk(path)
-    if key in disk:
-        with _lock:
-            _mem_cache[key] = disk[key]
-        return disk[key]
-
     if measure is None and backend == "tpu":
         measure = _default_measure(kernel, bits, m, k, n)
-    if measure is None:
-        block = heuristic_block(kernel, m, k, n)
-        with _lock:
-            _mem_cache[key] = block
-        return block
+    return _resolve(cache_key(kernel, bits, m, k, n, backend),
+                    candidate_blocks(kernel, m, k, n),
+                    heuristic_block(kernel, m, k, n), measure, cache_file)
 
-    timings = []
-    for block in candidate_blocks(kernel, m, k, n):
-        try:
-            timings.append((measure(block), block))
-        except Exception:  # noqa: BLE001 — a block can exceed VMEM
-            continue
-    if not timings:
-        block = heuristic_block(kernel, m, k, n)
-    else:
-        block = min(timings)[1]
-    with _lock:
-        _mem_cache[key] = block
-        # merge-on-save: re-load under the lock so concurrent tuners
-        # (multi-host workers, pytest-xdist) don't drop each other's rows
-        merged = _load_disk(path)
-        merged[key] = block
-        _save_disk(path, merged)
-    return block
+
+# ---------------------------------------------------------------------------
+# Conv-shaped resolution (implicit-GEMM kernels, kernels/conv_gemm.py)
+# ---------------------------------------------------------------------------
+
+
+def bucket_conv(b: int, h: int, w: int, c: int, kh: int, kw: int,
+                stride: int = 1) -> Tuple[int, ...]:
+    """Conv-shape bucketing (the dispatch-engine executable-cache key,
+    core/approx_gemm.cim_conv2d): powers of two on the data dims, the
+    kernel taps and stride kept exact — they change the kernel's index
+    arithmetic, not just tile residency."""
+    return (bucket(b), bucket(h), bucket(w), bucket(c), kh, kw, stride)
+
+
+def conv_cache_key(kernel: str, bits: int, b: int, h: int, w: int, c: int,
+                   n: int, kh: int, kw: int, stride: int,
+                   backend: str) -> str:
+    bb, hb, wb, cb, _, _, _ = bucket_conv(b, h, w, c, kh, kw, stride)
+    return (f"{kernel}:b{bits}:conv{bb}x{hb}x{wb}x{cb}x{bucket(n)}"
+            f":k{kh}x{kw}s{stride}:{backend}")
+
+
+def _clip_conv_block(block: Block, b: int, c: int, n: int) -> Block:
+    bm, bc, bn = block
+    return (max(1, min(bm, bucket(b))), max(8, min(bc, bucket(c))),
+            max(8, min(bn, bucket(n))))
+
+
+def heuristic_conv_block(kernel: str, b: int, c: int, n: int) -> Block:
+    return _clip_conv_block(DEFAULT_CONV_BLOCKS.get(kernel, (8, 32, 128)),
+                            b, c, n)
+
+
+def candidate_conv_blocks(kernel: str, b: int, c: int, n: int) -> List[Block]:
+    cands = _CONV_CANDIDATES.get(
+        kernel, [DEFAULT_CONV_BLOCKS.get(kernel, (8, 32, 128))])
+    out: List[Block] = []
+    for cand in cands:
+        clipped = _clip_conv_block(cand, b, c, n)
+        if clipped not in out:
+            out.append(clipped)
+    return out
+
+
+def best_conv_block(kernel: str, bits: int, b: int, h: int, w: int, c: int,
+                    n: int, kh: int = 3, kw: int = 3, stride: int = 1,
+                    backend: Optional[str] = None,
+                    measure: Optional[Callable[[Block], float]] = None,
+                    cache_file: Optional[str] = None) -> Block:
+    """`best_block` for the implicit-GEMM conv kernels: same disk cache,
+    same corrupt-cache hardening, conv-shaped key and candidates."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    if measure is None and backend == "tpu":
+        measure = _default_conv_measure(kernel, bits, b, h, w, c, n,
+                                        kh, kw, stride)
+    return _resolve(conv_cache_key(kernel, bits, b, h, w, c, n, kh, kw,
+                                   stride, backend),
+                    candidate_conv_blocks(kernel, b, c, n),
+                    heuristic_conv_block(kernel, b, c, n), measure,
+                    cache_file)
 
 
 def _default_measure(kernel: str, bits: int, m: int, k: int,
@@ -239,6 +337,57 @@ def _default_measure(kernel: str, bits: int, m: int, k: int,
             return ops.cim_gemm_core(xq, wq, need_sq=True, block=block,
                                      interpret=False)[0]
         raise ValueError(f"no measure recipe for kernel {kernel!r}")
+
+    def measure(block: Block) -> float:
+        jax.block_until_ready(run(block))          # compile + warm
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run(block))
+        return (time.perf_counter() - t0) / reps
+
+    return measure
+
+
+def _default_conv_measure(kernel: str, bits: int, b: int, h: int, w: int,
+                          c: int, n: int, kh: int, kw: int,
+                          stride: int) -> Callable[[Block], float]:
+    """Wall-clock measure for the real (non-interpret) conv kernels."""
+    import time
+
+    import jax
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((b, h, w, c)).astype(np.float32))
+    w2 = jnp.asarray(
+        rng.standard_normal((kh * kw * c, n)).astype(np.float32))
+
+    def run(block: Block):
+        from repro.core.multipliers import MultiplierSpec
+        from repro.kernels import ops
+
+        if kernel == "pallas_conv_mxu":
+            return ops.conv2d_mxu_fused(x, w2, bits=bits, kh=kh, kw=kw,
+                                        stride=stride, block=block,
+                                        interpret=False)
+        if kernel == "pallas_conv_lut":
+            spec = MultiplierSpec("appro42", bits, True)
+            return ops.conv2d_lut_fused(x, w2, spec, kh=kh, kw=kw,
+                                        stride=stride, block=block,
+                                        interpret=False)
+        if kernel == "pallas_conv_nibble":
+            spec = MultiplierSpec("exact", bits, True)
+            return ops.conv2d_nibble_fused(x, w2, spec, kh=kh, kw=kw,
+                                           stride=stride, block=block,
+                                           interpret=False)
+        if kernel == "pallas_conv_log":
+            return ops.conv2d_log_fused(x, w2, bits=bits, compensated=True,
+                                        kh=kh, kw=kw, stride=stride,
+                                        block=block, interpret=False)
+        raise ValueError(f"no conv measure recipe for kernel {kernel!r}")
 
     def measure(block: Block) -> float:
         jax.block_until_ready(run(block))          # compile + warm

@@ -1,0 +1,306 @@
+"""Pallas TPU kernels: implicit-GEMM CiM convolution (DESIGN.md §9).
+
+`models/cnn.py` historically materialized a `(B, OH, OW, kh*kw*C)`
+im2col tensor in HBM — kh·kw× the activation bytes of a conv layer —
+and then reshaped it through the GEMM engine.  These kernels fuse that
+patch gather into the `pallas_call` itself: each grid step holds one
+padded input *plane* tile `(bb, Hp, Wp, bc)` in VMEM and, per kernel
+tap (ki, kj), slices the shifted window out of the resident tile with
+pure index arithmetic — the `(M, K)` im2col operand is never written to
+(or read back from) HBM.  The conv is a GEMM with
+
+    M = bb·OH·OW   (batch-major flattened output pixels)
+    K = kh·kw·C    (reduced as: static tap loop × channel grid dim)
+    N = C_out
+
+Grid = (B/bb, N/bn, C/bc), channel innermost so the accumulator lives
+in a VMEM scratch across channel steps; the kh·kw tap loop is unrolled
+inside the kernel body (kh, kw are trace-time constants).  Every family
+has a **fused-quantization** entry point mirroring the PR-2 GEMM
+kernels (f32 operands in → f32 out in ONE pallas_call: per-tensor `sx`
+in SMEM, per-out-channel `sw` tiled through VMEM, quantize on tile
+load, `(acc · sx) · sw` dequant epilogue on the channel-final flush):
+
+  * ``conv_mxu_fused``    — exact family: dequantized MXU dot per tap.
+  * ``conv_lut_fused``    — LUT families: full-table k-sliced gather or
+                            nibble sub-LUT gather (``nibble=True``),
+                            bit-identical to im2col + the GEMM kernels.
+  * ``conv_log_fused``    — mitchell/log_our: the arithmetic log-domain
+                            datapath (LoD + shifts + OR-merge) per tap.
+
+The *oracle surface* for these kernels is the materialized path:
+`im2col + lut_matmul_ref / mitchell_matmul_ref` (equivalently
+`models.cnn._im2col + cim_linear`); the integer cores are asserted
+bit-identical there (tests/test_conv.py).  Bit-identity holds because
+symmetric quantization is elementwise and max-based: quantizing patches
+of x under `quant_scale(x)` equals quantizing `im2col(x)` under
+`quant_scale(im2col(x))` whenever stride ≤ min(kh, kw) (every input
+pixel appears in ≥1 patch, and SAME zero-padding never raises the max).
+
+Validated in interpret mode per the repo policy (DESIGN.md §2); on TPU
+the plane tile must fit VMEM — `core/approx_gemm.plan_conv` gates
+eligibility on a footprint model and falls back to the materialized
+im2col + GEMM path for planes that don't fit (a row-tiled halo-DMA
+variant is the known follow-up for large images).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# kernels may import core (DESIGN.md §1): the output-geometry formula
+# lives once, in the dispatch layer, shared with plan_conv/cim_conv2d
+from repro.core.approx_gemm import conv_out_hw as out_hw
+
+from .approx_matmul import _gather_full, _gather_nibble, _quantize_tile
+from .mitchell_gemm import _log_product
+
+# Conv gathers materialize (bb*OH*OW, k_slice, bn) temporaries; 16
+# matches the GEMM kernels (fewer, larger gathers measure fastest in
+# interpret mode too) — `plan_conv`'s footprint model accounts for it.
+DEFAULT_K_SLICE = 16
+
+
+def _taps(xt, kh: int, kw: int, oh: int, ow: int, stride: int):
+    """Implicit-GEMM A tiles: for each kernel tap (ki, kj), slice the
+    shifted (bb, oh, ow, bc) window out of the resident padded plane
+    xt (bb, Hp, Wp, bc) and flatten it to the (bb*oh*ow, bc) operand.
+    Pure index arithmetic — nothing is materialized in HBM."""
+    bc = xt.shape[-1]
+    m = xt.shape[0] * oh * ow
+    for ki in range(kh):
+        for kj in range(kw):
+            a = xt[:, ki:ki + (oh - 1) * stride + 1:stride,
+                   kj:kj + (ow - 1) * stride + 1:stride, :]
+            yield ki * kw + kj, a.reshape(m, bc)
+
+
+def _pad_operands(x, w3, sw, kh, kw, block):
+    """Pad (batch, channel, out-channel) to the block grid.  Block dims
+    are first shrunk to the true operand extents — a 3-channel input
+    plane gathers 3 channels, not a padded 8 (padding only to whole
+    multiples of the *effective* block keeps wasted gather volume
+    bounded by the last block).  Channel and batch pads are zeros
+    (annihilated by every family: exact/MXU by arithmetic, LUTs by the
+    build-time zero-annihilation assertion, log by its explicit zero
+    guard); out-channel scale pads are 1.0 so the epilogue stays finite
+    on padded columns."""
+    if kh % 2 != 1 or kw % 2 != 1:
+        raise ValueError(
+            f"even conv kernels ({kh}x{kw}) need asymmetric padding, "
+            "which the symmetric kh//2 scheme cannot express")
+    b, _, _, c = x.shape
+    n = w3.shape[-1]
+    bb, bc, bn = block
+    bb, bc, bn = min(bb, b), min(bc, c), min(bn, n)
+    ph, pw = kh // 2, kw // 2
+    pb, pc, pn = (-b) % bb, (-c) % bc, (-n) % bn
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, pb), (ph, ph), (pw, pw), (0, pc)))
+    wp = jnp.pad(w3.astype(jnp.float32), ((0, 0), (0, pc), (0, pn)))
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    grid = ((b + pb) // bb, (n + pn) // bn, (c + pc) // bc)
+    return xp, wp, swp, grid, (bb, bc, bn)
+
+
+def _conv_call(kernel_fn, xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+               acc_dtype, out_dtype, interpret, extra=None):
+    """Shared pallas_call plumbing for the fused conv kernels."""
+    bb, bc, bn = block
+    hp, wpx = xp.shape[1], xp.shape[2]
+    m_blk = bb * oh * ow
+    bp, np_ = xp.shape[0], wp.shape[-1]
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((bb, hp, wpx, bc), lambda ib, jn, kc: (ib, 0, 0, kc)),
+        pl.BlockSpec((kh * kw, bc, bn), lambda ib, jn, kc: (0, kc, jn)),
+        pl.BlockSpec((1, bn), lambda ib, jn, kc: (0, jn)),
+    ]
+    operands = [sx2, xp, wp, swp]
+    if extra is not None:
+        in_specs.append(pl.BlockSpec((extra.shape[0],),
+                                     lambda ib, jn, kc: (0,)))
+        operands.append(extra)
+    out = pl.pallas_call(
+        kernel_fn,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m_blk, bn), lambda ib, jn, kc: (ib, jn)),
+        out_shape=jax.ShapeDtypeStruct((bp * oh * ow, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m_blk, bn), acc_dtype)],
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(bp, oh, ow, np_)
+
+
+# ---------------------------------------------------------------------------
+# Exact family: dequantized MXU dot per tap
+# ---------------------------------------------------------------------------
+
+
+def _mxu_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, geom,
+                bits):
+    kh, kw, oh, ow, stride = geom
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qmax = (1 << (bits - 1)) - 1
+    sx = sx_ref[0, 0]
+    sw = sw_ref[...]                                     # (1, bn)
+    wt = w_ref[...]                                      # (kh*kw, bc, bn)
+    xt = x_ref[...]                                      # (bb, Hp, Wp, bc)
+    for idx, a2 in _taps(xt, kh, kw, oh, ow, stride):
+        adq = _quantize_tile(a2, sx, qmax).astype(jnp.float32) * sx
+        wdq = _quantize_tile(wt[idx], sw, qmax).astype(jnp.float32) * sw
+        acc_ref[...] += jnp.dot(adq, wdq,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "kh", "kw", "stride",
+                                             "block", "interpret"))
+def conv_mxu_fused(x, w3, sx, sw, bits: int = 8, kh: int = 3, kw: int = 3,
+                   stride: int = 1, block: tuple = (8, 32, 128),
+                   interpret: bool = True):
+    """Exact-family implicit-GEMM conv: f32 x (B,H,W,C), w3 (kh*kw,C,N)
+    -> f32 (B,OH,OW,N).  Quantize-dequantize + MXU dot per tap, one HBM
+    pass (the conv twin of the ``mxu_dot`` GEMM entry)."""
+    b, h, w_, _ = x.shape
+    n = w3.shape[-1]
+    oh, ow = out_hw(h, w_, kh, kw, stride)
+    xp, wp, swp, grid, block = _pad_operands(x, w3, sw, kh, kw, block)
+    out = _conv_call(
+        functools.partial(_mxu_kernel, geom=(kh, kw, oh, ow, stride),
+                          bits=bits),
+        xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+        jnp.float32, jnp.float32, interpret)
+    return out[:b, :, :, :n]
+
+
+# ---------------------------------------------------------------------------
+# LUT families: full-table / nibble sub-LUT gather per tap
+# ---------------------------------------------------------------------------
+
+
+def _lut_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
+                geom, bits, k_slice, nibble):
+    kh, kw, oh, ow, stride = geom
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    half = 1 << (bits - 1)
+    nlev = 1 << bits
+    qmax = half - 1
+    sx = sx_ref[0, 0]
+    sw = sw_ref[...]
+    wt = w_ref[...]
+    lut = lut_ref[...]
+    xt = x_ref[...]
+    for idx, a2 in _taps(xt, kh, kw, oh, ow, stride):
+        aq = _quantize_tile(a2, sx, qmax)
+        bq = _quantize_tile(wt[idx], sw, qmax)
+        if nibble:
+            acc_ref[...] += _gather_nibble(lut, jnp.abs(aq), jnp.abs(bq),
+                                           jnp.sign(aq), jnp.sign(bq),
+                                           bits // 2, k_slice)
+        else:
+            acc_ref[...] += _gather_full(lut, aq + half, bq + half, nlev,
+                                         k_slice)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[0, 0]) * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "kh", "kw", "stride",
+                                             "block", "interpret",
+                                             "k_slice", "nibble"))
+def conv_lut_fused(x, w3, lut_flat, sx, sw, bits: int = 8, kh: int = 3,
+                   kw: int = 3, stride: int = 1,
+                   block: tuple = (8, 32, 128), interpret: bool = True,
+                   k_slice: int = DEFAULT_K_SLICE, nibble: bool = False):
+    """LUT-family implicit-GEMM conv, bit-identical integer core to
+    im2col + ``lut_matmul``/``nibble_lut_matmul``.  ``lut_flat`` is the
+    full signed-product table (``nibble=False``) or the raveled four
+    sub-LUTs (``nibble=True``, core.luts.nibble_sub_luts)."""
+    b, h, w_, _ = x.shape
+    n = w3.shape[-1]
+    oh, ow = out_hw(h, w_, kh, kw, stride)
+    xp, wp, swp, grid, block = _pad_operands(x, w3, sw, kh, kw, block)
+    out = _conv_call(
+        functools.partial(_lut_kernel, geom=(kh, kw, oh, ow, stride),
+                          bits=bits, k_slice=k_slice, nibble=nibble),
+        xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+        jnp.int32, jnp.float32, interpret, extra=lut_flat)
+    return out[:b, :, :, :n]
+
+
+# ---------------------------------------------------------------------------
+# Log families: arithmetic log-domain datapath per tap
+# ---------------------------------------------------------------------------
+
+
+def _log_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, geom,
+                bits, compensated, k_slice):
+    kh, kw, oh, ow, stride = geom
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qmax = (1 << (bits - 1)) - 1
+    sx = sx_ref[0, 0]
+    sw = sw_ref[...]
+    wt = w_ref[...]
+    xt = x_ref[...]
+    for idx, a2 in _taps(xt, kh, kw, oh, ow, stride):
+        aq = _quantize_tile(a2, sx, qmax)
+        bq = _quantize_tile(wt[idx], sw, qmax)
+        bc = aq.shape[-1]
+        for s in range(0, bc, k_slice):
+            e = min(s + k_slice, bc)
+            prods = _log_product(aq[:, s:e, None], bq[None, s:e, :], bits,
+                                 compensated)
+            acc_ref[...] += prods.sum(axis=1, dtype=jnp.int32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * sx_ref[0, 0]) * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "compensated", "kh",
+                                             "kw", "stride", "block",
+                                             "interpret", "k_slice"))
+def conv_log_fused(x, w3, sx, sw, bits: int = 8, compensated: bool = True,
+                   kh: int = 3, kw: int = 3, stride: int = 1,
+                   block: tuple = (4, 16, 64), interpret: bool = True,
+                   k_slice: int = DEFAULT_K_SLICE):
+    """Log-family implicit-GEMM conv (mitchell / log_our), bit-identical
+    integer core to im2col + ``mitchell_matmul``."""
+    b, h, w_, _ = x.shape
+    n = w3.shape[-1]
+    oh, ow = out_hw(h, w_, kh, kw, stride)
+    xp, wp, swp, grid, block = _pad_operands(x, w3, sw, kh, kw, block)
+    out = _conv_call(
+        functools.partial(_log_kernel, geom=(kh, kw, oh, ow, stride),
+                          bits=bits, compensated=compensated,
+                          k_slice=k_slice),
+        xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+        jnp.int32, jnp.float32, interpret)
+    return out[:b, :, :, :n]

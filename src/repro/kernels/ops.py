@@ -31,6 +31,7 @@ from repro.core.quantization import quant_scale
 from .approx_matmul import (lut_matmul, lut_matmul_fused, nibble_lut_matmul,
                             nibble_lut_matmul_fused)
 from .cim_gemm import cim_gemm, cim_gemm_core, cim_gemm_fused
+from .conv_gemm import conv_log_fused, conv_lut_fused, conv_mxu_fused
 from .mitchell_gemm import mitchell_matmul, mitchell_matmul_fused
 
 
@@ -146,6 +147,89 @@ def log_matmul_fused(x, w, bits: int = 8, compensated: bool = True,
                                  interpret=interp)
 
 
+# ---------------------------------------------------------------------------
+# Implicit-GEMM convolution wrappers (kernels/conv_gemm.py, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_conv_block(kernel: str, bits: int, b, h, w, c, n, kh, kw,
+                        stride, block):
+    if block is not None:
+        return block
+    return autotune.best_conv_block(kernel, bits, b, h, w, c, n, kh, kw,
+                                    stride)
+
+
+def conv2d_mxu_fused(x, w2, bits: int = 8, kh: int = 3, kw: int = 3,
+                     stride: int = 1, block=None,
+                     interpret: Optional[bool] = None):
+    """Exact-family fused-quantization implicit-GEMM conv.
+
+    x (B,H,W,C) float, w2 (kh*kw*C, N) float (tap-major rows, matching
+    models.cnn._im2col's column order) -> f32 (B,OH,OW,N)."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w2.shape[-1]
+    block = _resolve_conv_block("pallas_conv_mxu", bits, b, h, w_, c, n,
+                                kh, kw, stride, block)
+    sx, sw = _scales(x, w2, bits)
+    return conv_mxu_fused(x, w2.reshape(kh * kw, c, n), sx, sw, bits=bits,
+                          kh=kh, kw=kw, stride=stride, block=block,
+                          interpret=interp)
+
+
+def conv2d_lut_fused(x, w2, spec: MultiplierSpec, kh: int = 3, kw: int = 3,
+                     stride: int = 1, block=None,
+                     interpret: Optional[bool] = None):
+    """Full-LUT fused-quantization implicit-GEMM conv (any LUT family);
+    bit-identical integer core to im2col + ``lut_matmul``."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w2.shape[-1]
+    block = _resolve_conv_block("pallas_conv_lut", spec.bits, b, h, w_, c,
+                                n, kh, kw, stride, block)
+    lut = _lut_for(spec.family, spec.bits, spec.compressor,
+                   spec.n_approx_cols)
+    sx, sw = _scales(x, w2, spec.bits)
+    return conv_lut_fused(x, w2.reshape(kh * kw, c, n), lut, sx, sw,
+                          bits=spec.bits, kh=kh, kw=kw, stride=stride,
+                          block=block, interpret=interp, nibble=False)
+
+
+def conv2d_nibble_fused(x, w2, spec: MultiplierSpec, kh: int = 3,
+                        kw: int = 3, stride: int = 1, block=None,
+                        interpret: Optional[bool] = None):
+    """Nibble sub-LUT fused-quantization implicit-GEMM conv (spec must
+    be decomposable; routing guarantees it, core/approx_gemm)."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w2.shape[-1]
+    block = _resolve_conv_block("pallas_conv_nibble", spec.bits, b, h, w_,
+                                c, n, kh, kw, stride, block)
+    subs = _subs_for(spec.family, spec.bits, spec.compressor,
+                     spec.n_approx_cols)
+    sx, sw = _scales(x, w2, spec.bits)
+    return conv_lut_fused(x, w2.reshape(kh * kw, c, n), subs, sx, sw,
+                          bits=spec.bits, kh=kh, kw=kw, stride=stride,
+                          block=block, interpret=interp, nibble=True)
+
+
+def conv2d_log_fused(x, w2, bits: int = 8, compensated: bool = True,
+                     kh: int = 3, kw: int = 3, stride: int = 1, block=None,
+                     interpret: Optional[bool] = None):
+    """Log-domain fused-quantization implicit-GEMM conv (mitchell /
+    log_our); bit-identical integer core to im2col + ``mitchell_matmul``."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w2.shape[-1]
+    block = _resolve_conv_block("pallas_conv_log", bits, b, h, w_, c, n,
+                                kh, kw, stride, block)
+    sx, sw = _scales(x, w2, bits)
+    return conv_log_fused(x, w2.reshape(kh * kw, c, n), sx, sw, bits=bits,
+                          compensated=compensated, kh=kh, kw=kw,
+                          stride=stride, block=block, interpret=interp)
+
+
 def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
                    block=None, interpret: Optional[bool] = None):
     """Fused production surrogate GEMM (int-in oracle surface)."""
@@ -170,5 +254,7 @@ def surrogate_gemm_fused(x, w, eps, mu, c0, c1, bits: int = 8,
 __all__ = ["approx_matmul_bit_exact", "approx_matmul_fused",
            "nibble_matmul_bit_exact", "nibble_matmul_fused",
            "log_matmul", "log_matmul_fused",
+           "conv2d_mxu_fused", "conv2d_lut_fused", "conv2d_nibble_fused",
+           "conv2d_log_fused",
            "surrogate_gemm", "surrogate_gemm_fused",
            "cim_gemm_core", "default_interpret"]

@@ -36,8 +36,8 @@ def main():
     params = lm.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     b, s = args.batch, args.prompt_len
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s))),
-             "max_len": s + args.gen}
+    max_len = s + args.gen
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))}
     if cfg.vision is not None:
         batch["vision"] = jnp.ones((b, cfg.vision.n_tokens,
                                     cfg.vision.d_vision), jnp.float32)
@@ -45,17 +45,30 @@ def main():
         batch["enc_frames"] = jnp.ones((b, cfg.encoder.n_frames,
                                         cfg.d_model), jnp.bfloat16)
 
+    # max_len sizes the decode caches, so it must be a trace-time
+    # constant: close over the python int instead of shipping it through
+    # the jitted batch dict (where it would arrive as a tracer)
+    prefill = jax.jit(
+        lambda p, bt: lm.prefill(p, dict(bt, max_len=max_len)))
     t0 = time.perf_counter()
-    logits, caches = jax.jit(lm.prefill)(params, batch)
+    logits, caches = prefill(params, batch)
     tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    # async dispatch returns before the work does: block on everything
+    # the timer claims to cover, or prefill cost leaks into decode
+    jax.block_until_ready((tok, caches))
     t_pref = time.perf_counter() - t0
-    decode = jax.jit(lm.decode_step)
+    # donate the decode caches: each step's KV/state buffers are dead
+    # the moment the next step's are produced, so XLA can update them
+    # in place instead of allocating a second cache-sized footprint
+    # (ignored with a warning on backends without donation, e.g. CPU)
+    decode = jax.jit(lm.decode_step, donate_argnums=(1,))
     outs = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
         logits, caches = decode(params, caches, tok, jnp.int32(s + i))
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         outs.append(tok)
+    jax.block_until_ready(tok)
     dt = (time.perf_counter() - t0) / max(args.gen - 1, 1)
     gen = np.asarray(jnp.concatenate(outs, axis=1))
     print(f"[{cfg.name}] prefill {s}t {t_pref*1e3:.0f}ms, decode "

@@ -1,10 +1,17 @@
 """Small ResNet-style CNN for the paper's Table-IV experiment.
 
-Convolutions run as im2col + `cim_linear`, so the whole network executes
-against a compiled CiM macro: exact for training (QAT), and any
-approximate multiplier family (bit-exact LUT semantics) for inference —
-the ResNet-18/ILSVRC evaluation scaled to what a CPU container can
-train (see DESIGN.md §7 for the deviation note).
+Convolutions execute against a compiled CiM macro two ways (DESIGN.md
+§9): the hot path (`fused=True`, bit_exact/hardware modes) routes
+through `core.approx_gemm.cim_conv2d` — implicit-GEMM Pallas kernels
+that gather the kh*kw patches inside the pallas_call, so the im2col
+tensor never touches HBM — while `_im2col + cim_linear` remains the
+materialized **oracle surface**: the bit-exact reference the conv tests
+hold the implicit kernels to, the `fused=False` benchmark baseline
+(benchmarks/bench_conv.py), and the execution path for the remaining
+modes (off / exact / surrogate — where QAT fake-quant gradients, noise
+keys and per-name allocation live in `cim_linear`).  This is the
+ResNet-18/ILSVRC evaluation scaled to what a CPU container can train
+(see DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -14,23 +21,49 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from .common import CiMContext, Param, cim_linear, param
+from repro.core.approx_gemm import ConvParams, cim_conv2d, im2col_nhwc
+
+from .common import CiMContext, Param, cim_linear, fsdp_gather, param
+
+# conv2d modes that run the implicit-GEMM frontend.  "exact" stays on
+# the materialized cim_linear path on purpose: that is the QAT
+# configuration, and cim_linear's fake-quant backward (gradients flow
+# through the quantizer, quantized operands in the VJP) is part of its
+# training semantics — cim_conv2d's pure-STE float-conv VJP is not a
+# drop-in replacement for it.  Exact-mode *macro* callers (and the
+# pallas_conv_mxu bench row) use cim_conv2d directly.
+_IMPLICIT_MODES = ("bit_exact", "hardware")
 
 
-def _im2col(x, kh: int, kw: int):
-    """x: (B, H, W, C) -> (B, H, W, kh*kw*C) with SAME padding."""
-    b, h, w, c = x.shape
-    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
-    cols = [xp[:, i:i + h, j:j + w] for i in range(kh) for j in range(kw)]
-    return jnp.concatenate(cols, axis=-1)
+def _im2col(x, kh: int, kw: int, stride: int = 1):
+    """x: (B, H, W, C) -> (B, OH, OW, kh*kw*C); kh//2 zero padding (SAME
+    for stride 1).  Odd kernels only — the old hard-coded 3x3 form
+    silently mis-padded even kernels (ConvParams validates)."""
+    return im2col_nhwc(x, ConvParams(kh, kw, stride))
 
 
-def conv2d(params, x, ctx: CiMContext, name: str):
-    """3x3 SAME conv through the CiM matmul path."""
-    cols = _im2col(x, 3, 3)
-    b, h, w, k = cols.shape
-    y = cim_linear(cols.reshape(b * h * w, k), params, ctx, name)
-    return y.reshape(b, h, w, -1)
+def conv2d(params, x, ctx: CiMContext, name: str, kh: int = 3, kw: int = 3,
+           stride: int = 1, fused: bool = True):
+    """(kh, kw, stride) conv through the CiM execution engine.
+
+    `fused=True` (default) dispatches the integer modes
+    (bit_exact/hardware) to `cim_conv2d` (implicit-GEMM kernels, one
+    HBM pass, bit-identical to the materialized path); `fused=False`
+    forces the im2col + `cim_linear` oracle/baseline path, which the
+    off/exact/surrogate modes always take.
+    """
+    p = ctx.p
+    if fused and p.mode in _IMPLICIT_MODES and p.selects(name):
+        out = cim_conv2d(x, fsdp_gather(params), p.gemm_params(), kh=kh,
+                         kw=kw, stride=stride)
+        return out.astype(x.dtype)
+    # off / exact / surrogate / unselected (mixed-macro allocation runs
+    # the exact int8 macro with QAT fake-quant semantics inside
+    # cim_linear): the materialized path
+    cols = _im2col(x, kh, kw, stride)
+    b, oh, ow, k = cols.shape
+    y = cim_linear(cols.reshape(b * oh * ow, k), params, ctx, name)
+    return y.reshape(b, oh, ow, -1)
 
 
 def init_cnn(key, n_classes: int = 10, width: int = 16) -> Dict:
