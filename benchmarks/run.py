@@ -1,7 +1,7 @@
 """Benchmark driver: one entry per paper table, the roofline report and
 the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
-BENCH_dispatch.json; bench_conv -> BENCH_conv.json).  Prints
-``name,us_per_call,derived`` CSV at the end.
+BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_serve ->
+BENCH_serve.json).  Prints ``name,us_per_call,derived`` CSV at the end.
 
 Flags:
   --fast      skip the slow CNN table; smaller kernel shape sweep
@@ -16,9 +16,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_conv, bench_kernels, roofline,
-                            table2_ppa, table3_psnr, table4_cnn,
-                            table5_yield)
+    from benchmarks import (bench_conv, bench_kernels, bench_serve,
+                            roofline, table2_ppa, table3_psnr,
+                            table4_cnn, table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -61,6 +61,12 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_conv", 0.0, f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(bench_serve.run(fast=fast or "--kernels" in sys.argv,
+                                    smoke=smoke))
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_serve", 0.0, f"ERROR:{type(e).__name__}"))
     if mods:
         try:
             rows.extend(roofline.energy_report())

@@ -1,66 +1,72 @@
-"""Batched serving demo: prefill a batch of prompts, then greedy-decode
-with every matmul running in the CiM surrogate mode — the decode path
-exercises each architecture family's cache mechanism.
+"""Continuous-batching serving demo: submit a handful of requests with
+different declared error tolerances, watch the tier router map each one
+to a CiM accuracy tier (exact / appro42 / log-domain), and serve them
+through the slot-pool engine — requests arrive at different times, join
+the running batch via prefill-into-slot, and free their slot on
+completion.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b
 """
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+from repro.configs import get_config
+from repro.serving import (Request, build_engine, build_tiers,
+                           servable_archs)
 import numpy as np
-
-from repro.configs import arch_names, get_config
-from repro.core.compiler import CiMConfig
-from repro.models.transformer import LM
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b", choices=arch_names())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    choices=servable_archs())
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--gen", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True,
-                     cim=CiMConfig(family="appro42", bits=8,
-                                   mode="surrogate_fast"))
-    lm = LM(cfg)
-    params = lm.init(jax.random.PRNGKey(0))
+    cfg = get_config(args.arch, smoke=True)
+    tiers = build_tiers()
+    print("accuracy ladder (DSE-characterized):")
+    for t in tiers:
+        print(f"  {t.name:9s} family={t.family:9s} NMED={t.nmed:.2e} "
+              f"E/MAC={t.energy_per_mac_j * 1e12:.2f}pJ")
+
+    engine = build_engine(cfg, tiers=tiers, slots_per_tier=args.slots,
+                          max_len=64, prompt_buckets=(16,),
+                          group_buckets=(1, 2), record_logits=False)
+    t0 = time.perf_counter()
+    n = engine.warmup()
+    print(f"pre-warmed {n} executables in {time.perf_counter() - t0:.1f}s "
+          "(steady state never retraces)")
+
+    # declared tolerances route to the cheapest-energy feasible rung:
+    # 0 -> exact, anything admitting appro42's tiny NMED -> balanced
+    # (at 8 bits appro42 is cheaper than the log families, so the
+    # economy rung is reached by explicit SLA pin, not by tolerance)
     rng = np.random.default_rng(0)
-    b, s = args.batch, args.prompt_len
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
-    batch = {"tokens": prompts, "max_len": s + args.gen}
-    if cfg.vision is not None:
-        batch["vision"] = jnp.ones((b, cfg.vision.n_tokens,
-                                    cfg.vision.d_vision), jnp.float32)
-    if cfg.encoder is not None:
-        batch["enc_frames"] = jnp.ones((b, cfg.encoder.n_frames,
-                                        cfg.d_model), jnp.bfloat16)
+    kinds = [("tol", 0.0), ("tol", 1e-4), ("tier", "economy"),
+             ("tol", 1e-4), ("tol", 0.0), ("tier", "economy")]
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (12,)),
+                    max_new=args.gen,
+                    tolerance=v if k == "tol" else None,
+                    tier=v if k == "tier" else None,
+                    arrival=0.002 * i)
+            for i, (k, v) in enumerate(kinds)]
 
     t0 = time.perf_counter()
-    logits, caches = jax.jit(lm.prefill)(params, batch)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(lm.decode_step)
-    outs = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, caches, tok, jnp.int32(s + i))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    t_decode = (time.perf_counter() - t0) / max(args.gen - 1, 1)
-
-    gen = np.asarray(jnp.concatenate(outs, axis=1))
-    print(f"arch={args.arch}  prefill {s} toks: {t_prefill*1e3:.1f} ms;  "
-          f"decode: {t_decode*1e3:.1f} ms/token (batch {b}, CPU smoke cfg)")
-    for i in range(b):
-        print(f"  seq{i}: {gen[i].tolist()}")
-    assert np.isfinite(gen).all()
+    results = engine.run(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(r.tokens) for r in results.values())
+    print(f"served {len(results)} requests / {total} tokens in {dt:.2f}s; "
+          f"steady-state retraces: {engine.steady_retraces()}")
+    for r in sorted(results.values(), key=lambda r: r.rid):
+        k, v = kinds[r.rid]
+        ask = f"tol={v:.0e}" if k == "tol" else f"tier={v}"
+        print(f"  req{r.rid} {ask:12s} -> tier={r.tier:9s} "
+              f"tokens={r.tokens}")
+    assert engine.steady_retraces() == 0
 
 
 if __name__ == "__main__":

@@ -1,79 +1,87 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""Serving launcher: the continuous-batching CiM engine under a
+synthetic Poisson arrival workload (DESIGN.md §10).
 
-`python -m repro.launch.serve --arch <id> --batch 8 --gen 32`
-(smoke configs on CPU; the same prefill/decode_step functions are what
-the dry-run lowers for the production mesh)."""
+`python -m repro.launch.serve --arch qwen3-1.7b --slots 4 --n-requests 16`
+
+Builds the per-tier slot-pool engine (serving/engine.py) over the DSE
+accuracy ladder (serving/tiers.py), pre-warms every (tier x bucket)
+executable, serves the workload, and prints throughput / latency /
+retrace stats.  `--static` degrades admission to lockstep batching (the
+baseline bench_serve.py quantifies against).  Smoke configs on CPU; the
+same jitted prefill/decode functions are what the dry-run lowers for
+the production mesh.
+"""
 
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import arch_names, get_config
-from repro.core.compiler import CiMConfig
-from repro.models.transformer import LM
+from repro.configs import get_config
+from repro.serving import (EngineStats, build_engine, build_tiers,
+                           poisson_workload, servable_archs)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b", choices=arch_names())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--cim", default="appro42:surrogate_fast")
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    choices=servable_archs())
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool size per accuracy tier")
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(8, 16),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--max-new", type=int, nargs=2, default=(4, 32),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--mode", default="surrogate_fast",
+                    help="execution mode of the approximate tiers")
+    ap.add_argument("--static", action="store_true",
+                    help="lockstep (static-batching) admission baseline")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cim = None
-    if args.cim != "off":
-        fam, mode = args.cim.split(":")
-        cim = CiMConfig(family=fam, bits=8, mode=mode)
-    cfg = get_config(args.arch, smoke=True, cim=cim)
-    lm = LM(cfg)
-    params = lm.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    b, s = args.batch, args.prompt_len
-    max_len = s + args.gen
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))}
-    if cfg.vision is not None:
-        batch["vision"] = jnp.ones((b, cfg.vision.n_tokens,
-                                    cfg.vision.d_vision), jnp.float32)
-    if cfg.encoder is not None:
-        batch["enc_frames"] = jnp.ones((b, cfg.encoder.n_frames,
-                                        cfg.d_model), jnp.bfloat16)
+    cfg = get_config(args.arch, smoke=True)
+    tiers = build_tiers(mode=args.mode)
+    pmax = max(args.prompt_len)
+    pbkts = tuple(sorted({b for b in (8, 16) if b < pmax} | {pmax}))
+    engine = build_engine(
+        cfg, tiers=tiers, slots_per_tier=args.slots, max_len=args.max_len,
+        prompt_buckets=pbkts,
+        group_buckets=(1, 2, args.slots) if args.slots > 2 else (1, 2),
+        continuous=not args.static, seed=args.seed)
 
-    # max_len sizes the decode caches, so it must be a trace-time
-    # constant: close over the python int instead of shipping it through
-    # the jitted batch dict (where it would arrive as a tracer)
-    prefill = jax.jit(
-        lambda p, bt: lm.prefill(p, dict(bt, max_len=max_len)))
     t0 = time.perf_counter()
-    logits, caches = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    # async dispatch returns before the work does: block on everything
-    # the timer claims to cover, or prefill cost leaks into decode
-    jax.block_until_ready((tok, caches))
-    t_pref = time.perf_counter() - t0
-    # donate the decode caches: each step's KV/state buffers are dead
-    # the moment the next step's are produced, so XLA can update them
-    # in place instead of allocating a second cache-sized footprint
-    # (ignored with a warning on backends without donation, e.g. CPU)
-    decode = jax.jit(lm.decode_step, donate_argnums=(1,))
-    outs = [tok]
+    n_exec = engine.warmup()
+    print(f"[{cfg.name}] warmed {n_exec} executables over "
+          f"{len(tiers)} tiers in {time.perf_counter() - t0:.1f}s")
+
+    mix = (("exact", None, 0.3), ("balanced", None, 0.4),
+           ("economy", None, 0.3))
+    wl = poisson_workload(args.n_requests, args.rate, cfg.vocab,
+                          prompt_len=tuple(args.prompt_len),
+                          max_new=tuple(args.max_new), tier_mix=mix,
+                          seed=args.seed)
     t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, caches, tok, jnp.int32(s + i))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    dt = (time.perf_counter() - t0) / max(args.gen - 1, 1)
-    gen = np.asarray(jnp.concatenate(outs, axis=1))
-    print(f"[{cfg.name}] prefill {s}t {t_pref*1e3:.0f}ms, decode "
-          f"{dt*1e3:.1f}ms/t, batch {b}; sample: {gen[0][:12].tolist()}")
-    assert np.isfinite(gen).all()
+    results = engine.run(wl)
+    stats = EngineStats.from_results(results, time.perf_counter() - t0)
+
+    per_tier = {}
+    for r in results.values():
+        per_tier[r.tier] = per_tier.get(r.tier, 0) + len(r.tokens)
+    policy = "static" if args.static else "continuous"
+    print(f"[{cfg.name}] {policy}: {stats.n_requests} requests, "
+          f"{stats.total_tokens} tokens in {stats.duration_s:.2f}s "
+          f"-> {stats.tokens_per_s:.1f} tok/s")
+    print(f"  per-token latency p50 {stats.p50_ms_per_token:.1f}ms "
+          f"p95 {stats.p95_ms_per_token:.1f}ms; "
+          f"ttft p50 {stats.p50_ttft_ms:.1f}ms")
+    print(f"  tokens by tier: {per_tier}; peak concurrency "
+          f"{engine.peak_running}; steady-state retraces "
+          f"{engine.steady_retraces()}")
+    assert engine.steady_retraces() == 0, "serving retraced after warmup"
 
 
 if __name__ == "__main__":

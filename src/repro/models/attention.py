@@ -81,12 +81,20 @@ def _out_proj(params, o, ctx: CiMContext):
 
 
 def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
-                  window: Optional[int], q_offset, kv_len_valid):
+                  window: Optional[int], q_offset, kv_len_valid,
+                  seq_info=None):
     """Online-softmax blockwise attention.
 
     q: (B, Sq, H, D); k, v: (B, Skv, KH, D).  q_offset: absolute position
     of q[0] (for causal/window masks against the kv axis).
     kv_len_valid: number of valid kv positions (decode: cache fill level).
+
+    seq_info: optional (q_positions (B, Sq), kv_positions (B, Skv),
+    kv_valid (B, Skv) bool) triple for ragged batches — per-sequence
+    positions drive the causal/window masks and kv_valid masks pad
+    tokens out, so left/right-padded prompts never attend to padding.
+    When None the scalar-arange fast path below is taken (bit-identical
+    to the pre-ragged behavior).
     """
     b, sq, h, dd = q.shape
     skv, kh = k.shape[1], k.shape[2]
@@ -100,10 +108,16 @@ def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
     # masked by kv_len_valid below
     kc = min(kv_chunk, skv)
     pad_kv = (-skv) % kc
+    qpos_arr = kpos_arr = kval_arr = None
+    if seq_info is not None:
+        qpos_arr, kpos_arr, kval_arr = seq_info
     if pad_kv:
         kv_len_valid = jnp.minimum(kv_len_valid, skv)
         k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        if seq_info is not None:       # padded keys: position 0, invalid
+            kpos_arr = jnp.pad(kpos_arr, ((0, 0), (0, pad_kv)))
+            kval_arr = jnp.pad(kval_arr, ((0, 0), (0, pad_kv)))
         skv += pad_kv
     nq, nk = sq // qc, skv // kc
     scale = 1.0 / (dd ** 0.5)
@@ -114,13 +128,19 @@ def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
     kv_pos = jnp.arange(skv).reshape(nk, kc)
 
     # local attention: only the last W kv chunks can be visible to a q
-    # chunk (q_offset == 0 for training/prefill where Sq == Skv)
-    local = window is not None and causal
+    # chunk (q_offset == 0 for training/prefill where Sq == Skv).  With
+    # per-sequence positions the chunk-index arithmetic no longer holds,
+    # so the ragged path visits every chunk (the window mask still
+    # applies positionally).
+    local = window is not None and causal and seq_info is None
     w_chunks = min(nk, (window + qc - 1) // kc + 1) if local else nk
 
     def q_step(_, qi):
         qb = qr[:, qi]                             # (b, qc, kh, g, dd)
-        qpos = q_offset + qi * qc + jnp.arange(qc)
+        if seq_info is None:
+            qpos = q_offset + qi * qc + jnp.arange(qc)
+        else:
+            qpos_b = jax.lax.dynamic_slice_in_dim(qpos_arr, qi * qc, qc, 1)
 
         def kv_step(carry, kj_rel):
             m, l, acc = carry
@@ -132,15 +152,28 @@ def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
                 kj = kj_rel
             kb = jax.lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
             vb = jax.lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
-            kp = jax.lax.dynamic_index_in_dim(kv_pos, kj, 0, keepdims=False)
             s = jnp.einsum("bqkgd,bckd->bkgqc", qb.astype(jnp.float32),
                            kb.astype(jnp.float32)) * scale
-            mask = kp[None, :] <= qpos[:, None] if causal else \
-                jnp.ones((qc, kc), bool)
-            if window is not None:
-                mask = mask & (kp[None, :] > qpos[:, None] - window)
-            mask = mask & (kp[None, :] < kv_len_valid)
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if seq_info is None:
+                kp = jax.lax.dynamic_index_in_dim(kv_pos, kj, 0,
+                                                  keepdims=False)
+                mask = kp[None, :] <= qpos[:, None] if causal else \
+                    jnp.ones((qc, kc), bool)
+                if window is not None:
+                    mask = mask & (kp[None, :] > qpos[:, None] - window)
+                mask = mask & (kp[None, :] < kv_len_valid)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            else:
+                kp = jax.lax.dynamic_slice_in_dim(kpos_arr, kj * kc, kc, 1)
+                kval = jax.lax.dynamic_slice_in_dim(kval_arr, kj * kc, kc,
+                                                    1)
+                mask = kval[:, None, :]            # (b, qc, kc) per-seq
+                if causal:
+                    mask = mask & (kp[:, None, :] <= qpos_b[:, :, None])
+                if window is not None:
+                    mask = mask & (kp[:, None, :]
+                                   > qpos_b[:, :, None] - window)
+                s = jnp.where(mask[:, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -168,12 +201,20 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
                     causal: bool = True, window: Optional[int] = None,
                     q_chunk: int = 1024, kv_chunk: int = 1024,
                     positions=None, cache: Optional[dict] = None,
-                    x_kv=None, is_cross: bool = False):
+                    x_kv=None, is_cross: bool = False, valid=None):
     """Full attention sub-block (projections + SDPA [+ cache update]).
 
     Training/prefill: cache=None -> returns (y, new_cache_or_None);
     prefill fills `cache` if one is passed (pre-allocated to max length).
     Decode: x is (B, 1, D) and cache is the running KV state.
+
+    valid: optional (B, S) bool mask for ragged (padded) batches.  Pad
+    tokens are masked out of the KV axis so no query attends to them,
+    `positions` supplies the per-sequence causal/window coordinates, and
+    a prefilled cache records a *per-slot* fill level (``pos`` becomes a
+    (B,) vector — the slot-pool contract the serving engine relies on).
+    Decode accepts either a scalar ``pos`` (lockstep batch) or a (B,)
+    vector (continuous batching: every slot at its own position).
     """
     b, s, d = x.shape
     if positions is None:
@@ -185,9 +226,17 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
         _, k, v = _project_qkv(params, x_kv, n_heads, n_kv_heads, head_dim,
                                ctx, None, qk_norm)
 
+    # ragged self-attention: per-sequence positions + pad-validity mask
+    # (cross streams keep the dense path — their kv axis is never padded
+    # by the prompt scheduler)
+    seq_info = None
+    if valid is not None and x_kv is None and s > 1:
+        seq_info = (positions, positions, valid)
+
     if cache is None:
         y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
-                          q_offset=0, kv_len_valid=k.shape[1])
+                          q_offset=0, kv_len_valid=k.shape[1],
+                          seq_info=seq_info)
         return _out_proj(params, y.astype(x.dtype), ctx), None
 
     # caches store K/V flattened to (B, T, KH*D): the flat dim shards
@@ -213,37 +262,64 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
             cv = jnp.roll(vf[:, p0:].astype(cache["v"].dtype), p0 % t,
                           axis=1)
         y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
-                          q_offset=0, kv_len_valid=k.shape[1])
-        new_cache = {"k": ck, "v": cv, "pos": jnp.int32(k.shape[1])}
+                          q_offset=0, kv_len_valid=k.shape[1],
+                          seq_info=seq_info)
+        if valid is not None:
+            # per-slot fill level: pad tokens don't count (right-padded
+            # prompts resume decoding at their true length; see
+            # models/transformer.LM.prefill for the left-pad caveat)
+            pos_out = valid.sum(axis=1).astype(jnp.int32)
+        else:
+            pos_out = jnp.int32(k.shape[1])
+        new_cache = {"k": ck, "v": cv, "pos": pos_out}
         return _out_proj(params, y.astype(x.dtype), ctx), new_cache
 
-    # single-token decode
+    # single-token decode.  cache["pos"] is a scalar for lockstep batches
+    # (every sequence at the same position) or a (B,) vector for slot-pool
+    # serving (each slot at its own fill level); the vector path scatters
+    # per-slot and builds a per-slot validity mask.
     pos = cache["pos"]
     t = cache["k"].shape[1]
+    per_slot = getattr(pos, "ndim", 0) > 0
     if not is_cross:
         if window is not None:        # ring buffer for local attention
             slot = pos % t
         else:
             slot = pos
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.reshape(b, 1, kh_d).astype(cache["k"].dtype),
-            (0, slot, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.reshape(b, 1, kh_d).astype(cache["v"].dtype),
-            (0, slot, 0))
+        kf = k.reshape(b, 1, kh_d).astype(cache["k"].dtype)
+        vf = v.reshape(b, 1, kh_d).astype(cache["v"].dtype)
         tpos = jnp.arange(t)
-        if window is not None:
-            # ring slot i was written `age` steps ago; valid iff among the
-            # last min(pos+1, t) writes
-            age = (slot - tpos) % t
-            valid = age < jnp.minimum(pos + 1, t)
+        if per_slot:
+            bidx = jnp.arange(b)
+            # out-of-range slots (an idle lane slot past max_len) are
+            # dropped by the scatter, never clamped onto live entries
+            ck = cache["k"].at[bidx, slot].set(kf[:, 0],
+                                               mode="drop")
+            cv = cache["v"].at[bidx, slot].set(vf[:, 0],
+                                               mode="drop")
+            if window is not None:
+                age = (slot[:, None] - tpos[None, :]) % t
+                kv_ok = age < jnp.minimum(pos + 1, t)[:, None]
+            else:
+                kv_ok = tpos[None, :] <= pos[:, None]          # (B, t)
         else:
-            valid = tpos <= pos
+            ck = jax.lax.dynamic_update_slice(cache["k"], kf, (0, slot, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vf, (0, slot, 0))
+            if window is not None:
+                # ring slot i was written `age` steps ago; valid iff among
+                # the last min(pos+1, t) writes
+                age = (slot - tpos) % t
+                kv_ok = age < jnp.minimum(pos + 1, t)
+            else:
+                kv_ok = tpos <= pos
         new_cache = {"k": ck, "v": cv, "pos": pos + 1}
     else:
         # cross-attention decode: encoder KV is static (filled at prefill)
         ck, cv = cache["k"], cache["v"]
-        valid = jnp.arange(t) < pos
+        if per_slot:
+            kv_ok = jnp.arange(t)[None, :] < pos[:, None]
+        else:
+            kv_ok = jnp.arange(t) < pos
         new_cache = cache
     kh = n_kv_heads
     g = n_heads // kh
@@ -257,7 +333,9 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
     # internally anyway
     s_ = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck4).astype(jnp.float32) \
         / (head_dim ** 0.5)
-    s_ = jnp.where(valid[None, None, None, None, :], s_, NEG_INF)
+    vmask = (kv_ok[:, None, None, None, :] if kv_ok.ndim == 2
+             else kv_ok[None, None, None, None, :])
+    s_ = jnp.where(vmask, s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bkgqt,btkd->bkgqd", p, cv4)
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, n_heads, head_dim)
@@ -266,12 +344,18 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
 
 
 def init_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
-               window: Optional[int] = None, dtype=jnp.bfloat16):
+               window: Optional[int] = None, dtype=jnp.bfloat16,
+               per_slot: bool = False):
     """K/V stored flattened (B, T, KH*D) — see attention_block's decode
-    path for why (joint kh x d sharding on the model axis)."""
+    path for why (joint kh x d sharding on the model axis).
+
+    per_slot=True allocates a (B,) position vector instead of the scalar
+    ``pos`` — the slot-pool layout: each batch row is an independent
+    sequence at its own fill level (serving/engine.py)."""
     t = min(max_len, window) if window is not None else max_len
     return {
         "k": jnp.zeros((batch, t, n_kv_heads * head_dim), dtype),
         "v": jnp.zeros((batch, t, n_kv_heads * head_dim), dtype),
-        "pos": jnp.int32(0),
+        "pos": jnp.zeros((batch,), jnp.int32) if per_slot
+        else jnp.int32(0),
     }

@@ -107,8 +107,10 @@ def _init_layer(key, kind: str, cfg: ModelConfig):
 
 
 def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
-                 positions, cache, x_aux):
-    """Returns (x, new_cache, aux_loss)."""
+                 positions, cache, x_aux, valid=None):
+    """Returns (x, new_cache, aux_loss).  `valid` is the optional (B, S)
+    ragged-batch mask (pad tokens excluded from self-attention KV; see
+    attention_block) — only the self-attention kinds consume it."""
     aux = jnp.float32(0.0)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -129,7 +131,7 @@ def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
                 params["attn"], h,
                 causal=(kind != C.ENC_ATTN),
                 window=cfg.window if kind == C.LOCAL else None,
-                cache=cache, **attn_kw)
+                cache=cache, valid=valid, **attn_kw)
         x = x + a
     elif kind == C.CROSS:
         a, new_cache = attention_block(params["attn"], h, causal=False,
@@ -140,7 +142,7 @@ def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
     elif kind == DEC_CROSS:
         sc = None if cache is None else cache["self"]
         a, c_self = attention_block(params["attn"], h, causal=True,
-                                    cache=sc, **attn_kw)
+                                    cache=sc, valid=valid, **attn_kw)
         x = x + a
         h2 = apply_norm(params["norm_x"], x, cfg.norm)
         cc = None if cache is None else cache["cross"]
@@ -221,11 +223,26 @@ def cache_specs(cfg: ModelConfig):
     return {"prefix": prefix, "body": body}
 
 
-def _init_kind_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+def _init_kind_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     per_slot: bool = False):
+    # THE ragged/per-slot gate: LM.prefill(lengths=...) allocates its
+    # caches through here, so raising covers every ragged entry path.
+    # MLA latents, ring-buffered LOCAL windows (a padded prompt longer
+    # than the ring would keep pad K/V and drop real tokens in the
+    # skv>t roll), recurrent and cross/encoder state all lack the
+    # explicit per-slot position the slot-pool contract needs — reject
+    # rather than silently corrupt.
+    if per_slot and (cfg.mla is not None
+                     or kind not in (C.ATTN, ATTN_MOE)):
+        raise ValueError(
+            "per-slot caches (ragged prefill / continuous batching) "
+            "need every layer's state to carry an explicit, non-ring "
+            f"position; kind {kind!r} does not")
     if kind in (C.ATTN, ATTN_MOE):
         if cfg.mla is not None:
             return init_mla_cache(batch, max_len, cfg.mla)
-        return init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_,
+                          per_slot=per_slot)
     if kind == C.LOCAL:
         return init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_,
                           window=cfg.window)
@@ -367,7 +384,8 @@ class LM:
             return self._encode(params, batch["enc_frames"], key)
         return None
 
-    def _run_stack(self, params, x, positions, caches, key, x_aux):
+    def _run_stack(self, params, x, positions, caches, key, x_aux,
+                   valid=None):
         """Prefix (unrolled) + body (scanned).  caches: None for training,
         else {"prefix": [...], "body": stacked-pytree}."""
         cfg = self.cfg
@@ -378,7 +396,7 @@ class LM:
                              None if key is None else jax.random.fold_in(key, i))
             c = None if caches is None else caches["prefix"][i]
             x, c2, aux = _apply_layer(params["prefix"][i], x, kind, cfg, ctx,
-                                      positions, c, x_aux)
+                                      positions, c, x_aux, valid)
             new_prefix.append(c2)
             aux_total += aux
         new_body = None
@@ -398,7 +416,7 @@ class LM:
                         None if key is None else jax.random.fold_in(k, i))
                     ci = None if cache_in is None else cache_in[str(i)]
                     h, c2, aux = _apply_layer(lp[str(i)], h, kind, cfg, ctx,
-                                              positions, ci, x_aux)
+                                              positions, ci, x_aux, valid)
                     if cache_in is not None:
                         cache_out = dict(cache_out)
                         cache_out[str(i)] = c2
@@ -445,13 +463,15 @@ class LM:
         return loss, metrics
 
     # ---- serving --------------------------------------------------------
-    def init_caches(self, batch: int, max_len: int):
+    def init_caches(self, batch: int, max_len: int,
+                    per_slot: bool = False):
         cfg = self.cfg
-        prefix = [_init_kind_cache(k, cfg, batch, max_len)
+        prefix = [_init_kind_cache(k, cfg, batch, max_len, per_slot)
                   for k in cfg.prefix_layers]
         body = None
         if cfg.n_periods:
-            one = {str(i): _init_kind_cache(k, cfg, batch, max_len)
+            one = {str(i): _init_kind_cache(k, cfg, batch, max_len,
+                                            per_slot)
                    for i, k in enumerate(cfg.period)}
             body = jax.tree_util.tree_map(
                 lambda l: jnp.broadcast_to(l, (cfg.n_periods,) + l.shape),
@@ -459,34 +479,77 @@ class LM:
         return {"prefix": prefix, "body": body}
 
     def prefill(self, params, batch, key=None):
+        """Fill pre-allocated caches; return (last-token logits, caches).
+
+        Ragged batches: pass ``batch["lengths"]`` ((B,) true prompt
+        lengths) and optionally ``batch["pad"]`` ("right", the default,
+        or "left").  Per-sequence positions and a validity mask keep pad
+        tokens out of every attention window, the returned logits are
+        taken at each sequence's *last real token*, and the caches carry
+        a per-slot (B,) ``pos`` vector.  Decode continuation from a
+        ragged prefill requires right padding: left padding leaves pad
+        garbage at the head of the KV slots, which the per-slot decode
+        mask cannot express, so ``pad="left"`` is scoring-only and
+        returns ``caches=None`` (a decode attempt fails loudly instead
+        of silently attending to pad K/V).
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
-        caches = self.init_caches(b, batch.get("max_len", s))
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        lengths = batch.get("lengths")
+        caches = self.init_caches(b, batch.get("max_len", s),
+                                  per_slot=lengths is not None)
+        ar = jnp.arange(s)[None, :]
+        if lengths is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+            valid = None
+        else:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            pad = batch.get("pad", "right")
+            if pad == "right":
+                positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+                valid = ar < lengths[:, None]
+                last = lengths - 1
+            elif pad == "left":
+                off = (s - lengths)[:, None]
+                valid = ar >= off
+                positions = jnp.where(valid, ar - off, 0)
+                last = jnp.full((b,), s - 1, jnp.int32)
+            else:
+                raise ValueError(f"pad must be 'left'/'right', got {pad!r}")
         x = self._embed(params, tokens)
         x_aux = self._aux_stream(params, batch, key)
         x, caches, _ = self._run_stack(params, x, positions, caches, key,
-                                       x_aux)
-        logits = self._logits(params, x[:, -1:])
+                                       x_aux, valid=valid)
+        if lengths is None:
+            logits = self._logits(params, x[:, -1:])
+        else:
+            # per-sequence last *real* token (not the pad tail)
+            logits = self._logits(params, x[jnp.arange(b), last][:, None])
+            if batch.get("pad", "right") == "left":
+                caches = None          # scoring-only (see docstring)
         return logits, caches
 
     def decode_step(self, params, caches, tokens, pos, key=None):
-        """tokens: (B, 1); pos: scalar int32 (current absolute position)."""
+        """tokens: (B, 1); pos: scalar int32 (lockstep: one absolute
+        position shared by the batch) or (B,) int32 (slot pool: each
+        sequence at its own position — pairs with per-slot caches)."""
         cfg = self.cfg
         b = tokens.shape[0]
-        positions = jnp.full((b, 1), pos, jnp.int32)
-        x = self._embed_decode(params, tokens, pos)
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = (pos[:, None] if pos.ndim
+                     else jnp.full((b, 1), pos, jnp.int32))
+        x = self._embed_decode(params, tokens, positions)
         x, caches, _ = self._run_stack(params, x, positions, caches, key,
                                        None)
         return self._logits(params, x), caches
 
-    def _embed_decode(self, params, tokens, pos):
+    def _embed_decode(self, params, tokens, positions):
         table = wsc(params["embed"].value, ("vocab", None))
         e = jnp.take(table, tokens, axis=0)
         if self.cfg.family == "audio":
-            e = e + sinusoidal_pos(jnp.full((1,), pos), self.cfg.d_model
-                                   ).astype(e.dtype)[None]
+            e = e + sinusoidal_pos(positions, self.cfg.d_model
+                                   ).astype(e.dtype)
         return e
 
 

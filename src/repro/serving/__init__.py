@@ -1,0 +1,8 @@
+# Continuous-batching CiM serving engine (DESIGN.md §10): slot-pool KV
+# caches, token-budget scheduler, per-request accuracy tiers routed to
+# CiM configs through the DSE characterization.
+from .engine import (EngineStats, LMLaneBackend, Request, RequestResult,
+                     ServingEngine, build_engine,
+                     servable_archs)  # noqa: F401
+from .tiers import AccuracyTier, TierRouter, build_tiers  # noqa: F401
+from .workload import SimClock, poisson_workload  # noqa: F401

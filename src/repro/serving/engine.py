@@ -1,0 +1,592 @@
+"""Continuous-batching serving engine over the CiM dispatch stack
+(DESIGN.md §10).
+
+Three cooperating pieces:
+
+  * **Slot pool** — per accuracy tier, a fixed-batch KV-cache pool
+    (``LM.init_caches(per_slot=True)``): every batch row is an
+    independent sequence with its own (B,)-vector position/fill level.
+    New requests *prefill into slots* of a running batch (a batched
+    ragged prefill + a jitted scatter of the group caches into the pool
+    rows) and finished ones are evicted in place — decode never stops,
+    restarts, or changes shape.
+
+  * **Scheduler** — FIFO arrival queues per tier, token-budget
+    admission (a request reserves ``prompt_len + max_new`` tokens until
+    eviction; the queue head blocks rather than being skipped, so no
+    request starves), slot assignment, and eviction on EOS/max-gen.
+
+  * **Tier lanes** — one slot pool per accuracy tier, each executing
+    through its own pre-built jitted prefill/decode functions over the
+    *shared* weights.  Tier switches are a dict lookup (lane pick), and
+    occupancy changes never alter a traced shape: prompt lengths and
+    admission group sizes are bucketed to pre-warmed sets, and the
+    decode batch is always the full pool.  `warmup()` compiles every
+    (tier x prompt-bucket x group-bucket) combination plus the decode
+    and insert paths before traffic is admitted;
+    `steady_retraces()` (the core/approx_gemm.trace_count probe) must
+    stay 0 afterwards.
+
+All shapes the engine ever traces: prefill (G, P) for G in
+group_buckets, P in prompt_buckets; decode (n_slots, 1); insert one
+scatter per G.  Everything else is host-side bookkeeping.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request.  `tier` pins an SLA class by name;
+    otherwise `tolerance` (max NMED) is routed through the TierRouter.
+    `arrival` is seconds on the engine clock (workload time)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    tolerance: Optional[float] = None
+    tier: Optional[str] = None
+    arrival: float = 0.0
+    eos_id: Optional[int] = None
+
+    @property
+    def cost(self) -> int:
+        """Token-budget reservation: worst-case KV footprint."""
+        return len(self.prompt) + self.max_new
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tier: str
+    prompt_len: int
+    arrival: float
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    logits: Optional[List[np.ndarray]] = None   # record_logits engines
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def ms_per_token(self) -> float:
+        """End-to-end per-token latency (queueing included)."""
+        return 1e3 * (self.t_done - self.arrival) / max(len(self.tokens), 1)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int
+    total_tokens: int
+    duration_s: float
+    tokens_per_s: float
+    p50_ms_per_token: float
+    p95_ms_per_token: float
+    p50_ttft_ms: float
+    p95_ttft_ms: float
+
+    @classmethod
+    def from_results(cls, results: Dict[int, "RequestResult"],
+                     duration_s: float) -> "EngineStats":
+        done = [r for r in results.values() if r.done]
+        tot = sum(len(r.tokens) for r in done)
+        lat = np.asarray([r.ms_per_token for r in done]) if done else \
+            np.zeros(1)
+        ttft = np.asarray([1e3 * (r.t_first - r.arrival) for r in done]) \
+            if done else np.zeros(1)
+        return cls(n_requests=len(done), total_tokens=tot,
+                   duration_s=duration_s,
+                   tokens_per_s=tot / max(duration_s, 1e-9),
+                   p50_ms_per_token=float(np.percentile(lat, 50)),
+                   p95_ms_per_token=float(np.percentile(lat, 95)),
+                   p50_ttft_ms=float(np.percentile(ttft, 50)),
+                   p95_ttft_ms=float(np.percentile(ttft, 95)))
+
+
+def _bucket_up(v: int, buckets: Sequence[int], what: str) -> int:
+    for b in buckets:
+        if b >= v:
+            return b
+    raise ValueError(f"{what} {v} exceeds the largest configured bucket "
+                     f"{max(buckets)}")
+
+
+# ---------------------------------------------------------------------------
+# The LM lane backend: one slot pool on one CiM tier
+# ---------------------------------------------------------------------------
+
+
+def check_engine_arch(cfg) -> None:
+    """Continuous batching needs every layer's state to be a positional
+    KV cache (per-slot fill levels + validity masks).  That is the
+    full-attention dense stacks; MLA latents, recurrent states (RG-LRU,
+    xLSTM), encoders and windowed ring buffers are rejected."""
+    from repro.models import config as C
+
+    kinds = set(cfg.prefix_layers) | set(cfg.period)
+    if (cfg.mla is not None or cfg.vision is not None
+            or cfg.encoder is not None or not kinds <= {C.ATTN}):
+        raise ValueError(
+            f"arch {cfg.name!r} is not servable by the slot-pool engine "
+            f"(layer kinds {sorted(kinds)}); dense full-attention stacks "
+            "only")
+
+
+def servable_archs(smoke: bool = True) -> List[str]:
+    """Registry archs the slot-pool engine can serve (the launcher and
+    example restrict their --arch choices to these)."""
+    from repro.configs import arch_names, get_config
+
+    out = []
+    for name in arch_names():
+        try:
+            check_engine_arch(get_config(name, smoke=smoke))
+        except ValueError:
+            continue
+        out.append(name)
+    return out
+
+
+class LMLaneBackend:
+    """Slot-pool execution for one (LM, CiM tier): pre-jitted ragged
+    group prefill, cache scatter-insert, and full-pool decode."""
+
+    def __init__(self, lm, params, *, n_slots: int, max_len: int,
+                 prompt_buckets: Sequence[int] = (16, 32),
+                 group_buckets: Sequence[int] = (1, 2, 4)):
+        import jax
+        import jax.numpy as jnp
+
+        check_engine_arch(lm.cfg)
+        self.lm, self.params = lm, params
+        self.n_slots, self.max_len = int(n_slots), int(max_len)
+        self.prompt_buckets = tuple(sorted(set(int(p) for p in
+                                               prompt_buckets)))
+        self.group_buckets = tuple(sorted(set(int(g) for g in
+                                              group_buckets)))
+        if max(self.prompt_buckets) > self.max_len:
+            raise ValueError("prompt bucket exceeds max_len")
+        self.caches = lm.init_caches(self.n_slots, self.max_len,
+                                     per_slot=True)
+        self.slot_tokens = np.zeros(self.n_slots, np.int64)
+        self.slot_pos = np.zeros(self.n_slots, np.int64)
+        self.last_prefill_logits: Optional[np.ndarray] = None
+        self.last_decode_logits: Optional[np.ndarray] = None
+
+        # max_len must be a trace-time constant (it sizes the group
+        # caches), so it is closed over — same trick as launch/serve.py
+        def _prefill(p, toks, lens):
+            return lm.prefill(p, {"tokens": toks, "lengths": lens,
+                                  "max_len": self.max_len})
+
+        self._prefill = jax.jit(_prefill)
+        # decode caches are donated: each round's pool buffers die the
+        # moment the next round's exist (in-place update on TPU;
+        # ignored with a warning on CPU)
+        self._decode = jax.jit(lm.decode_step, donate_argnums=(1,))
+
+        def _insert(lane, grp, slots):
+            # scatter group-cache rows into the pool rows named by
+            # `slots`; the sentinel slot == n_slots (admission padding)
+            # is out of range and dropped, never clamped onto a live row
+            def pre(d, s):
+                return d.at[slots].set(s.astype(d.dtype), mode="drop")
+
+            def body(d, s):
+                return d.at[:, slots].set(s.astype(d.dtype), mode="drop")
+
+            out = {"prefix": [jax.tree_util.tree_map(pre, lp, gp)
+                              for lp, gp in zip(lane["prefix"],
+                                                grp["prefix"])],
+                   "body": None}
+            if lane["body"] is not None:
+                out["body"] = jax.tree_util.tree_map(body, lane["body"],
+                                                     grp["body"])
+            return out
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+        self._jnp = jnp
+
+    # -- shape vocabulary --------------------------------------------------
+    def prompt_bucket(self, plen: int) -> int:
+        return _bucket_up(plen, self.prompt_buckets, "prompt length")
+
+    @property
+    def max_group(self) -> int:
+        return max(self.group_buckets)
+
+    # -- execution ---------------------------------------------------------
+    def _greedy(self, logits) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side greedy sampling.  The slice+cast is its own tiny
+        XLA executable (it runs outside the jitted step), so it MUST be
+        part of warmup — a per-shape compile here would otherwise land
+        on the first real request."""
+        lg = np.asarray(logits[:, -1, :], np.float32)
+        return np.argmax(lg, axis=-1), lg
+
+    def admit(self, prompts: List[np.ndarray],
+              slots: List[int]) -> np.ndarray:
+        """Ragged group prefill into the named pool slots; returns the
+        first sampled (greedy) token per prompt."""
+        jnp = self._jnp
+        g = len(prompts)
+        p_bkt = self.prompt_bucket(max(len(p) for p in prompts))
+        g_bkt = _bucket_up(g, self.group_buckets, "admission group")
+        toks = np.zeros((g_bkt, p_bkt), np.int32)
+        lens = np.ones(g_bkt, np.int32)       # padding rows: 1-token stubs
+        slot_idx = np.full(g_bkt, self.n_slots, np.int32)   # OOB sentinel
+        for i, (pr, sl) in enumerate(zip(prompts, slots)):
+            toks[i, :len(pr)] = pr
+            lens[i] = len(pr)
+            slot_idx[i] = sl
+        logits, grp = self._prefill(self.params, jnp.asarray(toks),
+                                    jnp.asarray(lens))
+        self.caches = self._insert(self.caches, grp,
+                                   jnp.asarray(slot_idx))
+        first, lg = self._greedy(logits)
+        self.last_prefill_logits = lg[:g]
+        for i, sl in enumerate(slots):
+            self.slot_tokens[sl] = first[i]
+            self.slot_pos[sl] = lens[i]
+        return first[:g]
+
+    def decode_round(self) -> np.ndarray:
+        """One greedy decode step for the whole pool (idle slots ride
+        along masked by their own fill level; their output is ignored)."""
+        jnp = self._jnp
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            jnp.asarray(self.slot_tokens[:, None], jnp.int32),
+            jnp.asarray(self.slot_pos, jnp.int32))
+        nxt, lg = self._greedy(logits)
+        self.slot_tokens = nxt.astype(np.int64)
+        self.slot_pos += 1
+        self.last_decode_logits = lg
+        return nxt
+
+    def warmup(self) -> int:
+        """Compile every steady-state executable: (G, P) prefills +
+        inserts, and the pool decode.  The sentinel-slot inserts and the
+        zero-position decode leave no live state behind (idle rows are
+        fully overwritten on first real admission)."""
+        jnp = self._jnp
+        n = 0
+        for p_bkt in self.prompt_buckets:
+            for g_bkt in self.group_buckets:
+                toks = jnp.zeros((g_bkt, p_bkt), jnp.int32)
+                lens = jnp.full((g_bkt,), p_bkt, jnp.int32)
+                logits, grp = self._prefill(self.params, toks, lens)
+                sent = jnp.full((g_bkt,), self.n_slots, jnp.int32)
+                self.caches = self._insert(self.caches, grp, sent)
+                self._greedy(logits)       # compiles the sampling slice
+                n += 1
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            jnp.zeros((self.n_slots, 1), jnp.int32),
+            jnp.zeros((self.n_slots,), jnp.int32))
+        self._greedy(logits)
+        return n + 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler + engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    result: RequestResult
+
+
+class _Lane:
+    def __init__(self, name: str, backend):
+        self.name = name
+        self.backend = backend
+        self.queue: deque = deque()
+        self.free: List[int] = list(range(backend.n_slots))
+        self.running: Dict[int, _Running] = {}
+
+
+class ServingEngine:
+    """Continuous-batching scheduler over per-tier slot-pool lanes.
+
+    `lanes` maps tier name -> backend (LMLaneBackend in production; the
+    tests drive the scheduler with a fake backend).  `continuous=False`
+    degrades admission to static batching — a lane only admits when it
+    is fully drained (the lockstep baseline the benchmark compares
+    against); everything else (grouped prefill, decode, eviction) is
+    shared, so the comparison isolates the scheduling policy.
+    """
+
+    def __init__(self, lanes: Dict[str, object], router, *,
+                 continuous: bool = True,
+                 token_budget: Optional[int] = None,
+                 record_logits: bool = False,
+                 check_invariants: bool = False):
+        if not lanes:
+            raise ValueError("need at least one lane")
+        self.lanes = {name: _Lane(name, b) for name, b in lanes.items()}
+        self.router = router
+        self.continuous = continuous
+        self.token_budget = token_budget
+        self.record_logits = record_logits
+        self.check_invariants = check_invariants
+        self.results: Dict[int, RequestResult] = {}
+        self.active_tokens = 0
+        self.peak_running = 0
+        self._expected: Dict[str, int] = {}
+        self._trace_mark: Optional[int] = None
+
+    # -- warmup / retrace probe -------------------------------------------
+    def warmup(self) -> int:
+        """Pre-warm every (tier x bucket) executable, then arm the
+        steady-state retrace probe."""
+        n = sum(lane.backend.warmup() for lane in self.lanes.values()
+                if hasattr(lane.backend, "warmup"))
+        from repro.core.approx_gemm import trace_count
+
+        self._trace_mark = trace_count()
+        return n
+
+    def steady_retraces(self) -> int:
+        """Dispatch-engine traces since warmup(); 0 in steady state."""
+        if self._trace_mark is None:
+            raise RuntimeError("call warmup() first")
+        from repro.core.approx_gemm import trace_count
+
+        return trace_count() - self._trace_mark
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req: Request) -> str:
+        """Route + enqueue; returns the tier name it was routed to.
+        A rid may be reused only after its previous request completed
+        (its result is replaced) — a live duplicate would alias two
+        slots onto one RequestResult and corrupt the accounting."""
+        prev = self.results.get(req.rid)
+        if prev is not None and not prev.done:
+            raise ValueError(
+                f"request id {req.rid} is already queued or running")
+        tier = self.router.route(req.tolerance, req.tier)
+        name = tier.name if hasattr(tier, "name") else str(tier)
+        lane = self.lanes[name]
+        b = lane.backend
+        if hasattr(b, "max_len") and req.cost > b.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {req.cost} exceeds "
+                f"lane max_len {b.max_len}")
+        if hasattr(b, "prompt_bucket"):
+            b.prompt_bucket(len(req.prompt))    # raises if unbucketable
+        if self.token_budget is not None and req.cost > self.token_budget:
+            raise ValueError(
+                f"request {req.rid}: cost {req.cost} exceeds the engine "
+                f"token budget {self.token_budget}")
+        lane.queue.append(req)
+        if name in self._expected and self._expected[name] > 0:
+            self._expected[name] -= 1
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, tier=name, prompt_len=len(req.prompt),
+            arrival=req.arrival,
+            logits=[] if self.record_logits else None)
+        return name
+
+    # -- scheduling --------------------------------------------------------
+    def _budget_ok(self, req: Request) -> bool:
+        return (self.token_budget is None
+                or self.active_tokens + req.cost <= self.token_budget)
+
+    def _admit_lane(self, lane: _Lane, now: float) -> None:
+        if not lane.queue or not lane.free:
+            return
+        if not self.continuous:
+            # static batching: wait for a full drain, then (if more
+            # traffic for this tier is still inbound) a full batch
+            if lane.running:
+                return
+            if (len(lane.queue) < lane.backend.n_slots
+                    and self._expected.get(lane.name, 0) > 0):
+                return
+        taken: List[Tuple[Request, int]] = []
+        while lane.queue and lane.free:
+            req = lane.queue[0]
+            if not self._budget_ok(req):
+                break                  # FIFO head blocks: no starvation
+            lane.queue.popleft()
+            slot = lane.free.pop(0)
+            self.active_tokens += req.cost
+            taken.append((req, slot))
+        if not taken:
+            return
+        # group by prompt bucket (one traced shape per admit call),
+        # chunked to the largest pre-warmed group bucket
+        groups: Dict[int, List[Tuple[Request, int]]] = {}
+        for req, slot in taken:
+            pb = (lane.backend.prompt_bucket(len(req.prompt))
+                  if hasattr(lane.backend, "prompt_bucket")
+                  else len(req.prompt))
+            groups.setdefault(pb, []).append((req, slot))
+        max_g = getattr(lane.backend, "max_group", lane.backend.n_slots)
+        for pb, members in groups.items():
+            for i in range(0, len(members), max_g):
+                chunk = members[i:i + max_g]
+                prompts = [r.prompt for r, _ in chunk]
+                slots = [s for _, s in chunk]
+                first = lane.backend.admit(prompts, slots)
+                pre_lg = getattr(lane.backend, "last_prefill_logits",
+                                 None)
+                for j, (req, slot) in enumerate(chunk):
+                    rr = self.results[req.rid]
+                    rr.t_admit = now
+                    lane.running[slot] = _Running(req, rr)
+                    lg = (pre_lg[j] if self.record_logits
+                          and pre_lg is not None else None)
+                    self._emit(lane, slot, int(first[j]), now, lg)
+        self.peak_running = max(self.peak_running,
+                                sum(len(l.running) for l in
+                                    self.lanes.values()))
+
+    def _emit(self, lane: _Lane, slot: int, tok: int, now: float,
+              logits_row=None) -> None:
+        run = lane.running[slot]
+        rr = run.result
+        rr.tokens.append(tok)
+        if rr.t_first is None:
+            rr.t_first = now
+        if rr.logits is not None and logits_row is not None:
+            rr.logits.append(logits_row)
+        if (len(rr.tokens) >= run.req.max_new
+                or (run.req.eos_id is not None
+                    and tok == run.req.eos_id)):
+            rr.t_done = now
+            self.active_tokens -= run.req.cost
+            del lane.running[slot]
+            bisect.insort(lane.free, slot)     # eviction frees capacity
+
+    def step(self, now: Optional[float] = None) -> List[RequestResult]:
+        """One scheduler tick: admit, then one decode round per lane
+        with live slots.  Returns results completed this tick."""
+        now = 0.0 if now is None else now
+        done_before = {rid for rid, r in self.results.items() if r.done}
+        for lane in self.lanes.values():
+            self._admit_lane(lane, now)
+        for lane in self.lanes.values():
+            if not lane.running:
+                continue
+            nxt = lane.backend.decode_round()
+            dec_lg = getattr(lane.backend, "last_decode_logits", None)
+            for slot in sorted(lane.running):
+                lg = (dec_lg[slot] if self.record_logits
+                      and dec_lg is not None else None)
+                self._emit(lane, slot, int(nxt[slot]), now, lg)
+        if self.check_invariants:
+            self._check()
+        return [r for rid, r in self.results.items()
+                if r.done and rid not in done_before]
+
+    def _check(self) -> None:
+        total = 0
+        for lane in self.lanes.values():
+            free, busy = set(lane.free), set(lane.running)
+            assert not free & busy, f"lane {lane.name}: slot both free+busy"
+            assert free | busy == set(range(lane.backend.n_slots)), \
+                f"lane {lane.name}: slot leak"
+            total += sum(r.req.cost for r in lane.running.values())
+        assert total == self.active_tokens, "token budget drifted"
+        assert self.active_tokens >= 0
+        assert (self.token_budget is None
+                or self.active_tokens <= self.token_budget), \
+            "admission exceeded the token budget"
+
+    # -- the serving loop --------------------------------------------------
+    def run(self, requests: Sequence[Request], clock=None,
+            max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
+        """Serve a workload to completion against a clock (RealClock by
+        default; SimClock for deterministic tests).  Arrival times are
+        engine-clock seconds; the loop admits, decodes, and — when fully
+        idle with future arrivals pending — waits.  Returns the results
+        of *this* workload (the engine is reusable across runs)."""
+        if clock is None:
+            from .workload import RealClock
+
+            clock = RealClock()
+        submitted = [r.rid for r in requests]
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        self.peak_running = sum(len(l.running)                 # per-run
+                                for l in self.lanes.values())
+        self._expected = {}
+        for r in pending:
+            t = self.router.route(r.tolerance, r.tier)
+            name = t.name if hasattr(t, "name") else str(t)
+            self._expected[name] = self._expected.get(name, 0) + 1
+        for _ in range(max_steps):
+            now = clock.now()
+            while pending and pending[0].arrival <= now:
+                self.submit(pending.popleft())
+            self.step(now)
+            busy = any(l.running for l in self.lanes.values())
+            queued = any(l.queue for l in self.lanes.values())
+            if not pending and not busy and not queued:
+                return {rid: self.results[rid] for rid in submitted}
+            if not busy and pending:
+                clock.wait_until(pending[0].arrival)
+        raise RuntimeError("engine did not drain the workload "
+                           f"within {max_steps} steps")
+
+
+# ---------------------------------------------------------------------------
+# Production assembly
+# ---------------------------------------------------------------------------
+
+
+def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
+                 max_len: int = 128,
+                 prompt_buckets: Sequence[int] = (16, 32),
+                 group_buckets: Sequence[int] = (1, 2, 4),
+                 continuous: bool = True,
+                 token_budget: Optional[int] = None,
+                 record_logits: bool = False,
+                 seed: int = 0) -> ServingEngine:
+    """One lane per accuracy tier over shared weights.
+
+    `cfg` is a ModelConfig (its own `cim` field is ignored — each lane
+    replaces it with its tier's CiMConfig); `params` defaults to a
+    fresh init (weights are tier-independent, so every lane shares
+    them).  `tiers` defaults to the DSE ladder (serving/tiers.py).
+    """
+    import dataclasses as dc
+
+    import jax
+
+    from repro.models.transformer import LM
+
+    from .tiers import TierRouter, build_tiers
+
+    check_engine_arch(cfg)
+    if tiers is None:
+        tiers = build_tiers()
+    if params is None:
+        params = LM(cfg).init(jax.random.PRNGKey(seed))
+    lanes = {}
+    for tier in tiers:
+        lm = LM(dc.replace(cfg, cim=tier.cim))
+        lanes[tier.name] = LMLaneBackend(
+            lm, params, n_slots=slots_per_tier, max_len=max_len,
+            prompt_buckets=prompt_buckets, group_buckets=group_buckets)
+    return ServingEngine(lanes, TierRouter(tiers), continuous=continuous,
+                         token_budget=token_budget,
+                         record_logits=record_logits)

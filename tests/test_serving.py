@@ -1,0 +1,419 @@
+"""Continuous-batching serving engine (DESIGN.md §10).
+
+Three layers of coverage:
+
+  * scheduler logic against a fake lane backend (fast, no jax compiles):
+    property tests over randomized arrival traces — no slot leak, no
+    starvation, eviction frees capacity, token budget respected — plus
+    static-vs-continuous admission semantics;
+  * the ragged-prefill model fix: per-sequence positions/valid masks for
+    left/right-padded prompts (pad tokens never attended);
+  * the real LM lanes: engine output bit-identical to the lockstep
+    prefill/decode baseline for a same-arrival batch, zero steady-state
+    retraces after pre-warm across tier switches and occupancy changes,
+    and staggered arrivals reproducing solo-request generations.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import LM
+from repro.serving import (Request, ServingEngine, SimClock,
+                           build_engine, build_tiers, poisson_workload)
+from repro.serving.engine import LMLaneBackend
+from repro.serving.tiers import AccuracyTier, TierRouter
+
+ARCH = "qwen3-1.7b"
+
+
+# ---------------------------------------------------------------------------
+# fake backend: pure scheduler exercises
+# ---------------------------------------------------------------------------
+
+
+class FakeLane:
+    """Backend double: token = running counter, no model, no jax."""
+
+    def __init__(self, n_slots, max_len=10_000):
+        self.n_slots, self.max_len = n_slots, max_len
+        self.max_group = n_slots
+        self._n = 0
+        self.slot_tok = np.zeros(n_slots, np.int64)
+        self.admitted = 0
+
+    def warmup(self):
+        return 0
+
+    def admit(self, prompts, slots):
+        out = []
+        for _, s in zip(prompts, slots):
+            self._n += 1
+            self.slot_tok[s] = self._n
+            out.append(self._n)
+        self.admitted += len(out)
+        return np.asarray(out)
+
+    def decode_round(self):
+        self.slot_tok = self.slot_tok + 1
+        return self.slot_tok.copy()
+
+
+def _fake_tiers(names=("a", "b")):
+    return [AccuracyTier(n, None, 0.001 * i, 1.0 + i)
+            for i, n in enumerate(names)]
+
+
+def _fake_engine(n_slots=3, names=("a", "b"), **kw):
+    tiers = _fake_tiers(names)
+    lanes = {t.name: FakeLane(n_slots) for t in tiers}
+    return ServingEngine(lanes, TierRouter(tiers),
+                         check_invariants=True, **kw), lanes
+
+
+def _req(rid, tier="a", plen=4, max_new=3, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int64),
+                   max_new=max_new, tier=tier, arrival=arrival)
+
+
+def test_scheduler_basic_complete():
+    eng, lanes = _fake_engine()
+    reqs = [_req(i, tier="ab"[i % 2], max_new=1 + i % 4,
+                 arrival=0.01 * i) for i in range(10)]
+    res = eng.run(reqs, clock=SimClock())
+    assert len(res) == 10
+    for r in reqs:
+        assert res[r.rid].done
+        assert len(res[r.rid].tokens) == r.max_new
+    for lane in eng.lanes.values():          # eviction freed every slot
+        assert not lane.running and not lane.queue
+        assert sorted(lane.free) == list(range(lane.backend.n_slots))
+    assert eng.active_tokens == 0
+
+
+def test_scheduler_static_waits_for_full_batch():
+    eng, lanes = _fake_engine(n_slots=2, names=("a",), continuous=False)
+    reqs = [_req(i, max_new=2, arrival=0.1 * i) for i in range(4)]
+    res = eng.run(reqs, clock=SimClock())
+    assert all(r.done for r in res.values())
+    # static admission: batches of exactly n_slots (full drains between)
+    assert lanes["a"].admitted == 4
+    assert eng.peak_running <= 2
+
+
+def test_scheduler_token_budget_blocks_head():
+    eng, _ = _fake_engine(n_slots=3, names=("a",), token_budget=12)
+    reqs = [_req(i, plen=4, max_new=2, arrival=0.0) for i in range(5)]
+    res = eng.run(reqs, clock=SimClock())        # cost 6 each: 2 at a time
+    assert all(r.done for r in res.values())
+    assert eng.peak_running <= 2                 # 12 // 6
+
+
+def test_submit_rejects_live_duplicate_rid():
+    eng, _ = _fake_engine(n_slots=2, names=("a",))
+    eng.submit(_req(0, max_new=3))
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, max_new=3))       # still queued/running
+    while not eng.results[0].done:
+        eng.step()
+    eng.submit(_req(0, max_new=2))           # done: rid reuse is fine
+    res = eng.run([], clock=SimClock())
+    assert not res                           # run() returns its own batch
+    assert eng.results[0].done
+
+
+def test_submit_rejects_oversized():
+    eng, _ = _fake_engine(n_slots=2, names=("a",), token_budget=8)
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, plen=6, max_new=6))   # cost 12 > budget
+    tiers = _fake_tiers(("a",))
+    lane = FakeLane(2, max_len=8)
+    eng2 = ServingEngine({"a": lane}, TierRouter(tiers))
+    with pytest.raises(ValueError):
+        eng2.submit(_req(1, plen=6, max_new=6))  # cost 12 > max_len
+
+
+def check_random_trace(spec, n_slots, continuous):
+    """Shared property oracle (also driven by hypothesis in
+    test_serving_properties.py): no slot leak, no starvation, budget
+    respected, eviction frees capacity — engine invariants are asserted
+    every tick (check_invariants=True) and the end state is drained."""
+    tiers = _fake_tiers(("a", "b"))
+    lanes = {t.name: FakeLane(n_slots) for t in tiers}
+    budget = 2 * n_slots * 14                     # max cost = 8 + 6
+    eng = ServingEngine(lanes, TierRouter(tiers), continuous=continuous,
+                        token_budget=budget, check_invariants=True)
+    t = 0.0
+    reqs = []
+    for i, (gap, plen, max_new, tier_i) in enumerate(spec):
+        t += gap
+        reqs.append(_req(i, tier="ab"[tier_i], plen=plen,
+                         max_new=max_new, arrival=t))
+    res = eng.run(reqs, clock=SimClock())
+    assert len(res) == len(reqs)                       # no starvation
+    for r in reqs:
+        assert res[r.rid].done
+        assert len(res[r.rid].tokens) == r.max_new
+    assert eng.active_tokens == 0
+    total_slots = sum(len(l.free) for l in eng.lanes.values())
+    assert total_slots == 2 * n_slots                  # no slot leak
+    assert eng.peak_running <= 2 * n_slots
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_scheduler_random_traces_seeded(seed):
+    """Seeded randomized-trace sweep (runs even without hypothesis; the
+    hypothesis-driven search lives in test_serving_properties.py)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 26))
+    spec = [(float(rng.uniform(0, 0.5)), int(rng.integers(1, 9)),
+             int(rng.integers(1, 7)), int(rng.integers(0, 2)))
+            for _ in range(n)]
+    check_random_trace(spec, n_slots=int(rng.integers(1, 4)),
+                       continuous=bool(seed % 2))
+
+
+# ---------------------------------------------------------------------------
+# ragged prefill: per-sequence positions / pad-validity masks
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config(ARCH, smoke=True)
+    lm = LM(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(0))
+
+
+def test_ragged_prefill_matches_solo(smoke_lm):
+    """Right-padded ragged batch: each sequence's last-token logits
+    match its solo (unpadded) prefill — pad tokens are invisible."""
+    cfg, lm, params = smoke_lm
+    rng = np.random.default_rng(0)
+    b, s = 3, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    lens = jnp.asarray([12, 7, 4], jnp.int32)
+    lp, _ = lm.prefill(params, {"tokens": toks, "lengths": lens,
+                                "max_len": 16})
+    for i in range(b):
+        li = int(lens[i])
+        solo, _ = lm.prefill(params, {"tokens": toks[i:i + 1, :li],
+                                      "max_len": 16})
+        np.testing.assert_allclose(
+            np.asarray(lp[i, -1], np.float32),
+            np.asarray(solo[0, -1], np.float32), rtol=5e-2, atol=5e-2,
+            err_msg=f"ragged row {i} (len {li}) diverged from solo")
+
+
+def test_left_pad_matches_right_pad(smoke_lm):
+    cfg, lm, params = smoke_lm
+    rng = np.random.default_rng(1)
+    b, s = 3, 10
+    toks = np.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    lens = np.asarray([10, 6, 3], np.int32)
+    lp_r, _ = lm.prefill(params, {"tokens": jnp.asarray(toks),
+                                  "lengths": jnp.asarray(lens),
+                                  "max_len": 12})
+    toksl = np.zeros_like(toks)
+    for i in range(b):
+        toksl[i, s - lens[i]:] = toks[i, :lens[i]]
+    lp_l, caches_l = lm.prefill(params, {"tokens": jnp.asarray(toksl),
+                                         "lengths": jnp.asarray(lens),
+                                         "pad": "left", "max_len": 12})
+    np.testing.assert_allclose(np.asarray(lp_l[:, -1], np.float32),
+                               np.asarray(lp_r[:, -1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+    # left padding is scoring-only: no decodable caches come back (pad
+    # K/V would sit at the slot head, invisible to the fill-level mask)
+    assert caches_l is None
+
+
+def test_ragged_prefill_pad_tokens_masked(smoke_lm):
+    """Pad CONTENT must not leak: scrambling the pad region changes
+    nothing about any real token's logits."""
+    cfg, lm, params = smoke_lm
+    rng = np.random.default_rng(2)
+    b, s = 2, 10
+    toks = np.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    lens = jnp.asarray([6, 4], jnp.int32)
+    lp1, _ = lm.prefill(params, {"tokens": jnp.asarray(toks),
+                                 "lengths": lens, "max_len": 12})
+    toks2 = toks.copy()
+    toks2[0, 6:] = (toks2[0, 6:] + 13) % cfg.vocab
+    toks2[1, 4:] = (toks2[1, 4:] + 7) % cfg.vocab
+    lp2, _ = lm.prefill(params, {"tokens": jnp.asarray(toks2),
+                                 "lengths": lens, "max_len": 12})
+    assert np.array_equal(np.asarray(lp1), np.asarray(lp2)), \
+        "pad token content leaked into real-token logits"
+
+
+def test_ragged_decode_continuation(smoke_lm):
+    """Per-slot decode from a ragged prefill tracks each sequence's own
+    position (the slot-pool contract)."""
+    cfg, lm, params = smoke_lm
+    rng = np.random.default_rng(3)
+    b, s, gen = 2, 8, 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    lens = jnp.asarray([8, 5], jnp.int32)
+    lp, caches = lm.prefill(params, {"tokens": toks, "lengths": lens,
+                                     "max_len": 16})
+    tok = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+    pos = jnp.asarray(lens)
+    rag = [np.asarray(lp[:, -1], np.float32)]
+    for _ in range(gen):
+        lp, caches = lm.decode_step(params, caches, tok, pos)
+        tok = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+        rag.append(np.asarray(lp[:, -1], np.float32))
+    for i in range(b):
+        li = int(lens[i])
+        solo, c = lm.prefill(params, {"tokens": toks[i:i + 1, :li],
+                                      "max_len": 16})
+        tk = jnp.argmax(solo[:, -1], -1)[:, None].astype(jnp.int32)
+        np.testing.assert_allclose(rag[0][i], np.asarray(
+            solo[0, -1], np.float32), rtol=5e-2, atol=5e-2)
+        for step in range(gen):
+            solo, c = lm.decode_step(params, c, tk, jnp.int32(li + step))
+            tk = jnp.argmax(solo[:, -1], -1)[:, None].astype(jnp.int32)
+            np.testing.assert_allclose(
+                rag[step + 1][i], np.asarray(solo[0, -1], np.float32),
+                rtol=5e-2, atol=5e-2,
+                err_msg=f"row {i} decode step {step} diverged")
+
+
+# ---------------------------------------------------------------------------
+# real LM lanes: bit-identity, pre-warm / zero-retrace, tier routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier_name", ["exact", "balanced"])
+def test_engine_bit_identical_to_lockstep(smoke_lm, tier_name):
+    """All requests arriving together == the lockstep baseline, logit
+    for logit (acceptance criterion: the slot pool is a pure
+    generalization, not an approximation)."""
+    cfg, _, params = smoke_lm
+    tier = {t.name: t for t in build_tiers()}[tier_name]
+    lm = LM(dataclasses.replace(cfg, cim=tier.cim))
+    rng = np.random.default_rng(4)
+    b, s, gen, max_len = 2, 8, 3, 16
+    toks = rng.integers(0, cfg.vocab, (b, s))
+
+    lp, caches = lm.prefill(params, {"tokens": jnp.asarray(toks),
+                                     "max_len": max_len})
+    tok = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+    ref = [np.asarray(lp[:, -1], np.float32)]
+    for i in range(gen - 1):
+        lp, caches = lm.decode_step(params, caches, tok, jnp.int32(s + i))
+        tok = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+        ref.append(np.asarray(lp[:, -1], np.float32))
+
+    lane = LMLaneBackend(lm, params, n_slots=b, max_len=max_len,
+                         prompt_buckets=(s,), group_buckets=(b,))
+    eng = ServingEngine({tier.name: lane}, TierRouter([tier]),
+                        record_logits=True)
+    eng.warmup()
+    reqs = [Request(rid=i, prompt=toks[i], max_new=gen, tier=tier.name)
+            for i in range(b)]
+    res = eng.run(reqs, clock=SimClock())
+    assert eng.steady_retraces() == 0
+    for i in range(b):
+        assert len(res[i].logits) == gen
+        for t in range(gen):
+            assert np.array_equal(res[i].logits[t], ref[t][i]), \
+                f"req {i} token {t}: engine != lockstep (tier {tier_name})"
+
+
+def test_engine_prewarm_zero_steady_retraces(smoke_lm):
+    """Every (tier x prompt-bucket x group-bucket) executable is built
+    at warmup; serving mixed-tier Poisson traffic with occupancy churn
+    never retraces the dispatch engine afterwards."""
+    cfg, _, params = smoke_lm
+    tiers = build_tiers(families=("exact", "appro42"))
+    eng = build_engine(cfg, params, tiers=tiers, slots_per_tier=2,
+                       max_len=24, prompt_buckets=(6,),
+                       group_buckets=(1, 2))
+    n = eng.warmup()
+    assert n == len(tiers) * (1 * 2 + 1)   # (P x G) prefills + decode
+    wl = poisson_workload(8, rate=500.0, vocab=cfg.vocab,
+                          prompt_len=(3, 6), max_new=(1, 5),
+                          tier_mix=(("exact", None, 1.0),
+                                    ("balanced", None, 1.0)), seed=5)
+    res = eng.run(wl)
+    assert all(r.done for r in res.values())
+    assert {r.tier for r in res.values()} == {"exact", "balanced"}
+    assert eng.steady_retraces() == 0, \
+        "tier switches / occupancy changes retraced after pre-warm"
+
+
+def test_engine_staggered_matches_solo(smoke_lm):
+    """A request that joins a half-busy pool mid-flight generates the
+    same tokens as when served alone (CiM off: rows are independent)."""
+    cfg, lm, params = smoke_lm
+    float_tier = AccuracyTier("float", None, 0.0, 0.0)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, (6,)) for _ in range(3)]
+
+    solo_tokens = []
+    for p in prompts:
+        lane = LMLaneBackend(lm, params, n_slots=2, max_len=24,
+                             prompt_buckets=(6,), group_buckets=(1, 2))
+        eng = ServingEngine({"float": lane}, TierRouter([float_tier]))
+        eng.warmup()
+        res = eng.run([Request(rid=0, prompt=p, max_new=5,
+                               tier="float")], clock=SimClock())
+        solo_tokens.append(res[0].tokens)
+
+    lane = LMLaneBackend(lm, params, n_slots=2, max_len=24,
+                         prompt_buckets=(6,), group_buckets=(1, 2))
+    eng = ServingEngine({"float": lane}, TierRouter([float_tier]))
+    eng.warmup()
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=5, tier="float",
+                    arrival=0.0) for i in range(3)]     # 3 reqs, 2 slots
+    res = eng.run(reqs)
+    assert eng.steady_retraces() == 0
+    for i in range(3):
+        assert res[i].tokens == solo_tokens[i], \
+            f"req {i}: pool-shared generation diverged from solo"
+
+
+def test_tier_router():
+    tiers = build_tiers()
+    r = TierRouter(tiers)
+    assert r.route(0.0).name == "exact"
+    assert r.route(None).name == "exact"
+    by_name = {t.name: t for t in tiers}
+    # any tolerance admitting 'balanced' routes there (cheapest energy)
+    assert r.route(by_name["balanced"].nmed).name == "balanced"
+    assert r.route(1.0).name == "balanced"
+    assert r.route(tier="economy").name == "economy"
+    with pytest.raises(KeyError):
+        r.route(tier="no-such-tier")
+    with pytest.raises(ValueError):
+        TierRouter([t for t in tiers if t.nmed > 0]).route(0.0)
+
+
+def test_engine_rejects_non_attention_arch():
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    with pytest.raises(ValueError):
+        build_engine(cfg, tiers=build_tiers(families=("exact",)))
+    from repro.serving import servable_archs
+
+    names = servable_archs()
+    assert "qwen3-1.7b" in names and "recurrentgemma-9b" not in names
+
+
+def test_ragged_prefill_rejected_for_stateful_stacks():
+    """Ragged prefill would silently corrupt ring-buffered / recurrent
+    state — it must raise, not degrade."""
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        lm.prefill(params, {"tokens": toks,
+                            "lengths": jnp.asarray([8, 4], jnp.int32),
+                            "max_len": 16})

@@ -1,0 +1,23 @@
+"""Hypothesis-driven scheduler property tests (the oracle lives in
+tests/test_serving.py::check_random_trace): no slot leak, no
+starvation, eviction frees capacity, token budget respected, over
+randomized arrival traces and both admission policies."""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need the optional "
+    "hypothesis dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_serving import check_random_trace  # noqa: E402
+
+req_st = st.tuples(st.floats(0.0, 0.5), st.integers(1, 8),
+                   st.integers(1, 6), st.integers(0, 1))
+
+
+@given(st.lists(req_st, min_size=1, max_size=25),
+       st.integers(1, 3), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_scheduler_properties_random_traces(spec, n_slots, continuous):
+    check_random_trace(spec, n_slots, continuous)
