@@ -17,8 +17,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_conv, bench_kernels, bench_serve,
-                            roofline, table2_ppa, table3_psnr,
-                            table4_cnn, table5_yield)
+                            bench_shard, roofline, table2_ppa,
+                            table3_psnr, table4_cnn, table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -67,6 +67,15 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_serve", 0.0, f"ERROR:{type(e).__name__}"))
+    shard_path = (bench_shard.OUT_PATH_SMOKE if smoke
+                  else bench_shard.OUT_PATH)
+    try:
+        rows.extend(bench_shard.run(fast=fast or "--kernels" in sys.argv,
+                                    smoke=smoke))
+        print(f"shard records -> {shard_path}")
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_shard", 0.0, f"ERROR:{type(e).__name__}"))
     if mods:
         try:
             rows.extend(roofline.energy_report())

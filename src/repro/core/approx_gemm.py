@@ -62,6 +62,23 @@ and the `(acc * sx) * sw` dequant epilogue on flush inside one
 cim_gemm.py).  The int-in runners (`run_int_kernel`) remain the
 registry-oracle surface validated bit-for-bit against kernels/ref.py.
 
+**Mesh-partitioned execution** (DESIGN.md §11): `plan_gemm`/`plan_conv`
+accept an optional `(mesh, x_spec, w_spec)` and return a `MeshPlan`
+wrapping the shard-local inner plan; the frontends then build a
+`shard_map`-wrapped executable that runs one per-shard
+LUT-gather/MXU/log kernel per device.  Two tensor-parallel layouts:
+contraction-sharded (K for GEMMs, C for convs — the per-shard kernel
+returns its raw int32 accumulator via the `*_partial` deferred-epilogue
+entry points, a `jax.lax.psum` over the model axis combines them, and
+the `(acc * sx) * sw` epilogue runs after the collective) and
+output-sharded (N — no collective at all; each shard owns its output
+columns).  Quantization scales are always computed *globally* before
+the shard_map, so both layouts are bit-identical to the single-device
+oracle for the integer modes (`bit_exact`, `hardware`) — integer
+addition commutes exactly.  The executable cache key grows the mesh
+axis sizes + specs, so mesh switches (like tier switches) stay one
+dict hit and `trace_count()` stays flat in steady state.
+
 Backward pass everywhere is a straight-through estimator (exact float
 VJP), the standard choice for approximate/quantized training.
 """
@@ -70,11 +87,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import threading
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import autotune
 from .error_model import SurrogateModel
@@ -282,21 +301,36 @@ def plan_gemm(family: str, mode: str, bits: int, m: int, k: int, n: int,
               backend: Optional[str] = None,
               interpret: Optional[bool] = None,
               block: Optional[Tuple[int, int, int]] = None,
-              spec: Optional[MultiplierSpec] = None) -> GemmPlan:
+              spec: Optional[MultiplierSpec] = None,
+              mesh: Optional[Mesh] = None, x_spec=None, w_spec=None):
     """select_kernel + autotuned block size for the concrete shape.
 
     Memoized on the power-of-two-bucketed shape (autotune.bucket): one
     plan serves a whole family of nearby GEMMs, and block resolution is
     bucket-invariant by construction (autotune keys the same way).
+
+    With `mesh` (+ PartitionSpec-style `x_spec` over (M, K) rows /
+    `w_spec` over (K, N)) the result is a `MeshPlan`: the inner plan is
+    resolved for the *shard-local* extents (so autotuned blocks fit the
+    per-device problem) and the frontends execute it under shard_map
+    (DESIGN.md §11).  Only the integer modes (`MESH_MODES`) qualify.
     """
     if mode not in MODES:
         raise ValueError(f"mode {mode!r} not in {MODES}")
     if family not in FAMILIES:
         raise ValueError(f"family {family!r} not in {FAMILIES}")
     backend = backend or jax.default_backend()
-    return _plan_gemm_cached(family, mode, bits, autotune.bucket(m),
-                             autotune.bucket(k), autotune.bucket(n),
-                             backend, interpret, block, spec)
+    if mesh is None:
+        return _plan_gemm_cached(family, mode, bits, autotune.bucket(m),
+                                 autotune.bucket(k), autotune.bucket(n),
+                                 backend, interpret, block, spec)
+    _check_mesh_gemm(mode, m, k, n, mesh, x_spec, w_spec)
+    dp, wk, wn, (ml, kl, nl) = _mesh_gemm_layout(m, k, n, mesh, x_spec,
+                                                 w_spec)
+    return _plan_gemm_mesh_cached(family, mode, bits, autotune.bucket(ml),
+                                  autotune.bucket(kl), autotune.bucket(nl),
+                                  backend, interpret, block, spec, mesh,
+                                  dp, wk, wn)
 
 
 # ---------------------------------------------------------------------------
@@ -469,7 +503,8 @@ def plan_conv(family: str, mode: str, bits: int, b: int, h: int, w: int,
               backend: Optional[str] = None,
               interpret: Optional[bool] = None,
               block: Optional[Tuple[int, int, int]] = None,
-              spec: Optional[MultiplierSpec] = None) -> ConvPlan:
+              spec: Optional[MultiplierSpec] = None,
+              mesh: Optional[Mesh] = None, x_spec=None, w_spec=None):
     """Route one conv to an entry + autotuned (bb, bc, bn) block.
 
     Memoized on the conv-bucketed shape (autotune.bucket_conv): powers
@@ -480,18 +515,234 @@ def plan_conv(family: str, mode: str, bits: int, b: int, h: int, w: int,
     the declared bound is honored by construction), and Pallas entries
     are additionally gated on the VMEM footprint model
     (`_conv_kernel_fits`); oversize planes fall back to `conv_im2col`.
+
+    With `mesh`, `x_spec` shards the batch dim of (B, H, W, C) and
+    `w_spec` is the (K, N)-style pair over the (kh*kw*C, N) weight —
+    P("model", None) = input-channel (contraction) sharding with psum,
+    P(None, "model") = out-channel sharding, no collective.  Returns a
+    `MeshPlan` over the shard-local geometry (DESIGN.md §11); only the
+    integer modes and bit-safe geometries qualify (a non-bit-safe
+    geometry's per-tensor scale depends on the materialized patch
+    matrix, which no shard can see whole).
     """
     if mode not in MODES:
         raise ValueError(f"mode {mode!r} not in {MODES}")
     if family not in FAMILIES:
         raise ValueError(f"family {family!r} not in {FAMILIES}")
     backend = backend or jax.default_backend()
-    bb, hb, wb, cb, _, _, _ = autotune.bucket_conv(b, h, w, c, conv.kh,
+    if mesh is None:
+        bb, hb, wb, cb, _, _, _ = autotune.bucket_conv(b, h, w, c, conv.kh,
+                                                       conv.kw, conv.stride)
+        return _plan_conv_cached(family, mode, bits, bb, hb, wb, cb,
+                                 autotune.bucket(n), conv,
+                                 _conv_bit_exact_safe(h, w, conv), backend,
+                                 interpret, block, spec)
+    _check_mesh_conv(mode, h, w, conv, b, c, n, mesh, x_spec, w_spec)
+    dp, wk, wn, _ = _mesh_gemm_layout(b, c, n, mesh, P(_one_spec(x_spec)),
+                                      w_spec)
+    return _plan_conv_mesh_cached(family, mode, bits, b, h, w, c, n, conv,
+                                  backend, interpret, block, spec, mesh,
+                                  dp, wk, wn)
+
+
+def _one_spec(x_spec):
+    """First entry of a conv x_spec (the batch dim); rest must be
+    unsharded — H/W tiling needs halo exchange (known follow-up)."""
+    if x_spec is None:
+        return None
+    xs = tuple(x_spec)
+    if any(e is not None for e in xs[1:]):
+        raise ValueError(
+            f"mesh conv shards batch (and C via w_spec) only; got {xs}")
+    return xs[0] if xs else None
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_conv_mesh_cached(family: str, mode: str, bits: int, b: int,
+                           h: int, w: int, c: int, n: int,
+                           conv: ConvParams, backend: str,
+                           interpret: Optional[bool],
+                           block: Optional[Tuple[int, int, int]],
+                           spec: Optional[MultiplierSpec], mesh: Mesh,
+                           dp: Tuple[str, ...], wk: Tuple[str, ...],
+                           wn: Tuple[str, ...]) -> MeshPlan:
+    bl = b // _axes_size(mesh, dp)
+    cl = c // _axes_size(mesh, wk)
+    nl = n // _axes_size(mesh, wn)
+    bb, hb, wb, cb, _, _, _ = autotune.bucket_conv(bl, h, w, cl, conv.kh,
                                                    conv.kw, conv.stride)
-    return _plan_conv_cached(family, mode, bits, bb, hb, wb, cb,
-                             autotune.bucket(n), conv,
-                             _conv_bit_exact_safe(h, w, conv), backend,
-                             interpret, block, spec)
+    inner = _plan_conv_cached(family, mode, bits, bb, hb, wb, cb,
+                              autotune.bucket(nl), conv, True, backend,
+                              interpret, block, spec)
+    x_spec = P(_spec_entry(dp), None, None, _spec_entry(wk))
+    w3_spec = P(None, _spec_entry(wk), _spec_entry(wn))
+    sw_spec = P(None, _spec_entry(wn))
+    out_spec = P(_spec_entry(dp), None, None, _spec_entry(wn))
+    return MeshPlan(plan=inner, mesh=mesh,
+                    in_specs=(x_spec, w3_spec, P(), sw_spec),
+                    out_spec=out_spec, reduce_axes=wk,
+                    local_shape=(bl, h, w, cl, nl))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-partitioned planning (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+# Modes the mesh path supports.  They are exactly the integer-core modes:
+# per-shard int32 accumulators psum bit-exactly, so the sharded result is
+# bit-identical to the single-device oracle.  Float modes (exact MXU dot,
+# surrogates) would reassociate float partial sums across shards — those
+# keep the GSPMD constraint path (models/common.wsc).
+MESH_MODES = ("bit_exact", "hardware")
+
+
+def _norm_axes(entry) -> Tuple[str, ...]:
+    """One PartitionSpec entry -> tuple of mesh axis names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod([mesh.shape[a] for a in axes]) if axes else 1
+
+
+def _spec_entry(axes: Tuple[str, ...]):
+    return None if not axes else (axes[0] if len(axes) == 1 else axes)
+
+
+def _canon_spec(spec) -> Optional[Tuple]:
+    """Hashable canonical form of a user-supplied PartitionSpec/tuple
+    (front-cache key component)."""
+    return None if spec is None else tuple(spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A mesh-partitioned GEMM/conv: shard-local inner plan + placement.
+
+    `in_specs` are the shard_map specs for (x, w, sx, sw) — for convs, w
+    is the rank-3 (kh*kw, C, N) tap-stack form so a C row-shard is a
+    plain dimension shard.  `reduce_axes` names the mesh axes the int32
+    partial accumulator psums over (empty for the output-sharded
+    layout).  `local_shape` carries the conv shard-local (b, h, w, c, n)
+    for the materialized-fallback inner-GEMM resolution.
+    """
+
+    plan: Union[GemmPlan, ConvPlan]
+    mesh: Mesh
+    in_specs: Tuple
+    out_spec: P
+    reduce_axes: Tuple[str, ...]
+    local_shape: Optional[Tuple[int, ...]] = None
+
+    @property
+    def entry(self) -> KernelEntry:
+        return self.plan.entry
+
+
+def _plan_token(plan) -> Tuple:
+    """Hashable routing identity of a plan, for executable-cache keys."""
+    if isinstance(plan, MeshPlan):
+        return (_plan_token(plan.plan) + ("mesh",)
+                + (tuple(sorted(plan.mesh.shape.items())), plan.mesh,
+                   plan.in_specs, plan.out_spec, plan.reduce_axes))
+    return (plan.entry.name, getattr(plan, "conv", None), plan.block,
+            plan.interpret, plan.backend)
+
+
+def _mesh_gemm_layout(m: int, k: int, n: int, mesh: Mesh, x_spec, w_spec):
+    """Validate + canonicalize a GEMM mesh request.
+
+    Returns (dp, wk, wn) axis tuples and the shard-local (m, k, n).
+    `w_spec` must shard exactly one of {K (contraction, psum layout),
+    N (output columns, collective-free layout)}; `x_spec` may shard the
+    flattened row dim on the batch axes (rides along either layout).
+
+    Runs on the RAW shape, never a bucketed one — the frontends call it
+    on every mesh request, including front-cache hits, because two
+    shapes in one bucket can differ in divisibility (m=32 divides a
+    2-way axis, m=31 in the same bucket does not).
+    """
+    w_spec = P(*w_spec) if w_spec is not None else P(None, None)
+    x_spec = P(*x_spec) if x_spec is not None else P(None, None)
+    dp = _norm_axes(x_spec[0] if len(x_spec) > 0 else None)
+    wk = _norm_axes(w_spec[0] if len(w_spec) > 0 else None)
+    wn = _norm_axes(w_spec[1] if len(w_spec) > 1 else None)
+    if wk and wn:
+        raise ValueError(
+            f"mesh GEMM: w sharded on both K ({wk}) and N ({wn}); pick "
+            "one tensor-parallel layout")
+    for ax in (*dp, *wk, *wn):
+        if ax not in mesh.shape:
+            raise ValueError(f"axis {ax!r} not in mesh {dict(mesh.shape)}")
+    if set(dp) & (set(wk) | set(wn)):
+        raise ValueError(f"row axes {dp} collide with weight axes")
+    for what, dim, axes in (("M", m, dp), ("K", k, wk), ("N", n, wn)):
+        size = _axes_size(mesh, axes)
+        if dim % size:
+            raise ValueError(
+                f"mesh GEMM: {what}={dim} not divisible by axes "
+                f"{axes} (size {size})")
+    return dp, wk, wn, (m // _axes_size(mesh, dp),
+                        k // _axes_size(mesh, wk),
+                        n // _axes_size(mesh, wn))
+
+
+def _check_mesh_gemm(mode: str, m: int, k: int, n: int, mesh: Mesh,
+                     x_spec, w_spec) -> None:
+    """Exact-shape validation of one mesh GEMM request: mode + layout +
+    divisibility.  The frontends run this BEFORE consulting the
+    bucketed front cache — a warm entry must never serve a shape the
+    planner would have rejected."""
+    if mode not in MESH_MODES:
+        raise ValueError(
+            f"mesh execution supports the integer modes {MESH_MODES}; "
+            f"mode {mode!r} keeps the GSPMD constraint path")
+    _mesh_gemm_layout(m, k, n, mesh, x_spec, w_spec)
+
+
+def _check_mesh_conv(mode: str, h: int, w: int, conv: "ConvParams",
+                     b: int, c: int, n: int, mesh: Mesh, x_spec,
+                     w_spec) -> None:
+    """Exact-geometry validation of one mesh conv request (mode,
+    bit-safety — which bucketing would mask — layout, divisibility);
+    run on every call for the same reason as `_check_mesh_gemm`."""
+    if mode not in MESH_MODES:
+        raise ValueError(
+            f"mesh execution supports the integer modes {MESH_MODES}; "
+            f"mode {mode!r} keeps the GSPMD constraint path")
+    if not _conv_bit_exact_safe(h, w, conv):
+        raise ValueError(
+            f"mesh conv: geometry (h={h}, w={w}, {conv.kh}x{conv.kw} "
+            f"s{conv.stride}) is not bit-safe — the oracle's scale needs "
+            "the whole materialized patch matrix; run unsharded")
+    _mesh_gemm_layout(b, c, n, mesh, P(_one_spec(x_spec)), w_spec)
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_gemm_mesh_cached(family: str, mode: str, bits: int, mbl: int,
+                           kbl: int, nbl: int, backend: str,
+                           interpret: Optional[bool],
+                           block: Optional[Tuple[int, int, int]],
+                           spec: Optional[MultiplierSpec], mesh: Mesh,
+                           dp: Tuple[str, ...], wk: Tuple[str, ...],
+                           wn: Tuple[str, ...]) -> MeshPlan:
+    inner = _plan_gemm_cached(family, mode, bits, mbl, kbl, nbl, backend,
+                              interpret, block, spec)
+    if inner.entry.name not in PARTIAL_RUNNERS:
+        raise ValueError(
+            f"kernel {inner.entry.name!r} has no shard-local (partial) "
+            f"runner; mesh execution supports {sorted(PARTIAL_RUNNERS)}")
+    x_spec = P(_spec_entry(dp), _spec_entry(wk))
+    w_spec = P(_spec_entry(wk), _spec_entry(wn))
+    sw_spec = P(None, _spec_entry(wn))
+    out_spec = P(_spec_entry(dp), _spec_entry(wn))
+    return MeshPlan(plan=inner, mesh=mesh,
+                    in_specs=(x_spec, w_spec, P(), sw_spec),
+                    out_spec=out_spec, reduce_axes=wk)
 
 
 # ---------------------------------------------------------------------------
@@ -683,6 +934,167 @@ CONV_RUNNERS: Dict[str, Callable] = {
     "pallas_conv_lut": _run_conv_lut,
     "pallas_conv_nibble": _run_conv_nibble,
     "pallas_conv_log": _run_conv_log,
+}
+
+
+# ---------------------------------------------------------------------------
+# Shard-local (partial) runners — one per-device kernel inside shard_map
+# (DESIGN.md §11).  f32 shard operands + the GLOBAL quantization scales
+# in, raw int32 partial accumulator out; the caller psums over the model
+# axis and applies the (acc * sx) * sw epilogue after the collective.
+# ---------------------------------------------------------------------------
+
+
+def _partial_jnp_lut(xb, wb, sx, sw, gp: GemmParams, plan):
+    xq = quantize(xb, sx, gp.bits)
+    wq = quantize(wb, sw, gp.bits)
+    return _run_jnp_lut(xq, wq, gp, plan)
+
+
+def _partial_lut(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.lut_partial_acc(xb, wb, gp.spec, sx, sw, block=plan.block,
+                               interpret=plan.interpret)
+
+
+def _partial_nibble(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.nibble_partial_acc(xb, wb, gp.spec, sx, sw,
+                                  block=plan.block,
+                                  interpret=plan.interpret)
+
+
+def _partial_log(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.log_partial_acc(xb, wb, sx, sw, bits=gp.bits,
+                               compensated=(gp.family == "log_our"),
+                               block=plan.block, interpret=plan.interpret)
+
+
+# entry name -> shard-local f32 (M, K_shard) x (K_shard, N) -> int32 (M, N)
+PARTIAL_RUNNERS: Dict[str, Callable] = {
+    "jnp_lut": _partial_jnp_lut,
+    "pallas_lut_gather": _partial_lut,
+    "pallas_lut_nibble": _partial_nibble,
+    "pallas_log": _partial_log,
+}
+
+
+def _scaled_lut(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.lut_fused_scaled(xb, wb, gp.spec, sx, sw, block=plan.block,
+                                interpret=plan.interpret)
+
+
+def _scaled_nibble(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.nibble_fused_scaled(xb, wb, gp.spec, sx, sw,
+                                   block=plan.block,
+                                   interpret=plan.interpret)
+
+
+def _scaled_log(xb, wb, sx, sw, gp: GemmParams, plan):
+    from repro.kernels import ops
+
+    return ops.log_fused_scaled(xb, wb, sx, sw, bits=gp.bits,
+                                compensated=(gp.family == "log_our"),
+                                block=plan.block, interpret=plan.interpret)
+
+
+# Output-sharded layout (no psum between quantize and dequant): the
+# epilogue runs INSIDE the kernel — one HBM pass per shard, no int32
+# accumulator round trip.  Same float ops as partial + jnp epilogue,
+# so bit-identity is unchanged.  jnp_lut has no fused form and keeps
+# the partial + explicit-epilogue path.
+SCALED_FUSED_RUNNERS: Dict[str, Callable] = {
+    "pallas_lut_gather": _scaled_lut,
+    "pallas_lut_nibble": _scaled_nibble,
+    "pallas_log": _scaled_log,
+}
+
+
+def _partial_conv_lut(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_lut_partial(xb, wb3, gp.spec, sx, sw,
+                                  kh=plan.conv.kh, kw=plan.conv.kw,
+                                  stride=plan.conv.stride, nibble=False,
+                                  block=plan.block,
+                                  interpret=plan.interpret)
+
+
+def _partial_conv_nibble(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_lut_partial(xb, wb3, gp.spec, sx, sw,
+                                  kh=plan.conv.kh, kw=plan.conv.kw,
+                                  stride=plan.conv.stride, nibble=True,
+                                  block=plan.block,
+                                  interpret=plan.interpret)
+
+
+def _partial_conv_log(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_log_partial(xb, wb3, sx, sw, bits=gp.bits,
+                                  compensated=(gp.family == "log_our"),
+                                  kh=plan.conv.kh, kw=plan.conv.kw,
+                                  stride=plan.conv.stride,
+                                  block=plan.block,
+                                  interpret=plan.interpret)
+
+
+# entry name -> shard-local f32 (B, H, W, C_shard) x (kh*kw, C_shard, N)
+# -> int32 (B, OH, OW, N) partial accumulator
+CONV_PARTIAL_RUNNERS: Dict[str, Callable] = {
+    "pallas_conv_lut": _partial_conv_lut,
+    "pallas_conv_nibble": _partial_conv_nibble,
+    "pallas_conv_log": _partial_conv_log,
+}
+
+
+def _scaled_conv_lut(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_lut_fused_scaled(xb, wb3, gp.spec, sx, sw,
+                                       kh=plan.conv.kh, kw=plan.conv.kw,
+                                       stride=plan.conv.stride,
+                                       nibble=False, block=plan.block,
+                                       interpret=plan.interpret)
+
+
+def _scaled_conv_nibble(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_lut_fused_scaled(xb, wb3, gp.spec, sx, sw,
+                                       kh=plan.conv.kh, kw=plan.conv.kw,
+                                       stride=plan.conv.stride,
+                                       nibble=True, block=plan.block,
+                                       interpret=plan.interpret)
+
+
+def _scaled_conv_log(xb, wb3, sx, sw, gp: GemmParams, plan: ConvPlan):
+    from repro.kernels import ops
+
+    return ops.conv2d_log_fused_scaled(xb, wb3, sx, sw, bits=gp.bits,
+                                       compensated=(gp.family
+                                                    == "log_our"),
+                                       kh=plan.conv.kh, kw=plan.conv.kw,
+                                       stride=plan.conv.stride,
+                                       block=plan.block,
+                                       interpret=plan.interpret)
+
+
+# the conv twin of SCALED_FUSED_RUNNERS (output-sharded layout)
+SCALED_CONV_RUNNERS: Dict[str, Callable] = {
+    "pallas_conv_lut": _scaled_conv_lut,
+    "pallas_conv_nibble": _scaled_conv_nibble,
+    "pallas_conv_log": _scaled_conv_log,
 }
 
 
@@ -1025,6 +1437,109 @@ def _conv_forward(gp: GemmParams, plan: ConvPlan, noise_kind: str,
 
 
 # ---------------------------------------------------------------------------
+# Mesh forwards: one shard-local kernel per device under shard_map (§11)
+# ---------------------------------------------------------------------------
+
+
+def _shard_map(fn, mp: MeshPlan):
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mp.mesh, in_specs=mp.in_specs,
+                     out_specs=mp.out_spec, check_rep=False)
+
+
+def _mesh_forward(gp: GemmParams, mp: MeshPlan, preserve_dtype: bool):
+    """(M, K) x (K, N) mesh-partitioned forward.  Global scales are
+    computed OUTSIDE the shard_map (cheap max-reductions; XLA lowers
+    them to an all-reduce over the sharded operand) so every shard
+    quantizes against the oracle's values.  Contraction-sharded: the
+    int32 partial accumulators psum exactly, dequant epilogue after
+    the collective.  Output-sharded: nothing separates quantize from
+    dequant, so the shard runs the FUSED kernel (epilogue in-kernel,
+    no accumulator round trip).  Bit-identical to the unsharded
+    executable either way."""
+    red = mp.reduce_axes
+    fused = None if red else SCALED_FUSED_RUNNERS.get(mp.plan.entry.name)
+    if fused is not None:
+        def shard_fn(xb, wb, sx, sw):
+            return fused(xb, wb, sx, sw, gp, mp.plan)
+    else:
+        runner = PARTIAL_RUNNERS[mp.plan.entry.name]
+
+        def shard_fn(xb, wb, sx, sw):
+            acc = runner(xb, wb, sx, sw, gp, mp.plan)
+            if red:
+                acc = jax.lax.psum(acc, red)
+            return (acc.astype(jnp.float32) * sx) * sw
+
+    sharded = _shard_map(shard_fn, mp)
+
+    def forward(xf, wf):
+        _mark_trace()
+        x32 = xf.astype(jnp.float32)
+        w32 = wf.astype(jnp.float32)
+        sx = quant_scale(x32, gp.bits)                 # global per-tensor
+        sw = quant_scale(w32, gp.bits, axis=0)         # global (1, N)
+        out = sharded(x32, w32, sx, sw)
+        return out.astype(xf.dtype) if preserve_dtype else out
+
+    return forward
+
+
+def _mesh_conv_forward(gp: GemmParams, mp: MeshPlan):
+    """(B, H, W, C) mesh-partitioned conv forward.  The weight travels
+    as the rank-3 (kh*kw, C, N) tap stack so an input-channel shard is
+    a plain dimension shard of every tap.  Entries without an implicit
+    partial kernel (the `conv_im2col` fallback: bit_exact mode, or a
+    VMEM-gated hardware plane) materialize the SHARD-LOCAL patch matrix
+    and run the routed integer GEMM kernel on it — the local column
+    order permutes K within the shard, which the int32 sum erases."""
+    plan, conv = mp.plan, mp.plan.conv
+    red = mp.reduce_axes
+    fused = None if red else SCALED_CONV_RUNNERS.get(plan.entry.name)
+    runner = CONV_PARTIAL_RUNNERS.get(plan.entry.name)
+    if fused is None and runner is None:
+        bl, h, w_, cl, nl = mp.local_shape
+        hb, wb_ = autotune.bucket(h), autotune.bucket(w_)
+        oh, ow = conv_out_hw(hb, wb_, conv.kh, conv.kw, conv.stride)
+        gplan = plan_gemm(gp.family, gp.mode, gp.bits,
+                          autotune.bucket(bl) * oh * ow,
+                          conv.kh * conv.kw * autotune.bucket(cl),
+                          autotune.bucket(nl), backend=plan.backend,
+                          spec=gp.spec)
+
+        def runner(xb, wb3, sx, sw, gp_, _plan):
+            cols = im2col_nhwc(xb, conv)
+            xq = quantize(cols.reshape(-1, cols.shape[-1]), sx, gp_.bits)
+            wq = quantize(wb3.reshape(-1, wb3.shape[-1]), sw, gp_.bits)
+            acc = run_int_kernel(gplan, xq, wq, gp_)
+            return acc.reshape(cols.shape[:3] + (wb3.shape[-1],))
+
+    if fused is not None:
+        def shard_fn(xb, wb3, sx, sw):
+            return fused(xb, wb3, sx, sw, gp, plan)
+    else:
+        def shard_fn(xb, wb3, sx, sw):
+            acc = runner(xb, wb3, sx, sw, gp, plan)
+            if red:
+                acc = jax.lax.psum(acc, red)
+            return (acc.astype(jnp.float32) * sx) * sw  # (1,N) broadcasts
+
+    sharded = _shard_map(shard_fn, mp)
+
+    def forward(x4, w2):
+        _mark_trace()
+        x32 = x4.astype(jnp.float32)
+        w32 = w2.astype(jnp.float32)
+        sx = quant_scale(x32, gp.bits)
+        sw = quant_scale(w32, gp.bits, axis=0)
+        w3 = w32.reshape(conv.kh * conv.kw, x32.shape[-1], -1)
+        return sharded(x32, w3, sx, sw)
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
 # Executable cache (zero-retrace steady state, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
@@ -1032,12 +1547,11 @@ _EXEC_CACHE: Dict[Tuple, Callable] = {}
 _EXEC_LOCK = threading.Lock()
 
 
-def _exec_key(frontend: str, gp: GemmParams, plan: GemmPlan,
-              stochastic: bool, noise_kind: str, apply: bool,
-              x, w, m: int, k: int, n: int) -> Tuple:
-    return (frontend, gp, plan.entry.name, plan.block, plan.interpret,
-            plan.backend, stochastic, noise_kind, apply,
-            x.dtype, w.dtype, x.ndim,
+def _exec_key(frontend: str, gp: GemmParams, plan, stochastic: bool,
+              noise_kind: str, apply: bool, x, w, m: int, k: int,
+              n: int) -> Tuple:
+    return (frontend, gp, _plan_token(plan), stochastic, noise_kind,
+            apply, x.dtype, w.dtype, x.ndim,
             autotune.bucket(m), autotune.bucket(k), autotune.bucket(n))
 
 
@@ -1067,9 +1581,13 @@ def _wrap_ste(forward: Callable, takes_eps: bool,
     return run
 
 
-def _build_executable(frontend: str, gp: GemmParams, plan: GemmPlan,
+def _build_executable(frontend: str, gp: GemmParams, plan,
                       stochastic: bool, noise_kind: str,
                       apply: bool) -> Callable:
+    if isinstance(plan, MeshPlan):
+        forward = _mesh_forward(gp, plan,
+                                preserve_dtype=(frontend == "model"))
+        return _wrap_ste(forward, False, noise_kind)
     if frontend == "cim":
         forward, takes_eps = _cim_forward(gp, plan, noise_kind, stochastic,
                                           fused=True)
@@ -1106,21 +1624,25 @@ def _executable_for(frontend: str, gp: GemmParams, plan: GemmPlan,
     return fn
 
 
-def _conv_exec_key(gp: GemmParams, plan: ConvPlan, stochastic: bool,
+def _conv_exec_key(gp: GemmParams, plan, stochastic: bool,
                    noise_kind: str, x, w, b: int, h: int, w_: int, c: int,
                    n: int) -> Tuple:
-    return ("conv", gp, plan.entry.name, plan.conv, plan.block,
-            plan.interpret, plan.backend, stochastic, noise_kind,
+    conv = plan.plan.conv if isinstance(plan, MeshPlan) else plan.conv
+    return ("conv", gp, _plan_token(plan), stochastic, noise_kind,
             x.dtype, w.dtype) + autotune.bucket_conv(
-                b, h, w_, c, plan.conv.kh, plan.conv.kw,
-                plan.conv.stride) + (autotune.bucket(n),)
+                b, h, w_, c, conv.kh, conv.kw,
+                conv.stride) + (autotune.bucket(n),)
 
 
-def _build_conv_executable(gp: GemmParams, plan: ConvPlan, stochastic: bool,
+def _build_conv_executable(gp: GemmParams, plan, stochastic: bool,
                            noise_kind: str, shape) -> Callable:
-    forward, takes_eps = _conv_forward(gp, plan, noise_kind, stochastic,
-                                       shape)
-    conv = plan.conv
+    if isinstance(plan, MeshPlan):
+        forward, takes_eps = _mesh_conv_forward(gp, plan), False
+        conv = plan.plan.conv
+    else:
+        forward, takes_eps = _conv_forward(gp, plan, noise_kind,
+                                           stochastic, shape)
+        conv = plan.conv
     if takes_eps:
         ste = _ste_conv_eps(forward, conv)
 
@@ -1177,6 +1699,8 @@ def clear_dispatch_caches() -> None:
     _plan_gemm_cached.cache_clear()
     _conv_entries_cached.cache_clear()
     _plan_conv_cached.cache_clear()
+    _plan_gemm_mesh_cached.cache_clear()
+    _plan_conv_mesh_cached.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -1189,7 +1713,9 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                noise_kind: str = "normal",
                interpret: Optional[bool] = None,
                block: Optional[Tuple[int, int, int]] = None,
-               cached: bool = True) -> jnp.ndarray:
+               cached: bool = True,
+               mesh: Optional[Mesh] = None,
+               x_spec=None, w_spec=None) -> jnp.ndarray:
     """Dispatch + execute one approximate GEMM (macro semantics).
 
     x: (..., K) float; w: (K, N) float.  Returns float32 (..., N) with
@@ -1197,6 +1723,12 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     a pre-built jitted STE function from the module-level executable
     cache — a steady-state eager call never retraces.  `cached=False`
     rebuilds the closure per call (legacy behavior; benchmark baseline).
+
+    With `mesh` (+ `x_spec`/`w_spec`, see `plan_gemm`) the executable
+    is shard_map-partitioned over the mesh (DESIGN.md §11) —
+    bit-identical to the unsharded call for the integer modes, one
+    per-shard kernel per device, only the (M, N) partial accumulator
+    crossing the interconnect in the contraction-sharded layout.
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -1204,10 +1736,16 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     m = 1
     for s in lead:
         m *= int(s)
+    if mesh is not None:
+        # exact-shape validation on EVERY call: the front cache keys on
+        # bucketed shapes, and a warm entry must never serve a shape
+        # the planner would reject (divisibility is not bucket-stable)
+        _check_mesh_gemm(gp.mode, m, k, n, mesh, x_spec, w_spec)
     if cached:
         fkey = ("cim", gp, x.dtype, w.dtype, x.ndim, autotune.bucket(m),
                 autotune.bucket(k), autotune.bucket(n), key is not None,
-                noise_kind, interpret, block, jax.default_backend())
+                noise_kind, interpret, block, jax.default_backend(),
+                mesh, _canon_spec(x_spec), _canon_spec(w_spec))
         hit = _FAST_CACHE.get(fkey)
         if hit is not None:
             run, stochastic = hit
@@ -1215,7 +1753,8 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     if gp.mode not in MODES:
         raise ValueError(f"mode {gp.mode!r} not in {MODES}")
     plan = plan_gemm(gp.family, gp.mode, gp.bits, m, k, n,
-                     interpret=interpret, block=block, spec=gp.spec)
+                     interpret=interpret, block=block, spec=gp.spec,
+                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
     stochastic = (gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:
@@ -1225,9 +1764,13 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             _FAST_CACHE[fkey] = (run, stochastic)
         return run(x, w, key) if stochastic else run(x, w)
 
+    xf2 = x.reshape((-1, k))
+    if isinstance(plan, MeshPlan):
+        forward = _mesh_forward(gp, plan, preserve_dtype=False)
+        out = _ste_matmul(forward)(xf2, w)
+        return out.reshape(lead + (n,))
     forward, takes_eps = _cim_forward(gp, plan, noise_kind, stochastic,
                                       fused=False)
-    xf2 = x.reshape((-1, k))
     if takes_eps:
         eps = surrogate_noise(key, (xf2.shape[0], n), jnp.float32,
                               noise_kind)
@@ -1261,7 +1804,9 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                noise_kind: str = "normal",
                interpret: Optional[bool] = None,
                block: Optional[Tuple[int, int, int]] = None,
-               cached: bool = True) -> jnp.ndarray:
+               cached: bool = True,
+               mesh: Optional[Mesh] = None,
+               x_spec=None, w_spec=None) -> jnp.ndarray:
     """Dispatch + execute one approximate convolution (macro semantics).
 
     x: (B, H, W, C) float; w: (kh*kw*C, N) float with tap-major rows
@@ -1282,6 +1827,12 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     (materialize + the GEMM engine).  Executes through the same
     zero-retrace executable cache as the GEMM frontends, keyed on the
     conv-bucketed (B, H, W, C, kh, kw, stride) shape.
+
+    With `mesh`, execution is shard_map-partitioned (DESIGN.md §11):
+    `x_spec` shards the batch dim, `w_spec` (a (K, N)-style pair over
+    the (kh*kw*C, N) weight) picks input-channel (psum) or out-channel
+    (collective-free) tensor parallelism — bit-identical to the
+    unsharded call for the integer modes on bit-safe geometries.
     """
     conv = ConvParams(kh, kw, stride)
     b, h, w_, c = x.shape
@@ -1289,9 +1840,15 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     if w.shape[0] != kh * kw * c:
         raise ValueError(
             f"weight rows {w.shape[0]} != kh*kw*C = {kh}*{kw}*{c}")
+    if mesh is not None:
+        # every call: bit-safety and divisibility depend on the EXACT
+        # geometry, which the conv-bucketed front-cache key masks
+        _check_mesh_conv(gp.mode, h, w_, conv, b, c, n, mesh, x_spec,
+                         w_spec)
     if cached:
         fkey = (("conv2d", gp, conv, x.dtype, w.dtype, key is not None,
-                 noise_kind, interpret, block, jax.default_backend())
+                 noise_kind, interpret, block, jax.default_backend(),
+                 mesh, _canon_spec(x_spec), _canon_spec(w_spec))
                 + autotune.bucket_conv(b, h, w_, c, kh, kw, stride)
                 + (autotune.bucket(n),))
         hit = _FAST_CACHE.get(fkey)
@@ -1301,7 +1858,8 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     if gp.mode not in MODES:
         raise ValueError(f"mode {gp.mode!r} not in {MODES}")
     plan = plan_conv(gp.family, gp.mode, gp.bits, b, h, w_, c, n, conv,
-                     interpret=interpret, block=block, spec=gp.spec)
+                     interpret=interpret, block=block, spec=gp.spec,
+                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
     stochastic = (gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:
@@ -1311,6 +1869,8 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             _FAST_CACHE[fkey] = (run, stochastic)
         return run(x, w, key) if stochastic else run(x, w)
 
+    if isinstance(plan, MeshPlan):
+        return _ste_conv(_mesh_conv_forward(gp, plan), conv)(x, w)
     forward, takes_eps = _conv_forward(gp, plan, noise_kind, stochastic,
                                        (b, h, w_, c, n))
     if takes_eps:
@@ -1330,7 +1890,9 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                  key: Optional[jax.Array] = None, *,
                  apply: bool = True,
                  noise_kind: str = NOISE_KIND,
-                 cached: bool = True) -> jnp.ndarray:
+                 cached: bool = True,
+                 mesh: Optional[Mesh] = None,
+                 x_spec=None, w_spec=None) -> jnp.ndarray:
     """The model-zoo execution path (cim_linear core), dispatcher-routed.
 
     Differences from `cim_matmul` (both deliberate, DESIGN.md §8):
@@ -1339,6 +1901,11 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     and surrogate noise defaults to rademacher.  `apply=False` runs the
     exact int8 macro (mixed-macro allocation, DESIGN.md §4).  Executes
     through the same zero-retrace executable cache as `cim_matmul`.
+
+    With `mesh` (integer modes with `apply=True` only — `cim_linear`
+    routes here when an ambient mesh is present, DESIGN.md §11) the
+    executable is shard_map-partitioned; the f32 mesh output is cast
+    back to the activation dtype, preserving the model contract.
     """
     lead = x.shape[:-1]
     m = 1
@@ -1346,16 +1913,24 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
         m *= int(s)
     k = x.shape[-1]
     n = w.shape[-1]
+    if mesh is not None and not apply:
+        mesh, x_spec, w_spec = None, None, None     # exact macro: GSPMD
+    if mesh is not None:
+        # divisibility is not bucket-stable: validate the raw shape
+        # before the bucketed front cache can answer
+        _check_mesh_gemm(gp.mode, m, k, n, mesh, x_spec, w_spec)
     if cached:
         fkey = ("model", gp, x.dtype, w.dtype, x.ndim, autotune.bucket(m),
                 autotune.bucket(k), autotune.bucket(n), key is not None,
-                noise_kind, apply, jax.default_backend())
+                noise_kind, apply, jax.default_backend(),
+                mesh, _canon_spec(x_spec), _canon_spec(w_spec))
         hit = _FAST_CACHE.get(fkey)
         if hit is not None:
             run, stochastic = hit
             return run(x, w, key) if stochastic else run(x, w)
     mode = gp.mode if apply else "exact"
-    plan = plan_gemm(gp.family, mode, gp.bits, m, k, n, spec=gp.spec)
+    plan = plan_gemm(gp.family, mode, gp.bits, m, k, n, spec=gp.spec,
+                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
     stochastic = (apply and gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:
@@ -1365,6 +1940,10 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             _FAST_CACHE[fkey] = (run, stochastic)
         return run(x, w, key) if stochastic else run(x, w)
 
+    if isinstance(plan, MeshPlan):
+        forward = _mesh_forward(gp, plan, preserve_dtype=True)
+        x2 = x.reshape((-1, k))
+        return _ste_matmul(forward)(x2, w).reshape(lead + (n,))
     kind, f, flag = _model_forward(gp, plan, noise_kind, stochastic, apply,
                                    fused=False)
     if kind == "plain":

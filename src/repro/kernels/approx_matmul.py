@@ -27,6 +27,17 @@ SMEM/VMEM operands).  The fused forms remove the two extra HBM round
 trips (int8 operand materialization + int32 accumulator re-read) the
 dispatch engine previously paid around every hardware-mode GEMM.
 
+A third, **shard-local** entry point per layout (``lut_matmul_partial``
+/ ``nibble_lut_matmul_partial``, DESIGN.md §11) serves the
+mesh-partitioned tensor-parallel path: float operands quantize on tile
+load against *caller-supplied global* scales (under shard_map each
+device holds only a K- or N-slice, so a locally computed max would
+diverge from the single-device oracle), and the kernel flushes the raw
+int32 accumulator with NO epilogue — the caller ``jax.lax.psum``s the
+(M, N) partial over the contraction ("model") axis and applies
+``(acc * sx) * sw`` afterwards.  Integer addition commutes exactly, so
+the TP result is bit-identical to the unsharded kernel.
+
 TPU mapping (DESIGN.md §2): one (bm x bk) A-tile is a CiM subarray's
 stored word block; the LUT sits in VMEM like the macro's compute
 fabric.  Grid = (M/bm, N/bn, K/bk), k innermost so the int32
@@ -158,7 +169,7 @@ def lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray, lut_flat: jnp.ndarray,
 
 
 def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
-                  bits: int, k_slice: int):
+                  bits: int, k_slice: int, epilogue: bool = True):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -173,8 +184,45 @@ def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * sx_ref[0, 0]) * sw_ref[...]
+        if epilogue:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          * sx_ref[0, 0]) * sw_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
+
+
+def _lut_fused_call(x, w, lut_flat, sx, sw, bits, block, interpret,
+                    k_slice, epilogue):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, k_slice=k_slice,
+                          epilogue=epilogue),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1 << (2 * bits),), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (m + pm, n + pn), jnp.float32 if epilogue else jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(sx2, xp, wp, swp, lut_flat)
+    return out[:m, :n]
 
 
 @functools.partial(jax.jit,
@@ -191,34 +239,26 @@ def lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray, lut_flat: jnp.ndarray,
     operand or int32 accumulator round trips.  Bit-identical to
     quantize -> ``lut_matmul`` -> dequantize.
     """
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2, (x.shape, w.shape)
-    bm, bk, bn = block
-    pm, pk, pn = _pad2(m, k, n, block)
-    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
-    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
-    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
-    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
-                  constant_values=1.0)
-    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
-    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, bits=bits, k_slice=k_slice),
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((1 << (2 * bits),), lambda i, j, kk: (0,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(sx2, xp, wp, swp, lut_flat)
-    return out[:m, :n]
+    return _lut_fused_call(x, w, lut_flat, sx, sw, bits, block, interpret,
+                           k_slice, epilogue=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def lut_matmul_partial(x: jnp.ndarray, w: jnp.ndarray,
+                       lut_flat: jnp.ndarray, sx: jnp.ndarray,
+                       sw: jnp.ndarray, bits: int = 8,
+                       block: tuple = (32, 32, 128), interpret: bool = True,
+                       k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Shard-local LUT GEMM over a partial K extent (DESIGN.md §11).
+
+    f32 x (M, K_shard), w (K_shard, N) -> **int32** (M, N): quantizes
+    on tile load against the supplied *global* scales and flushes the
+    raw accumulator — the ``(acc * sx) * sw`` epilogue is deferred to
+    the caller, after its ``psum`` over the model axis.
+    """
+    return _lut_fused_call(x, w, lut_flat, sx, sw, bits, block, interpret,
+                           k_slice, epilogue=False)
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +327,8 @@ def nibble_lut_matmul(xq: jnp.ndarray, wq: jnp.ndarray,
 
 
 def _nibble_fused_kernel(sx_ref, x_ref, w_ref, sw_ref, subs_ref, o_ref,
-                         acc_ref, *, bits: int, k_slice: int):
+                         acc_ref, *, bits: int, k_slice: int,
+                         epilogue: bool = True):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -302,19 +343,15 @@ def _nibble_fused_kernel(sx_ref, x_ref, w_ref, sw_ref, subs_ref, o_ref,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * sx_ref[0, 0]) * sw_ref[...]
+        if epilogue:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          * sx_ref[0, 0]) * sw_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bits", "block", "interpret", "k_slice"))
-def nibble_lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray,
-                            subs_flat: jnp.ndarray, sx: jnp.ndarray,
-                            sw: jnp.ndarray, bits: int = 8,
-                            block: tuple = (32, 32, 128),
-                            interpret: bool = True,
-                            k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
-    """Fused-quantization nibble GEMM: f32 in -> f32 out, one HBM pass."""
+def _nibble_fused_call(x, w, subs_flat, sx, sw, bits, block, interpret,
+                       k_slice, epilogue):
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -328,7 +365,8 @@ def nibble_lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray,
     gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
     sub_len = 4 * (1 << (bits // 2)) ** 2
     out = pl.pallas_call(
-        functools.partial(_nibble_fused_kernel, bits=bits, k_slice=k_slice),
+        functools.partial(_nibble_fused_kernel, bits=bits, k_slice=k_slice,
+                          epilogue=epilogue),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -338,8 +376,36 @@ def nibble_lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray,
             pl.BlockSpec((sub_len,), lambda i, j, kk: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(
+            (m + pm, n + pn), jnp.float32 if epilogue else jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(sx2, xp, wp, swp, subs_flat)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def nibble_lut_matmul_fused(x: jnp.ndarray, w: jnp.ndarray,
+                            subs_flat: jnp.ndarray, sx: jnp.ndarray,
+                            sw: jnp.ndarray, bits: int = 8,
+                            block: tuple = (32, 32, 128),
+                            interpret: bool = True,
+                            k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Fused-quantization nibble GEMM: f32 in -> f32 out, one HBM pass."""
+    return _nibble_fused_call(x, w, subs_flat, sx, sw, bits, block,
+                              interpret, k_slice, epilogue=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block", "interpret", "k_slice"))
+def nibble_lut_matmul_partial(x: jnp.ndarray, w: jnp.ndarray,
+                              subs_flat: jnp.ndarray, sx: jnp.ndarray,
+                              sw: jnp.ndarray, bits: int = 8,
+                              block: tuple = (32, 32, 128),
+                              interpret: bool = True,
+                              k_slice: int = DEFAULT_K_SLICE) -> jnp.ndarray:
+    """Shard-local nibble GEMM: global scales in, raw int32 accumulator
+    out; epilogue deferred past the caller's psum (DESIGN.md §11)."""
+    return _nibble_fused_call(x, w, subs_flat, sx, sw, bits, block,
+                              interpret, k_slice, epilogue=False)

@@ -195,7 +195,7 @@ def conv_mxu_fused(x, w3, sx, sw, bits: int = 8, kh: int = 3, kw: int = 3,
 
 
 def _lut_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
-                geom, bits, k_slice, nibble):
+                geom, bits, k_slice, nibble, epilogue=True):
     kh, kw, oh, ow, stride = geom
 
     @pl.when(pl.program_id(2) == 0)
@@ -223,8 +223,11 @@ def _lut_kernel(sx_ref, x_ref, w_ref, sw_ref, lut_ref, o_ref, acc_ref, *,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * sx_ref[0, 0]) * sw_ref[...]
+        if epilogue:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          * sx_ref[0, 0]) * sw_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "kh", "kw", "stride",
@@ -250,13 +253,38 @@ def conv_lut_fused(x, w3, lut_flat, sx, sw, bits: int = 8, kh: int = 3,
     return out[:b, :, :, :n]
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "kh", "kw", "stride",
+                                             "block", "interpret",
+                                             "k_slice", "nibble"))
+def conv_lut_partial(x, w3, lut_flat, sx, sw, bits: int = 8, kh: int = 3,
+                     kw: int = 3, stride: int = 1,
+                     block: tuple = (8, 32, 128), interpret: bool = True,
+                     k_slice: int = DEFAULT_K_SLICE, nibble: bool = False):
+    """Shard-local LUT conv over a partial C extent (DESIGN.md §11):
+    x (B, H, W, C_shard) f32, w3 (kh*kw, C_shard, N) f32 -> **int32**
+    (B, OH, OW, N).  Quantizes against the supplied *global* scales and
+    flushes the raw accumulator; the dequant epilogue is deferred past
+    the caller's psum over the model axis."""
+    b, h, w_, _ = x.shape
+    n = w3.shape[-1]
+    oh, ow = out_hw(h, w_, kh, kw, stride)
+    xp, wp, swp, grid, block = _pad_operands(x, w3, sw, kh, kw, block)
+    out = _conv_call(
+        functools.partial(_lut_kernel, geom=(kh, kw, oh, ow, stride),
+                          bits=bits, k_slice=k_slice, nibble=nibble,
+                          epilogue=False),
+        xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+        jnp.int32, jnp.int32, interpret, extra=lut_flat)
+    return out[:b, :, :, :n]
+
+
 # ---------------------------------------------------------------------------
 # Log families: arithmetic log-domain datapath per tap
 # ---------------------------------------------------------------------------
 
 
 def _log_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, geom,
-                bits, compensated, k_slice):
+                bits, compensated, k_slice, epilogue=True):
     kh, kw, oh, ow, stride = geom
 
     @pl.when(pl.program_id(2) == 0)
@@ -280,8 +308,11 @@ def _log_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, geom,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * sx_ref[0, 0]) * sw_ref[...]
+        if epilogue:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          * sx_ref[0, 0]) * sw_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "compensated", "kh",
@@ -303,4 +334,27 @@ def conv_log_fused(x, w3, sx, sw, bits: int = 8, compensated: bool = True,
                           k_slice=k_slice),
         xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
         jnp.int32, jnp.float32, interpret)
+    return out[:b, :, :, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "compensated", "kh",
+                                             "kw", "stride", "block",
+                                             "interpret", "k_slice"))
+def conv_log_partial(x, w3, sx, sw, bits: int = 8, compensated: bool = True,
+                     kh: int = 3, kw: int = 3, stride: int = 1,
+                     block: tuple = (4, 16, 64), interpret: bool = True,
+                     k_slice: int = DEFAULT_K_SLICE):
+    """Shard-local log-family conv over a partial C extent: global
+    scales in, raw int32 (B, OH, OW, N) accumulator out; the dequant
+    epilogue is deferred past the caller's psum (DESIGN.md §11)."""
+    b, h, w_, _ = x.shape
+    n = w3.shape[-1]
+    oh, ow = out_hw(h, w_, kh, kw, stride)
+    xp, wp, swp, grid, block = _pad_operands(x, w3, sw, kh, kw, block)
+    out = _conv_call(
+        functools.partial(_log_kernel, geom=(kh, kw, oh, ow, stride),
+                          bits=bits, compensated=compensated,
+                          k_slice=k_slice, epilogue=False),
+        xp, wp, swp, sx, grid, block, kh, kw, oh, ow,
+        jnp.int32, jnp.int32, interpret)
     return out[:b, :, :, :n]

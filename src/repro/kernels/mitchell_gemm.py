@@ -113,7 +113,7 @@ def mitchell_matmul(xq: jnp.ndarray, wq: jnp.ndarray, bits: int = 8,
 
 
 def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, bits,
-                  compensated):
+                  compensated, epilogue: bool = True):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -127,8 +127,44 @@ def _fused_kernel(sx_ref, x_ref, w_ref, sw_ref, o_ref, acc_ref, *, bits,
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * sx_ref[0, 0]) * sw_ref[...]
+        if epilogue:
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          * sx_ref[0, 0]) * sw_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
+
+
+def _log_fused_call(x, w, sx, sw, bits, compensated, block, interpret,
+                    epilogue):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = block
+    pm, pk, pn = _pad2(m, k, n, block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
+    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
+                  constant_values=1.0)
+    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
+    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, compensated=compensated,
+                          epilogue=epilogue),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (m + pm, n + pn), jnp.float32 if epilogue else jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(sx2, xp, wp, swp)
+    return out[:m, :n]
 
 
 @functools.partial(jax.jit,
@@ -143,30 +179,21 @@ def mitchell_matmul_fused(x: jnp.ndarray, w: jnp.ndarray, sx: jnp.ndarray,
 
     Bit-identical integer core to quantize -> ``mitchell_matmul`` ->
     dequantize, executed in a single pallas_call (one HBM pass)."""
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2, (x.shape, w.shape)
-    bm, bk, bn = block
-    pm, pk, pn = _pad2(m, k, n, block)
-    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
-    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
-    # pad scales with 1.0: padded columns quantize 0/1 -> 0, epilogue * 1
-    swp = jnp.pad(sw.reshape(1, -1).astype(jnp.float32), ((0, 0), (0, pn)),
-                  constant_values=1.0)
-    sx2 = jnp.reshape(sx, (1, 1)).astype(jnp.float32)
-    gm, gk, gn = (m + pm) // bm, (k + pk) // bk, (n + pn) // bn
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, bits=bits, compensated=compensated),
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-    )(sx2, xp, wp, swp)
-    return out[:m, :n]
+    return _log_fused_call(x, w, sx, sw, bits, compensated, block,
+                           interpret, epilogue=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "compensated", "block",
+                                    "interpret"))
+def mitchell_matmul_partial(x: jnp.ndarray, w: jnp.ndarray, sx: jnp.ndarray,
+                            sw: jnp.ndarray, bits: int = 8,
+                            compensated: bool = True,
+                            block: tuple = (32, 32, 32),
+                            interpret: bool = True) -> jnp.ndarray:
+    """Shard-local log-domain GEMM over a partial K extent: quantizes
+    against the supplied *global* scales and returns the raw int32
+    accumulator; the ``(acc * sx) * sw`` epilogue is deferred past the
+    caller's psum over the model axis (DESIGN.md §11)."""
+    return _log_fused_call(x, w, sx, sw, bits, compensated, block,
+                           interpret, epilogue=False)

@@ -28,11 +28,15 @@ from repro.core.luts import nibble_sub_luts, signed_product_lut
 from repro.core.multipliers import MultiplierSpec
 from repro.core.quantization import quant_scale
 
-from .approx_matmul import (lut_matmul, lut_matmul_fused, nibble_lut_matmul,
-                            nibble_lut_matmul_fused)
+from .approx_matmul import (lut_matmul, lut_matmul_fused,
+                            lut_matmul_partial, nibble_lut_matmul,
+                            nibble_lut_matmul_fused,
+                            nibble_lut_matmul_partial)
 from .cim_gemm import cim_gemm, cim_gemm_core, cim_gemm_fused
-from .conv_gemm import conv_log_fused, conv_lut_fused, conv_mxu_fused
-from .mitchell_gemm import mitchell_matmul, mitchell_matmul_fused
+from .conv_gemm import (conv_log_fused, conv_log_partial, conv_lut_fused,
+                        conv_lut_partial, conv_mxu_fused)
+from .mitchell_gemm import (mitchell_matmul, mitchell_matmul_fused,
+                            mitchell_matmul_partial)
 
 
 def default_interpret() -> bool:
@@ -148,6 +152,90 @@ def log_matmul_fused(x, w, bits: int = 8, compensated: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Shard-local (deferred-epilogue) wrappers — the tensor-parallel entry
+# points the mesh dispatch path runs inside shard_map (DESIGN.md §11).
+# All take the *global* quantization scales explicitly (a shard only
+# sees a K/C- or N-slice, so locally computed scales would diverge from
+# the single-device oracle) and return the raw int32 accumulator.
+# ---------------------------------------------------------------------------
+
+
+def lut_partial_acc(x, w, spec: MultiplierSpec, sx, sw, block=None,
+                    interpret: Optional[bool] = None):
+    """Shard-local full-LUT GEMM: f32 in + global scales -> int32 acc."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_gather", spec.bits, m, k, n, block)
+    lut = _lut_for(spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    return lut_matmul_partial(x, w, lut, sx, sw, bits=spec.bits,
+                              block=block, interpret=interp)
+
+
+def nibble_partial_acc(x, w, spec: MultiplierSpec, sx, sw, block=None,
+                       interpret: Optional[bool] = None):
+    """Shard-local nibble GEMM: f32 in + global scales -> int32 acc."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_nibble", spec.bits, m, k, n, block)
+    subs = _subs_for(spec.family, spec.bits, spec.compressor,
+                     spec.n_approx_cols)
+    return nibble_lut_matmul_partial(x, w, subs, sx, sw, bits=spec.bits,
+                                     block=block, interpret=interp)
+
+
+def log_partial_acc(x, w, sx, sw, bits: int = 8, compensated: bool = True,
+                    block=None, interpret: Optional[bool] = None):
+    """Shard-local log-domain GEMM: f32 in + global scales -> int32 acc."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_log", bits, m, k, n, block)
+    return mitchell_matmul_partial(x, w, sx, sw, bits=bits,
+                                   compensated=compensated, block=block,
+                                   interpret=interp)
+
+
+# Explicit-scale fused forms for the *output-sharded* mesh layout: no
+# collective separates quantization from dequantization, so the
+# (acc*sx)*sw epilogue runs inside the kernel (one HBM pass — no int32
+# accumulator round trip), but the scales still come from the caller
+# (a shard only sees its N-slice; `sw` arrives pre-sliced by shard_map).
+
+
+def lut_fused_scaled(x, w, spec: MultiplierSpec, sx, sw, block=None,
+                     interpret: Optional[bool] = None):
+    """Fused full-LUT GEMM with caller-supplied global scales."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_gather", spec.bits, m, k, n, block)
+    lut = _lut_for(spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    return lut_matmul_fused(x, w, lut, sx, sw, bits=spec.bits, block=block,
+                            interpret=interp)
+
+
+def nibble_fused_scaled(x, w, spec: MultiplierSpec, sx, sw, block=None,
+                        interpret: Optional[bool] = None):
+    """Fused nibble GEMM with caller-supplied global scales."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_lut_nibble", spec.bits, m, k, n, block)
+    subs = _subs_for(spec.family, spec.bits, spec.compressor,
+                     spec.n_approx_cols)
+    return nibble_lut_matmul_fused(x, w, subs, sx, sw, bits=spec.bits,
+                                   block=block, interpret=interp)
+
+
+def log_fused_scaled(x, w, sx, sw, bits: int = 8, compensated: bool = True,
+                     block=None, interpret: Optional[bool] = None):
+    """Fused log-domain GEMM with caller-supplied global scales."""
+    interp = default_interpret() if interpret is None else interpret
+    (m, k), n = x.shape, w.shape[-1]
+    block = _resolve_block("pallas_log", bits, m, k, n, block)
+    return mitchell_matmul_fused(x, w, sx, sw, bits=bits,
+                                 compensated=compensated, block=block,
+                                 interpret=interp)
+
+
+# ---------------------------------------------------------------------------
 # Implicit-GEMM convolution wrappers (kernels/conv_gemm.py, DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
@@ -230,6 +318,75 @@ def conv2d_log_fused(x, w2, bits: int = 8, compensated: bool = True,
                           stride=stride, block=block, interpret=interp)
 
 
+def conv2d_lut_partial(x, w3, spec: MultiplierSpec, sx, sw, kh: int = 3,
+                       kw: int = 3, stride: int = 1, nibble: bool = False,
+                       block=None, interpret: Optional[bool] = None):
+    """Shard-local LUT/nibble conv over a partial C extent: f32
+    x (B,H,W,C_shard) + w3 (kh*kw, C_shard, N) + global scales ->
+    int32 (B,OH,OW,N) accumulator (DESIGN.md §11)."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w3.shape[-1]
+    kern = "pallas_conv_nibble" if nibble else "pallas_conv_lut"
+    block = _resolve_conv_block(kern, spec.bits, b, h, w_, c, n, kh, kw,
+                                stride, block)
+    table = (_subs_for if nibble else _lut_for)(
+        spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    return conv_lut_partial(x, w3, table, sx, sw, bits=spec.bits, kh=kh,
+                            kw=kw, stride=stride, block=block,
+                            interpret=interp, nibble=nibble)
+
+
+def conv2d_log_partial(x, w3, sx, sw, bits: int = 8,
+                       compensated: bool = True, kh: int = 3, kw: int = 3,
+                       stride: int = 1, block=None,
+                       interpret: Optional[bool] = None):
+    """Shard-local log-family conv over a partial C extent -> int32
+    accumulator (DESIGN.md §11)."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w3.shape[-1]
+    block = _resolve_conv_block("pallas_conv_log", bits, b, h, w_, c, n,
+                                kh, kw, stride, block)
+    return conv_log_partial(x, w3, sx, sw, bits=bits,
+                            compensated=compensated, kh=kh, kw=kw,
+                            stride=stride, block=block, interpret=interp)
+
+
+def conv2d_lut_fused_scaled(x, w3, spec: MultiplierSpec, sx, sw,
+                            kh: int = 3, kw: int = 3, stride: int = 1,
+                            nibble: bool = False, block=None,
+                            interpret: Optional[bool] = None):
+    """Fused LUT/nibble conv with caller-supplied global scales (the
+    output-sharded mesh layout: epilogue in-kernel, no collective)."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w3.shape[-1]
+    kern = "pallas_conv_nibble" if nibble else "pallas_conv_lut"
+    block = _resolve_conv_block(kern, spec.bits, b, h, w_, c, n, kh, kw,
+                                stride, block)
+    table = (_subs_for if nibble else _lut_for)(
+        spec.family, spec.bits, spec.compressor, spec.n_approx_cols)
+    return conv_lut_fused(x, w3, table, sx, sw, bits=spec.bits, kh=kh,
+                          kw=kw, stride=stride, block=block,
+                          interpret=interp, nibble=nibble)
+
+
+def conv2d_log_fused_scaled(x, w3, sx, sw, bits: int = 8,
+                            compensated: bool = True, kh: int = 3,
+                            kw: int = 3, stride: int = 1, block=None,
+                            interpret: Optional[bool] = None):
+    """Fused log-family conv with caller-supplied global scales."""
+    interp = default_interpret() if interpret is None else interpret
+    b, h, w_, c = x.shape
+    n = w3.shape[-1]
+    block = _resolve_conv_block("pallas_conv_log", bits, b, h, w_, c, n,
+                                kh, kw, stride, block)
+    return conv_log_fused(x, w3, sx, sw, bits=bits,
+                          compensated=compensated, kh=kh, kw=kw,
+                          stride=stride, block=block, interpret=interp)
+
+
 def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
                    block=None, interpret: Optional[bool] = None):
     """Fused production surrogate GEMM (int-in oracle surface)."""
@@ -254,7 +411,10 @@ def surrogate_gemm_fused(x, w, eps, mu, c0, c1, bits: int = 8,
 __all__ = ["approx_matmul_bit_exact", "approx_matmul_fused",
            "nibble_matmul_bit_exact", "nibble_matmul_fused",
            "log_matmul", "log_matmul_fused",
+           "lut_partial_acc", "nibble_partial_acc", "log_partial_acc",
+           "lut_fused_scaled", "nibble_fused_scaled", "log_fused_scaled",
            "conv2d_mxu_fused", "conv2d_lut_fused", "conv2d_nibble_fused",
-           "conv2d_log_fused",
+           "conv2d_log_fused", "conv2d_lut_partial", "conv2d_log_partial",
+           "conv2d_lut_fused_scaled", "conv2d_log_fused_scaled",
            "surrogate_gemm", "surrogate_gemm_fused",
            "cim_gemm_core", "default_interpret"]

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this produces, with NO device allocation (ShapeDtypeStruct
@@ -20,6 +17,15 @@ Usage:
   python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
 Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json.
 """
+
+import os
+
+# Force the 512-device host platform BEFORE jax initializes (appends to
+# any user XLA_FLAGS, never clobbers — repro.launch.hostdev is the
+# single home of that rule and imports no jax)
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(512)
 
 import argparse
 import json
@@ -45,17 +51,11 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 def _cache_shardings(cache_shape, mesh, model):
     """Resolve the model's logical cache specs against the mesh (batch on
-    data axes, KV-head/latent dims on model; divisibility fallback)."""
-    from jax.sharding import NamedSharding
-    from repro.models.transformer import cache_specs
-    from repro.parallel.sharding import logical_to_spec
+    data axes, KV-head/latent dims on model; divisibility fallback) —
+    the shared helper the serving engine's DP slot pool uses too."""
+    from repro.parallel.sharding import cache_shardings
 
-    specs = cache_specs(model.cfg)
-    return jax.tree_util.tree_map(
-        lambda sp, leaf: NamedSharding(
-            mesh, logical_to_spec(sp, leaf.shape, mesh)),
-        specs, cache_shape,
-        is_leaf=lambda x: x is None or isinstance(x, tuple))
+    return cache_shardings(cache_shape, mesh, model.cfg)
 
 
 def make_train_step(model: LM, opt_cfg: adamw.AdamWConfig):

@@ -1,0 +1,28 @@
+"""Force a multi-device host platform before jax initializes.
+
+The single home of the append-don't-clobber rule every device-forcing
+entry point (launch/dryrun.py, benchmarks/bench_shard.py, the
+tests/_hostmesh.py subprocess preamble) applies: the force flag is
+*appended* to any pre-existing XLA_FLAGS content, and skipped entirely
+when a device-count override is already present.
+
+Importing this module must never touch jax — every caller runs it
+ahead of the first jax import.
+"""
+
+from __future__ import annotations
+
+import os
+
+FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int, env=None):
+    """Apply the force flag to `env` (default: os.environ) and return
+    the mapping.  Must run before jax is imported in the target
+    process to have any effect."""
+    env = os.environ if env is None else env
+    if FLAG not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" {FLAG}={n}").strip()
+    return env

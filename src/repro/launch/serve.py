@@ -40,8 +40,19 @@ def main():
                     help="execution mode of the approximate tiers")
     ap.add_argument("--static", action="store_true",
                     help="lockstep (static-batching) admission baseline")
+    ap.add_argument("--mesh", type=int, default=0, metavar="MP",
+                    help="serve data-parallel + MP-way tensor-parallel "
+                         "over all visible devices (DESIGN.md §11; force "
+                         "host devices via XLA_FLAGS to try on CPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(model_parallel=args.mesh)
+        print(f"mesh: {dict(mesh.shape)}")
 
     cfg = get_config(args.arch, smoke=True)
     tiers = build_tiers(mode=args.mode)
@@ -51,7 +62,7 @@ def main():
         cfg, tiers=tiers, slots_per_tier=args.slots, max_len=args.max_len,
         prompt_buckets=pbkts,
         group_buckets=(1, 2, args.slots) if args.slots > 2 else (1, 2),
-        continuous=not args.static, seed=args.seed)
+        continuous=not args.static, seed=args.seed, mesh=mesh)
 
     t0 = time.perf_counter()
     n_exec = engine.warmup()

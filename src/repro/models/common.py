@@ -37,16 +37,27 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def wsc(x, spec: Tuple):
-    """with_sharding_constraint against the *ambient* mesh (no-op when
-    tracing without one, e.g. in single-device smoke tests).  `spec` is a
-    tuple of logical axis names resolved by parallel/sharding rules."""
+def _ambient_mesh():
+    """The mesh of an enclosing ``with mesh:`` block, or None.  The
+    single home of the thread_resources probe (used by both the GSPMD
+    constraint path `wsc` and the §11 mesh dispatch routing)."""
     try:
         from jax.interpreters.pxla import thread_resources
 
         mesh = thread_resources.env.physical_mesh
-        if mesh.empty:
-            return x
+        return None if mesh.empty else mesh
+    except Exception:
+        return None
+
+
+def wsc(x, spec: Tuple):
+    """with_sharding_constraint against the *ambient* mesh (no-op when
+    tracing without one, e.g. in single-device smoke tests).  `spec` is a
+    tuple of logical axis names resolved by parallel/sharding rules."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    try:
         from jax.sharding import NamedSharding
 
         from repro.parallel.sharding import logical_to_spec
@@ -245,6 +256,43 @@ OFF = CiMContext(CiMParams())
 _ = (NOISE_KIND, surrogate_noise)
 
 
+def _tp_mesh_args(x, wv, spec, p: CiMParams):
+    """Mesh-execution routing for one integer-mode cim_linear call
+    (DESIGN.md §11).  Resolves the weight's compute-time logical spec
+    (embed/FSDP axis dropped, exactly like `fsdp_gather`) against the
+    ambient mesh; when the result tensor-parallel-shards exactly one
+    weight dim, returns (mesh, x_spec, w_spec) for `model_matmul`'s
+    shard_map path — replacing the constraint-only GSPMD route for the
+    hardware modes.  Returns None (caller keeps the GSPMD path) for
+    replicated weights, non-integer modes, or no ambient mesh."""
+    from repro.core.approx_gemm import MESH_MODES
+
+    if p.mode not in MESH_MODES or spec is None:
+        return None
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import batch_axes, logical_to_spec
+
+    sp = list(spec)
+    if len(sp) == wv.ndim + 1 and sp[0] == "layers":
+        sp = sp[1:]                     # scanned-body slice
+    if len(sp) != wv.ndim:
+        return None
+    sp = tuple(None if s == "embed" else s for s in sp)
+    wspec = logical_to_spec(sp, wv.shape, mesh)
+    if (wspec[0] is not None) == (wspec[1] is not None):
+        return None                     # replicated: nothing to partition
+    m = 1
+    for s in x.shape[:-1]:
+        m *= int(s)
+    dp = batch_axes(mesh, m)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return mesh, P(dp_entry, wspec[0]), wspec
+
+
 def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
                bias: Optional[Param] = None):
     """y = approx(x @ w) per the CiM context; STE-quantized for training.
@@ -258,6 +306,12 @@ def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
     zero-retrace executable cache, so eager layer calls (serving,
     notebooks) are dict hits after the first touch; inside a jitted
     train step the cached jit inlines into the outer trace.
+
+    Under an ambient mesh, the integer modes (bit_exact/hardware) run
+    mesh-partitioned (DESIGN.md §11): the weight's logical spec picks
+    the tensor-parallel layout and the matmul executes one per-shard
+    Pallas kernel per device under shard_map, bit-identical to the
+    single-device path.  Other modes keep the GSPMD constraint route.
     """
     wv = fsdp_gather(w)
     assert wv.ndim == 2, "cim_linear expects 2-D weights (flatten heads)"
@@ -266,8 +320,14 @@ def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
         out = x @ wv
     else:
         key = ctx.child(name).key if name else ctx.key
-        out = model_matmul(x, wv, p.gemm_params(), key,
-                           apply=p.selects(name))
+        apply = p.selects(name)
+        margs = _tp_mesh_args(x, wv, w.spec, p) if apply else None
+        if margs is not None:
+            mesh, x_spec, w_spec = margs
+            out = model_matmul(x, wv, p.gemm_params(), key, apply=True,
+                               mesh=mesh, x_spec=x_spec, w_spec=w_spec)
+        else:
+            out = model_matmul(x, wv, p.gemm_params(), key, apply=apply)
     if bias is not None:
         out = out + bias.value
     return out

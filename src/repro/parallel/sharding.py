@@ -101,20 +101,46 @@ def param_shardings(model, params_shape, mesh: Mesh, rules=None):
                                   is_leaf=lambda x: isinstance(x, Param))
 
 
-def batch_sharding(mesh: Mesh, ndim: int, dim0: Optional[int] = None,
-                   rules=None) -> NamedSharding:
-    """Shard dim0 on the batch axes, replicate the rest.  If `dim0` is
-    given and does not divide the batch axes (e.g. long_500k's global
-    batch of 1), fall back to replication."""
+def batch_axes(mesh: Mesh, dim0: Optional[int] = None,
+               rules=None) -> Tuple[str, ...]:
+    """Mesh axes the batch (data-parallel) dim shards over; () when
+    `dim0` is given and does not divide their product (replication
+    fallback).  The single home of the rule both `batch_sharding` and
+    the mesh dispatch path (core/approx_gemm, DESIGN.md §11) apply."""
     rules = rules or DEFAULT_RULES
     axes = _axes_for("batch", mesh, rules)
     if dim0 is not None and axes:
         size = int(np.prod([mesh.shape[a] for a in axes]))
         if dim0 % size:
-            axes = ()
+            return ()
+    return axes
+
+
+def batch_sharding(mesh: Mesh, ndim: int, dim0: Optional[int] = None,
+                   rules=None) -> NamedSharding:
+    """Shard dim0 on the batch axes, replicate the rest.  If `dim0` is
+    given and does not divide the batch axes (e.g. long_500k's global
+    batch of 1), fall back to replication."""
+    axes = batch_axes(mesh, dim0, rules)
     spec = P(axes if len(axes) > 1 else (axes[0] if axes else None),
              *([None] * (ndim - 1)))
     return NamedSharding(mesh, spec)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, cfg, rules=None):
+    """NamedShardings for an LM KV-cache tree (scalar-pos decode caches
+    and per-slot pools alike): slot/batch dims on the data axes,
+    KV-head/state dims on the model axis, divisibility fallback.
+    Shared by the dry-run harness and the serving engine's
+    data-parallel slot pool (DESIGN.md §11)."""
+    from repro.models.transformer import cache_specs
+
+    specs = cache_specs(cfg)
+    return jax.tree_util.tree_map(
+        lambda sp, leaf: NamedSharding(
+            mesh, logical_to_spec(sp, leaf.shape, mesh, rules)),
+        specs, cache_tree,
+        is_leaf=lambda x: x is None or isinstance(x, tuple))
 
 
 def batch_shardings_for(tree, mesh: Mesh):

@@ -164,16 +164,28 @@ def servable_archs(smoke: bool = True) -> List[str]:
 
 class LMLaneBackend:
     """Slot-pool execution for one (LM, CiM tier): pre-jitted ragged
-    group prefill, cache scatter-insert, and full-pool decode."""
+    group prefill, cache scatter-insert, and full-pool decode.
+
+    With `mesh` (DESIGN.md §11) the pool is **data-parallel sharded**:
+    slots (the cache batch dim) spread over the mesh's data axes,
+    weights are placed tensor-parallel per `DECODE_RULES`, and every
+    executable is traced under the mesh so the integer-mode tiers route
+    their matmuls through the shard_map dispatch path
+    (models/common.cim_linear -> core/approx_gemm.MeshPlan).  The
+    scheduler above is device-count agnostic by construction — it only
+    ever sees slot indices — so nothing else changes.
+    """
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  prompt_buckets: Sequence[int] = (16, 32),
-                 group_buckets: Sequence[int] = (1, 2, 4)):
+                 group_buckets: Sequence[int] = (1, 2, 4),
+                 mesh=None):
         import jax
         import jax.numpy as jnp
 
         check_engine_arch(lm.cfg)
         self.lm, self.params = lm, params
+        self.mesh = mesh
         self.n_slots, self.max_len = int(n_slots), int(max_len)
         self.prompt_buckets = tuple(sorted(set(int(p) for p in
                                                prompt_buckets)))
@@ -183,6 +195,24 @@ class LMLaneBackend:
             raise ValueError("prompt bucket exceeds max_len")
         self.caches = lm.init_caches(self.n_slots, self.max_len,
                                      per_slot=True)
+        self._tok_shard = self._pos_shard = None
+        if mesh is not None:
+            from repro.parallel.sharding import (DECODE_RULES,
+                                                 batch_sharding,
+                                                 cache_shardings,
+                                                 param_shardings)
+
+            # weights TP-sharded per DECODE_RULES (no ZeRO-3 at serve
+            # time), slots on the data axes; placing params is idempotent
+            # across the lanes sharing them
+            self.params = jax.device_put(
+                params, param_shardings(lm, params, mesh,
+                                        rules=DECODE_RULES))
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(self.caches, mesh, lm.cfg,
+                                             rules=DECODE_RULES))
+            self._tok_shard = batch_sharding(mesh, 2, self.n_slots)
+            self._pos_shard = batch_sharding(mesh, 1, self.n_slots)
         self.slot_tokens = np.zeros(self.n_slots, np.int64)
         self.slot_pos = np.zeros(self.n_slots, np.int64)
         self.last_prefill_logits: Optional[np.ndarray] = None
@@ -222,6 +252,16 @@ class LMLaneBackend:
         self._insert = jax.jit(_insert, donate_argnums=(0,))
         self._jnp = jnp
 
+    def _ctx(self):
+        """Ambient-mesh context for every trace/execute: inside it,
+        cim_linear sees the mesh and routes integer-mode matmuls
+        through the shard_map dispatch path (DESIGN.md §11)."""
+        if self.mesh is not None:
+            return self.mesh
+        from contextlib import nullcontext
+
+        return nullcontext()
+
     # -- shape vocabulary --------------------------------------------------
     def prompt_bucket(self, plen: int) -> int:
         return _bucket_up(plen, self.prompt_buckets, "prompt length")
@@ -254,10 +294,11 @@ class LMLaneBackend:
             toks[i, :len(pr)] = pr
             lens[i] = len(pr)
             slot_idx[i] = sl
-        logits, grp = self._prefill(self.params, jnp.asarray(toks),
-                                    jnp.asarray(lens))
-        self.caches = self._insert(self.caches, grp,
-                                   jnp.asarray(slot_idx))
+        with self._ctx():
+            logits, grp = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens))
+            self.caches = self._insert(self.caches, grp,
+                                       jnp.asarray(slot_idx))
         first, lg = self._greedy(logits)
         self.last_prefill_logits = lg[:g]
         for i, sl in enumerate(slots):
@@ -269,10 +310,16 @@ class LMLaneBackend:
         """One greedy decode step for the whole pool (idle slots ride
         along masked by their own fill level; their output is ignored)."""
         jnp = self._jnp
-        logits, self.caches = self._decode(
-            self.params, self.caches,
-            jnp.asarray(self.slot_tokens[:, None], jnp.int32),
-            jnp.asarray(self.slot_pos, jnp.int32))
+        tok = jnp.asarray(self.slot_tokens[:, None], jnp.int32)
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        if self.mesh is not None:
+            import jax
+
+            tok = jax.device_put(tok, self._tok_shard)
+            pos = jax.device_put(pos, self._pos_shard)
+        with self._ctx():
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               tok, pos)
         nxt, lg = self._greedy(logits)
         self.slot_tokens = nxt.astype(np.int64)
         self.slot_pos += 1
@@ -286,20 +333,19 @@ class LMLaneBackend:
         fully overwritten on first real admission)."""
         jnp = self._jnp
         n = 0
-        for p_bkt in self.prompt_buckets:
-            for g_bkt in self.group_buckets:
-                toks = jnp.zeros((g_bkt, p_bkt), jnp.int32)
-                lens = jnp.full((g_bkt,), p_bkt, jnp.int32)
-                logits, grp = self._prefill(self.params, toks, lens)
-                sent = jnp.full((g_bkt,), self.n_slots, jnp.int32)
-                self.caches = self._insert(self.caches, grp, sent)
-                self._greedy(logits)       # compiles the sampling slice
-                n += 1
-        logits, self.caches = self._decode(
-            self.params, self.caches,
-            jnp.zeros((self.n_slots, 1), jnp.int32),
-            jnp.zeros((self.n_slots,), jnp.int32))
-        self._greedy(logits)
+        with self._ctx():
+            for p_bkt in self.prompt_buckets:
+                for g_bkt in self.group_buckets:
+                    toks = jnp.zeros((g_bkt, p_bkt), jnp.int32)
+                    lens = jnp.full((g_bkt,), p_bkt, jnp.int32)
+                    logits, grp = self._prefill(self.params, toks, lens)
+                    sent = jnp.full((g_bkt,), self.n_slots, jnp.int32)
+                    self.caches = self._insert(self.caches, grp, sent)
+                    self._greedy(logits)   # compiles the sampling slice
+                    n += 1
+        self.decode_round()                # pool decode (+ sampling slice)
+        self.slot_tokens[:] = 0            # zero-position warm decode
+        self.slot_pos[:] = 0               # leaves no live state behind
         return n + 1
 
 
@@ -560,13 +606,17 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
                  continuous: bool = True,
                  token_budget: Optional[int] = None,
                  record_logits: bool = False,
-                 seed: int = 0) -> ServingEngine:
+                 seed: int = 0, mesh=None) -> ServingEngine:
     """One lane per accuracy tier over shared weights.
 
     `cfg` is a ModelConfig (its own `cim` field is ignored — each lane
     replaces it with its tier's CiMConfig); `params` defaults to a
     fresh init (weights are tier-independent, so every lane shares
     them).  `tiers` defaults to the DSE ladder (serving/tiers.py).
+
+    With `mesh` every lane's slot pool is data-parallel sharded and the
+    shared weights are placed TP-sharded once per `DECODE_RULES`
+    (DESIGN.md §11); the scheduler is unchanged.
     """
     import dataclasses as dc
 
@@ -581,12 +631,21 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
         tiers = build_tiers()
     if params is None:
         params = LM(cfg).init(jax.random.PRNGKey(seed))
+    if mesh is not None:
+        from repro.parallel.sharding import DECODE_RULES, param_shardings
+
+        # place the SHARED weights once; per-lane device_puts are then
+        # no-ops onto the same buffers
+        params = jax.device_put(
+            params, param_shardings(LM(cfg), params, mesh,
+                                    rules=DECODE_RULES))
     lanes = {}
     for tier in tiers:
         lm = LM(dc.replace(cfg, cim=tier.cim))
         lanes[tier.name] = LMLaneBackend(
             lm, params, n_slots=slots_per_tier, max_len=max_len,
-            prompt_buckets=prompt_buckets, group_buckets=group_buckets)
+            prompt_buckets=prompt_buckets, group_buckets=group_buckets,
+            mesh=mesh)
     return ServingEngine(lanes, TierRouter(tiers), continuous=continuous,
                          token_budget=token_budget,
                          record_logits=record_logits)

@@ -1,0 +1,40 @@
+"""Shared plumbing for subprocess tests that force a multi-device host
+platform (jax fixes its device view at import, so each test runs its
+mesh code in a fresh interpreter).
+
+`PREAMBLE` applies `repro.launch.hostdev.force_host_devices` — the
+shared append-don't-clobber XLA_FLAGS rule (launch/dryrun.py and
+benchmarks/bench_shard.py use the same helper).  `run_host_mesh`
+executes a code string under the preamble and returns the parsed JSON
+object the script printed last.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PREAMBLE = textwrap.dedent("""\
+    import sys
+    sys.path.insert(0, {repo!r} + "/src")
+    from repro.launch.hostdev import force_host_devices
+    force_host_devices({n_devices})
+""")
+
+
+def run_host_mesh(code: str, n_devices: int = 8, timeout: int = 560):
+    """Run `code` in a subprocess on a forced n-device host platform.
+
+    The script must print a JSON object as its last stdout line; it is
+    parsed and returned.  Assertion failures inside the child surface
+    as the child's stderr tail.
+    """
+    full = (PREAMBLE.format(repo=REPO, n_devices=n_devices)
+            + textwrap.dedent(code))
+    out = subprocess.run([sys.executable, "-c", full],
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])

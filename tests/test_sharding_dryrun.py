@@ -1,21 +1,15 @@
 """Distribution-layer tests: logical rules, uneven-dim fallback, and a
 scaled-down dry-run (8 host devices, subprocess so the main test process
-keeps its single-device view)."""
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
+keeps its single-device view — via the shared _hostmesh helper, which
+also preserves any pre-existing XLA_FLAGS content)."""
 
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import logical_to_spec
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _hostmesh import run_host_mesh
+from repro.parallel.sharding import batch_sharding, logical_to_spec
 
 
 class _FakeMesh:
@@ -43,12 +37,59 @@ def test_uneven_dims_fall_back_to_replication():
     assert logical_to_spec(("vocab", None), (3, 8), mesh) == P(None, None)
 
 
-_SUBPROC = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json, sys
+def test_axis_reuse_dedup():
+    """A mesh axis may carry at most ONE dim of a tensor (the `used`
+    set): the second logical name wanting an already-taken axis
+    replicates instead of double-sharding."""
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    # embed takes "data" first; batch = ("pod","data") -> data already
+    # used -> the batch dim replicates
+    assert logical_to_spec(("embed", "batch"), (64, 32), mesh) == \
+        P("data", None)
+    # two model-axis names on one tensor: first wins, second replicates
+    assert logical_to_spec(("ff", "vocab"), (64, 64), mesh) == \
+        P("model", None)
+    mesh3 = _FakeMesh({"pod": 2, "data": 4, "model": 4})
+    # batch grabs pod+data; a later embed dim finds data used
+    assert logical_to_spec(("batch", "embed"), (32, 64), mesh3) == \
+        P(("pod", "data"), None)
+
+
+def test_axis_reuse_partial_composite():
+    """When part of a composite axis group is taken, only the free
+    axes remain — and the dim must divide THEIR product."""
+    mesh3 = _FakeMesh({"pod": 2, "data": 4, "model": 4})
+    # embed holds "data"; batch falls back to ("pod",): 32 % 2 == 0
+    assert logical_to_spec(("embed", "batch"), (64, 32), mesh3) == \
+        P("data", "pod")
+    # ...but an odd batch dim can't ride the leftover pod axis
+    assert logical_to_spec(("embed", "batch"), (64, 31), mesh3) == \
+        P("data", None)
+
+
+def test_non_divisible_dim_replicates_not_errors():
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    # 66 % 4 != 0 on every axis -> both dims replicate, no raise
+    assert logical_to_spec(("embed", "ff"), (66, 67), mesh) == P(None, None)
+
+
+def test_batch_sharding_non_divisible_dim0():
+    """batch_sharding with dim0 not divisible by the batch axes falls
+    back to full replication (long_500k's global batch of 1)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert batch_sharding(mesh, 2, dim0=8).spec == P("data", None)
+    # dim0=3 on a 1-wide data axis still divides; force non-divisible
+    # via a fake 4-wide mesh through the spec-only path
+    fake = _FakeMesh({"data": 4, "model": 2})
+    from repro.parallel.sharding import batch_axes
+    assert batch_axes(fake, 6) == ()          # 6 % 4 != 0 -> replicate
+    assert batch_axes(fake, 8) == ("data",)
+    assert batch_axes(fake, None) == ("data",)
+
+
+_SUBPROC = """
+    import json
     import jax, jax.numpy as jnp
-    sys.path.insert(0, {repo!r} + "/src")
     from repro.configs import get_config, input_specs
     from repro.models.config import ShapeConfig
     from repro.models.transformer import LM
@@ -76,17 +117,13 @@ _SUBPROC = textwrap.dedent("""
         "temp": ma.temp_size_in_bytes,
         "has_collectives": ("all-reduce" in txt or "all-gather" in txt),
     }}))
-""")
+"""
 
 
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-v2-lite-16b",
                                   "recurrentgemma-9b"])
 def test_sharded_grad_compiles_on_8_devices(arch):
-    code = _SUBPROC.format(repo=REPO, arch=arch)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=560)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    res = run_host_mesh(_SUBPROC.format(arch=arch))
     assert res["ok"] and res["has_collectives"]
 
 
@@ -113,12 +150,9 @@ def test_hlo_analysis_counts_loop_bodies():
     assert xla < 0.5 * want
 
 
-_ELASTIC = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json, sys
+_ELASTIC = """
+    import json
     import jax, jax.numpy as jnp
-    sys.path.insert(0, {repo!r} + "/src")
     from repro.configs import get_config
     from repro.data.pipeline import TokenStream
     from repro.models.transformer import LM
@@ -145,15 +179,11 @@ _ELASTIC = textwrap.dedent("""
     l = jax.tree_util.tree_leaves(params)[0]
     print(json.dumps({{"ok": True, "resumed_step": step,
                        "n_shards": len(l.sharding.device_set)}}))
-""")
+"""
 
 
 def test_elastic_resume_across_mesh_sizes(tmp_path):
     """Checkpoint on a 4x2 mesh, restore on 2x2 (elastic downsize)."""
-    code = _ELASTIC.format(repo=REPO, ckpt=str(tmp_path / "elastic"))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=560)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    res = run_host_mesh(_ELASTIC.format(ckpt=str(tmp_path / "elastic")))
     assert res["ok"] and res["resumed_step"] == 4
     assert res["n_shards"] == 4          # placed on the NEW (smaller) mesh
