@@ -762,6 +762,15 @@ class GemmParams:
     c1: float = 0.0                    # variance slope on p^2
     compressor: str = "yang1"
     n_approx_cols: Optional[int] = None
+    # per-row (per-token) activation scales instead of the macro's
+    # per-tensor scale: each activation row quantizes against its own
+    # max, so a row's result is a pure function of that row — the
+    # M-invariance the speculative-decoding verify pass needs (a
+    # (B, K) batched verify must agree bitwise with K sequential
+    # single-token steps).  Integer/fake-quant XLA paths only: the
+    # fused Pallas runners and the mesh shard_map route carry the
+    # scalar per-tensor scale in SMEM and are gated off.
+    per_token: bool = False
 
     @property
     def spec(self) -> MultiplierSpec:
@@ -1137,8 +1146,11 @@ def surrogate_noise(key, shape, dtype, kind: str = NOISE_KIND):
 # ---------------------------------------------------------------------------
 
 
-def _quantize_operands(x, w, bits):
-    sx = quant_scale(x, bits)                      # per-tensor (activations)
+def _quantize_operands(x, w, bits, per_token: bool = False):
+    # activations: per-tensor scale (the macro's ADC view) by default,
+    # or per-row when the caller needs batch-size-invariant numerics
+    # (GemmParams.per_token); weights are always per-out-channel
+    sx = quant_scale(x, bits, axis=-1 if per_token else None)
     sw = quant_scale(w, bits, axis=0)              # per-out-channel (weights)
     xq = quantize(x, sx, bits)
     wq = quantize(w, sw, bits)
@@ -1268,12 +1280,16 @@ def _cim_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     if mode == "exact":
         def forward(xf, wf):
             _mark_trace()
-            xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
+            xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits,
+                                                gp.per_token)
             return dequantize(xq, sx) @ dequantize(wq, sw)
         return forward, False
 
     if mode in ("bit_exact", "hardware"):
-        if fused and plan.entry.name in FUSED_RUNNERS:
+        # the fused runners carry the per-tensor sx as an SMEM scalar;
+        # per-token (per-row) scales must take the unfused path where
+        # the (M, 1) scale applies in the XLA epilogue
+        if fused and not gp.per_token and plan.entry.name in FUSED_RUNNERS:
             runner = FUSED_RUNNERS[plan.entry.name]
 
             def forward(xf, wf):
@@ -1283,7 +1299,8 @@ def _cim_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
         else:
             def forward(xf, wf):
                 _mark_trace()
-                xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits)
+                xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits,
+                                                    gp.per_token)
                 acc = run_int_kernel(plan, xq, wq, gp)
                 return (acc.astype(jnp.float32) * sx) * sw
         return forward, False
@@ -1324,7 +1341,7 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     kernel-backed rank-2 paths or ("plain", fn, needs_key) for the
     fake-quant XLA paths (gradients flow through the quantizer)."""
     if apply and gp.mode in ("bit_exact", "hardware"):
-        if fused and plan.entry.name in FUSED_RUNNERS:
+        if fused and not gp.per_token and plan.entry.name in FUSED_RUNNERS:
             runner = FUSED_RUNNERS[plan.entry.name]
 
             def forward(x2, wf):
@@ -1336,7 +1353,8 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
             def forward(x2, wf):
                 _mark_trace()
                 xq, sx, wq, sw = _quantize_operands(
-                    x2.astype(jnp.float32), wf.astype(jnp.float32), gp.bits)
+                    x2.astype(jnp.float32), wf.astype(jnp.float32),
+                    gp.bits, gp.per_token)
                 acc = run_int_kernel(plan, xq, wq, gp)
                 out = (acc.astype(jnp.float32) * sx) * sw
                 return out.astype(x2.dtype)
@@ -1361,7 +1379,7 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     # (54 GB/instance at 671B, EXPERIMENTS.md §Perf).
     def fn(x, w, key=None):
         _mark_trace()
-        xq = fake_quant(x, gp.bits)
+        xq = fake_quant(x, gp.bits, axis=-1 if gp.per_token else None)
         wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
         d = xq @ wq
         if not apply or gp.mode == "exact":
@@ -1737,6 +1755,10 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     for s in lead:
         m *= int(s)
     if mesh is not None:
+        if gp.per_token:
+            raise ValueError(
+                "per-token activation scales are not supported on the "
+                "mesh shard_map path; drop the mesh or per_token")
         # exact-shape validation on EVERY call: the front cache keys on
         # bucketed shapes, and a warm entry must never serve a shape
         # the planner would reject (divisibility is not bucket-stable)
@@ -1915,6 +1937,11 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     n = w.shape[-1]
     if mesh is not None and not apply:
         mesh, x_spec, w_spec = None, None, None     # exact macro: GSPMD
+    if mesh is not None and gp.per_token:
+        raise ValueError(
+            "per-token activation scales are not supported on the mesh "
+            "shard_map path (global per-tensor scales are computed "
+            "outside the shard); drop the mesh or per_token")
     if mesh is not None:
         # divisibility is not bucket-stable: validate the raw shape
         # before the bucketed front cache can answer

@@ -42,6 +42,12 @@ class CiMConfig:
     # these prefixes ("mlp", "moe", "shared", "wq", ...); everything else
     # runs the exact int8 macro. () = everywhere (the paper's setting).
     apply_to: tuple = ()
+    # per-row (per-token) activation scales: each activation row
+    # quantizes against its own max instead of the whole tensor's, so
+    # row results are invariant to batching — required by the
+    # speculative-decoding verify lane (DESIGN.md §12).  Integer and
+    # fake-quant XLA paths only (fused kernels / mesh are gated off).
+    per_token: bool = False
     sram: sram_model.SRAMConfig = dataclasses.field(
         default_factory=sram_model.SRAMConfig)
     run_yield: bool = False

@@ -44,8 +44,27 @@ def main():
                     help="serve data-parallel + MP-way tensor-parallel "
                          "over all visible devices (DESIGN.md §11; force "
                          "host devices via XLA_FLAGS to try on CPU)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding on the exact lane "
+                         "(DESIGN.md §12): draft K tokens per round on "
+                         "the cheapest approximate tier, verify all of "
+                         "them in one batched exact pass — output is "
+                         "token-for-token unchanged, only faster; 0=off")
+    ap.add_argument("--spec-drafter", default=None, metavar="TIER",
+                    help="drafter tier name for --spec-decode (default: "
+                         "the cheapest-energy approximate rung)")
+    ap.add_argument("--spec-rounds", type=int, default=4, metavar="R",
+                    help="draft+verify rounds fused into one dispatch "
+                         "(amortizes per-call overhead; admission waits "
+                         "up to R-1 rounds for a free slot)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.spec_decode and args.mesh:
+        ap.error("--spec-decode does not compose with --mesh: the "
+                 "verifier's per-token activation scales are row-local, "
+                 "which the shard_map global-scale path cannot express "
+                 "(DESIGN.md §12)")
 
     mesh = None
     if args.mesh:
@@ -62,7 +81,9 @@ def main():
         cfg, tiers=tiers, slots_per_tier=args.slots, max_len=args.max_len,
         prompt_buckets=pbkts,
         group_buckets=(1, 2, args.slots) if args.slots > 2 else (1, 2),
-        continuous=not args.static, seed=args.seed, mesh=mesh)
+        continuous=not args.static, seed=args.seed, mesh=mesh,
+        spec_decode=args.spec_decode or None,
+        spec_drafter=args.spec_drafter, spec_rounds=args.spec_rounds)
 
     t0 = time.perf_counter()
     n_exec = engine.warmup()
@@ -92,6 +113,12 @@ def main():
     print(f"  tokens by tier: {per_tier}; peak concurrency "
           f"{engine.peak_running}; steady-state retraces "
           f"{engine.steady_retraces()}")
+    if args.spec_decode:
+        sb = engine.lanes["exact"].backend
+        print(f"  spec-decode k={sb.draft_k} "
+              f"(drafter {sb.drafter_lm.cfg.cim.family}): acceptance "
+              f"{sb.acceptance_rate:.2f}, {sb.tokens_per_round:.2f} "
+              f"tokens/round over {sb.n_rounds} rounds")
     assert engine.steady_retraces() == 0, "serving retraced after warmup"
 
 

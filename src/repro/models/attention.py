@@ -201,7 +201,8 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
                     causal: bool = True, window: Optional[int] = None,
                     q_chunk: int = 1024, kv_chunk: int = 1024,
                     positions=None, cache: Optional[dict] = None,
-                    x_kv=None, is_cross: bool = False, valid=None):
+                    x_kv=None, is_cross: bool = False, valid=None,
+                    append: bool = False):
     """Full attention sub-block (projections + SDPA [+ cache update]).
 
     Training/prefill: cache=None -> returns (y, new_cache_or_None);
@@ -215,6 +216,13 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
     (B,) vector — the slot-pool contract the serving engine relies on).
     Decode accepts either a scalar ``pos`` (lockstep batch) or a (B,)
     vector (continuous batching: every slot at its own position).
+
+    append=True is the multi-token decode path (speculative-decoding
+    verify, DESIGN.md §12): x is (B, K, D) with K tokens per sequence
+    continuing from the cache fill level — K keys/values scatter in at
+    pos..pos+K-1 and query i attends causally through position pos+i,
+    exactly the KV view K sequential single-token steps would build.
+    Dense causal attention only (no window ring, no cross stream).
     """
     b, s, d = x.shape
     if positions is None:
@@ -245,11 +253,66 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
     # cache it inserted a full cache reshard EVERY decode step
     # (69 GB/token at llama-11B 32k, EXPERIMENTS.md §Perf)
     kh_d = n_kv_heads * head_dim
+    if append:
+        # multi-token decode append (speculative verify).  Keys/values
+        # for all K tokens scatter in at pos..pos+K-1; the per-query
+        # causal mask `tpos <= pos + i` gives query i exactly the KV
+        # window sequential decoding would have seen (later in-flight
+        # keys are written but masked — a softmax weight of exactly 0).
+        if is_cross or window is not None or not causal:
+            raise NotImplementedError(
+                "append (multi-token) decode supports dense causal "
+                "self-attention only")
+        pos = cache["pos"]
+        t = cache["k"].shape[1]
+        per_slot = getattr(pos, "ndim", 0) > 0
+        kf = k.reshape(b, s, kh_d).astype(cache["k"].dtype)
+        vf = v.reshape(b, s, kh_d).astype(cache["v"].dtype)
+        tpos = jnp.arange(t)
+        off = jnp.arange(s)
+        if per_slot:
+            slot = pos[:, None] + off[None, :]            # (B, K)
+            # past-max_len slots (a slot whose budget ends mid-draft)
+            # are dropped by the scatter, never clamped onto live rows
+            ck = cache["k"].at[jnp.arange(b)[:, None], slot].set(
+                kf, mode="drop")
+            cv = cache["v"].at[jnp.arange(b)[:, None], slot].set(
+                vf, mode="drop")
+            kv_ok = tpos[None, None, :] <= slot[:, :, None]   # (B, K, t)
+            vmask = kv_ok[:, None, None, :, :]
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], kf, (0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vf, (0, pos, 0))
+            qpos = pos + off
+            kv_ok = tpos[None, :] <= qpos[:, None]            # (K, t)
+            vmask = kv_ok[None, None, None, :, :]
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        kh = n_kv_heads
+        g = n_heads // kh
+        ck4 = ck.reshape(b, t, kh, head_dim)
+        cv4 = cv.reshape(b, t, kh, head_dim)
+        qg = q.reshape(b, s, kh, g, head_dim).astype(ck.dtype)
+        s_ = jnp.einsum("bqkgd,btkd->bkgqt", qg, ck4
+                        ).astype(jnp.float32) / (head_dim ** 0.5)
+        s_ = jnp.where(vmask, s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1).astype(cv.dtype)
+        o = jnp.einsum("bkgqt,btkd->bkgqd", p, cv4)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, s, n_heads, head_dim)
+        return _out_proj(params, o.astype(x.dtype), ctx), new_cache
+
     if s > 1:  # prefill into a pre-allocated cache
         t = cache["k"].shape[1]
         skv = k.shape[1]
         kf = k.reshape(b, skv, kh_d)
         vf = v.reshape(b, skv, kh_d)
+        if valid is not None:
+            # zero the pad rows: entries at/past each row's fill level
+            # stay zero, so a rolled-back cache (serving/spec.py) is
+            # byte-identical to one that never drafted.  Attention never
+            # reads them (kv_valid / fill-level masks), so logits are
+            # unchanged.
+            kf = jnp.where(valid[:, :, None], kf, 0)
+            vf = jnp.where(valid[:, :, None], vf, 0)
         if skv <= t:
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], kf.astype(cache["k"].dtype), (0, 0, 0))

@@ -202,6 +202,7 @@ class CiMParams:
     compressor: str = "yang1"
     n_approx_cols: Optional[int] = None
     apply_to: tuple = ()         # name prefixes; () = every matmul
+    per_token: bool = False      # per-row activation scales (DESIGN.md §12)
 
     @classmethod
     def from_config(cls, cim: Optional[CiMConfig]) -> "CiMParams":
@@ -213,13 +214,15 @@ class CiMParams:
                    mu=s.mu_rel, c0=s.c0_abs, c1=s.c1_rel,
                    compressor=cim.compressor,
                    n_approx_cols=cim.n_approx_cols,
-                   apply_to=tuple(getattr(cim, "apply_to", ())))
+                   apply_to=tuple(getattr(cim, "apply_to", ())),
+                   per_token=bool(getattr(cim, "per_token", False)))
 
     def gemm_params(self) -> GemmParams:
         return GemmParams(family=self.family, bits=self.bits,
                           mode=self.mode, mu=self.mu, c0=self.c0,
                           c1=self.c1, compressor=self.compressor,
-                          n_approx_cols=self.n_approx_cols)
+                          n_approx_cols=self.n_approx_cols,
+                          per_token=self.per_token)
 
     def selects(self, name: str) -> bool:
         """Mixed-macro allocation (beyond-paper DSE extension): does the
@@ -269,6 +272,8 @@ def _tp_mesh_args(x, wv, spec, p: CiMParams):
 
     if p.mode not in MESH_MODES or spec is None:
         return None
+    if p.per_token:
+        return None      # mesh shards quantize against global scales
     mesh = _ambient_mesh()
     if mesh is None:
         return None
@@ -341,7 +346,7 @@ def cim_einsum(eqn: str, x, w: Param, ctx: CiMContext, name: str = ""):
     p = ctx.p
     if p.mode == "off":
         return jnp.einsum(eqn, x, wv)
-    xq = fake_quant(x, p.bits)
+    xq = fake_quant(x, p.bits, axis=-1 if p.per_token else None)
     wq = fake_quant(wv, p.bits).astype(x.dtype)
     d = jnp.einsum(eqn, xq, wq)
     if not p.selects(name):

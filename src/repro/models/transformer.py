@@ -107,10 +107,12 @@ def _init_layer(key, kind: str, cfg: ModelConfig):
 
 
 def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
-                 positions, cache, x_aux, valid=None):
+                 positions, cache, x_aux, valid=None, append=False):
     """Returns (x, new_cache, aux_loss).  `valid` is the optional (B, S)
     ragged-batch mask (pad tokens excluded from self-attention KV; see
-    attention_block) — only the self-attention kinds consume it."""
+    attention_block) — only the self-attention kinds consume it.
+    `append` routes the multi-token decode path (speculative verify):
+    dense causal self-attention layers only."""
     aux = jnp.float32(0.0)
     h = apply_norm(params["norm1"], x, cfg.norm)
     new_cache = cache
@@ -119,6 +121,11 @@ def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
                    rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm, ctx=ctx,
                    q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
                    positions=positions)
+    if append and (kind not in (C.ATTN, ATTN_MOE) or cfg.mla is not None):
+        raise ValueError(
+            "multi-token (append) decode needs dense full-attention "
+            f"layers with explicit positions; kind {kind!r} does not "
+            "qualify")
     if kind in (C.ATTN, ATTN_MOE, C.LOCAL, C.ENC_ATTN):
         if cfg.mla is not None and kind in (C.ATTN, ATTN_MOE):
             a, new_cache = mla_block(params["attn"], h, n_heads=cfg.n_heads,
@@ -131,7 +138,7 @@ def _apply_layer(params, x, kind: str, cfg: ModelConfig, ctx: CiMContext,
                 params["attn"], h,
                 causal=(kind != C.ENC_ATTN),
                 window=cfg.window if kind == C.LOCAL else None,
-                cache=cache, valid=valid, **attn_kw)
+                cache=cache, valid=valid, append=append, **attn_kw)
         x = x + a
     elif kind == C.CROSS:
         a, new_cache = attention_block(params["attn"], h, causal=False,
@@ -385,7 +392,7 @@ class LM:
         return None
 
     def _run_stack(self, params, x, positions, caches, key, x_aux,
-                   valid=None):
+                   valid=None, append=False):
         """Prefix (unrolled) + body (scanned).  caches: None for training,
         else {"prefix": [...], "body": stacked-pytree}."""
         cfg = self.cfg
@@ -396,7 +403,7 @@ class LM:
                              None if key is None else jax.random.fold_in(key, i))
             c = None if caches is None else caches["prefix"][i]
             x, c2, aux = _apply_layer(params["prefix"][i], x, kind, cfg, ctx,
-                                      positions, c, x_aux, valid)
+                                      positions, c, x_aux, valid, append)
             new_prefix.append(c2)
             aux_total += aux
         new_body = None
@@ -416,7 +423,8 @@ class LM:
                         None if key is None else jax.random.fold_in(k, i))
                     ci = None if cache_in is None else cache_in[str(i)]
                     h, c2, aux = _apply_layer(lp[str(i)], h, kind, cfg, ctx,
-                                              positions, ci, x_aux, valid)
+                                              positions, ci, x_aux, valid,
+                                              append)
                     if cache_in is not None:
                         cache_out = dict(cache_out)
                         cache_out[str(i)] = c2
@@ -542,6 +550,28 @@ class LM:
         x = self._embed_decode(params, tokens, positions)
         x, caches, _ = self._run_stack(params, x, positions, caches, key,
                                        None)
+        return self._logits(params, x), caches
+
+    def decode_multi(self, params, caches, tokens, pos, key=None):
+        """Score K continuation tokens per sequence in ONE forward pass
+        (the speculative-decoding verify lane, DESIGN.md §12).
+
+        tokens: (B, K); pos: scalar int32 or (B,) int32 — the cache
+        fill level, i.e. the absolute position of tokens[:, 0].
+        Returns (logits (B, K, V), caches advanced by K).  logits[:, i]
+        is the next-token distribution after tokens[:, :i+1], exactly
+        what K sequential `decode_step` calls would produce — and with
+        a per-token-quantized integer CiM mode, *bitwise* exactly
+        (tests/test_spec_decode.py holds this to array equality).
+        """
+        b, kk = tokens.shape
+        pos = jnp.asarray(pos, jnp.int32)
+        off = jnp.arange(kk, dtype=jnp.int32)
+        positions = (pos[:, None] + off[None, :] if pos.ndim
+                     else jnp.broadcast_to(pos + off, (b, kk)))
+        x = self._embed_decode(params, tokens, positions)
+        x, caches, _ = self._run_stack(params, x, positions, caches, key,
+                                       None, append=True)
         return self._logits(params, x), caches
 
     def _embed_decode(self, params, tokens, positions):

@@ -4,5 +4,6 @@
 from .engine import (EngineStats, LMLaneBackend, Request, RequestResult,
                      ServingEngine, build_engine,
                      servable_archs)  # noqa: F401
-from .tiers import AccuracyTier, TierRouter, build_tiers  # noqa: F401
+from .spec import SpecDecodeBackend  # noqa: F401
+from .tiers import AccuracyTier, TierRouter, build_tiers, spec_pair  # noqa: F401
 from .workload import SimClock, poisson_workload  # noqa: F401

@@ -525,13 +525,17 @@ class ServingEngine:
 
     def step(self, now: Optional[float] = None) -> List[RequestResult]:
         """One scheduler tick: admit, then one decode round per lane
-        with live slots.  Returns results completed this tick."""
+        with live slots (a speculative round on spec-decode lanes).
+        Returns results completed this tick."""
         now = 0.0 if now is None else now
         done_before = {rid for rid, r in self.results.items() if r.done}
         for lane in self.lanes.values():
             self._admit_lane(lane, now)
         for lane in self.lanes.values():
             if not lane.running:
+                continue
+            if hasattr(lane.backend, "spec_round"):
+                self._spec_round(lane, now)
                 continue
             nxt = lane.backend.decode_round()
             dec_lg = getattr(lane.backend, "last_decode_logits", None)
@@ -543,6 +547,35 @@ class ServingEngine:
             self._check()
         return [r for rid, r in self.results.items()
                 if r.done and rid not in done_before]
+
+    def _spec_round(self, lane: _Lane, now: float) -> None:
+        """One spec call: up to rounds_per_call draft+verify rounds, up
+        to k+1 tokens each, per live slot.  The backend truncates each
+        slot's emission at its remaining budget and first EOS (a slot
+        that finishes mid-call idles for the remaining rounds), so
+        per-slot emission order (and thus eviction accounting) is
+        exactly the sequential-decode order.  Backends returning the
+        single-round (B, k+1)/(B,) shapes are treated as one round."""
+        b = lane.backend
+        remaining = np.zeros(b.n_slots, np.int64)
+        eos = np.full(b.n_slots, -1, np.int64)
+        for slot, run in lane.running.items():
+            remaining[slot] = run.req.max_new - len(run.result.tokens)
+            if run.req.eos_id is not None:
+                eos[slot] = run.req.eos_id
+        toks, counts = b.spec_round(remaining, eos)
+        toks, counts = np.asarray(toks), np.asarray(counts)
+        lg = getattr(b, "last_spec_logits", None)
+        if counts.ndim == 1:
+            toks, counts = toks[:, None, :], counts[:, None]
+            lg = lg[:, None] if lg is not None else None
+        slots = sorted(lane.running)
+        for r in range(counts.shape[1]):
+            for slot in slots:
+                for i in range(int(counts[slot, r])):
+                    row = (lg[slot, r, i] if self.record_logits
+                           and lg is not None else None)
+                    self._emit(lane, slot, int(toks[slot, r, i]), now, row)
 
     def _check(self) -> None:
         total = 0
@@ -606,6 +639,10 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
                  continuous: bool = True,
                  token_budget: Optional[int] = None,
                  record_logits: bool = False,
+                 spec_decode: Optional[int] = None,
+                 spec_drafter: Optional[str] = None,
+                 spec_ks: Optional[Sequence[int]] = None,
+                 spec_rounds: int = 4,
                  seed: int = 0, mesh=None) -> ServingEngine:
     """One lane per accuracy tier over shared weights.
 
@@ -613,6 +650,16 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     replaces it with its tier's CiMConfig); `params` defaults to a
     fresh init (weights are tier-independent, so every lane shares
     them).  `tiers` defaults to the DSE ladder (serving/tiers.py).
+
+    `spec_decode=k` turns the exact lane speculative (DESIGN.md §12):
+    it decodes through a SpecDecodeBackend pairing `spec_drafter` (by
+    default the cheapest approximate rung) with the exact tier upgraded
+    to per-token activation scales — output is unchanged by
+    construction, only faster.  `spec_ks` pre-warms extra draft depths
+    so `set_draft_k` switches never retrace; `spec_rounds` batches that
+    many rounds per dispatch (admission granularity trades against
+    per-call overhead — see SpecDecodeBackend).  The verify logits are
+    only pulled off-device when `record_logits` asks for them.
 
     With `mesh` every lane's slot pool is data-parallel sharded and the
     shared weights are placed TP-sharded once per `DECODE_RULES`
@@ -629,6 +676,15 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     check_engine_arch(cfg)
     if tiers is None:
         tiers = build_tiers()
+    d_tier = None
+    if spec_decode is not None:
+        from .tiers import spec_pair
+
+        d_tier, v_tier = spec_pair(tiers, spec_drafter)
+        # the router still routes by name; only the exact rung's
+        # numerics change (per-token scales are a QAT-equivalent
+        # refinement, not a different multiplier)
+        tiers = tuple(v_tier if t.name == "exact" else t for t in tiers)
     if params is None:
         params = LM(cfg).init(jax.random.PRNGKey(seed))
     if mesh is not None:
@@ -642,6 +698,17 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     lanes = {}
     for tier in tiers:
         lm = LM(dc.replace(cfg, cim=tier.cim))
+        if spec_decode is not None and tier.name == "exact":
+            from .spec import SpecDecodeBackend
+
+            lanes[tier.name] = SpecDecodeBackend(
+                lm, LM(dc.replace(cfg, cim=d_tier.cim)), params,
+                draft_k=spec_decode, draft_ks=spec_ks,
+                rounds_per_call=spec_rounds, keep_logits=record_logits,
+                n_slots=slots_per_tier, max_len=max_len,
+                prompt_buckets=prompt_buckets,
+                group_buckets=group_buckets, mesh=mesh)
+            continue
         lanes[tier.name] = LMLaneBackend(
             lm, params, n_slots=slots_per_tier, max_len=max_len,
             prompt_buckets=prompt_buckets, group_buckets=group_buckets,

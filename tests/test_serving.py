@@ -63,6 +63,109 @@ class FakeLane:
         return self.slot_tok.copy()
 
 
+class FakeSpecLane(FakeLane):
+    """Spec-decode backend double: a seeded accept/reject pattern over
+    counter tokens.  Honors the `spec_round` protocol the engine
+    schedules against — per live slot and sub-round emit `a`
+    consecutive counter tokens with 1 <= a <= min(k+1, remaining),
+    decrementing the budget across the call's `rounds` sub-rounds the
+    way the real backend does on device; idle rows (remaining == 0)
+    ride along and emit nothing.  rounds=1 returns the legacy
+    single-round (B, k+1)/(B,) shapes so the engine's normalization
+    path stays covered."""
+
+    def __init__(self, n_slots, k=4, seed=0, rounds=1, max_len=10_000):
+        super().__init__(n_slots, max_len)
+        self.k = int(k)
+        self.rounds = int(rounds)
+        self.rng = np.random.default_rng(seed)
+
+    def spec_round(self, remaining, eos):
+        remaining = np.asarray(remaining, np.int64).copy()
+        toks = np.zeros((self.n_slots, self.rounds, self.k + 1), np.int64)
+        counts = np.zeros((self.n_slots, self.rounds), np.int64)
+        for r in range(self.rounds):
+            for s in range(self.n_slots):
+                if remaining[s] <= 0:
+                    continue
+                a = min(int(self.rng.integers(1, self.k + 2)),
+                        int(remaining[s]))
+                toks[s, r, :a] = self.slot_tok[s] + 1 + np.arange(a)
+                counts[s, r] = a
+                self.slot_tok[s] += a
+                remaining[s] -= a
+        if self.rounds == 1:
+            return toks[:, 0], counts[:, 0]
+        return toks, counts
+
+
+def check_spec_trace(spec, n_slots, k, accept_seed, continuous=True,
+                     rounds=1):
+    """Spec-decode scheduler oracle (hypothesis drives it in
+    test_serving_properties.py): whatever the seeded accept/reject
+    trace does round to round — including multi-round calls that
+    finish a request mid-call — the engine must keep FIFO admission,
+    slot hygiene and exact per-request token budgets, and every
+    request's final sequence must be the contiguous counter run that
+    started at its admit token — no token lost, duplicated or
+    misattributed across variable-length emissions."""
+    tiers = _fake_tiers(("a",))
+    lane = FakeSpecLane(n_slots, k=k, seed=accept_seed, rounds=rounds)
+    eng = ServingEngine({"a": lane}, TierRouter(tiers),
+                        continuous=continuous, check_invariants=True)
+    t = 0.0
+    reqs = []
+    for i, (gap, plen, max_new) in enumerate(spec):
+        t += gap
+        reqs.append(_req(i, tier="a", plen=plen, max_new=max_new,
+                         arrival=t))
+    res = eng.run(reqs, clock=SimClock())
+    assert len(res) == len(reqs)                       # no starvation
+    for r in reqs:
+        rr = res[r.rid]
+        assert rr.done
+        assert len(rr.tokens) == r.max_new             # budget exact
+        first = rr.tokens[0]
+        assert rr.tokens == list(range(first, first + r.max_new)), \
+            f"rid {r.rid}: sequence not preserved across spec rounds"
+    admits = [res[r.rid].t_admit
+              for r in sorted(reqs, key=lambda r: (r.arrival, r.rid))]
+    assert admits == sorted(admits)                    # FIFO admission
+    assert eng.active_tokens == 0
+    assert sorted(eng.lanes["a"].free) == list(range(n_slots))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_spec_scheduler_seeded_traces(seed):
+    """Seeded spec-trace sweep (runs even without hypothesis)."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(1, 26))
+    spec = [(float(rng.uniform(0, 0.5)), int(rng.integers(1, 9)),
+             int(rng.integers(1, 10))) for _ in range(n)]
+    check_spec_trace(spec, n_slots=int(rng.integers(1, 4)),
+                     k=int(rng.integers(1, 5)), accept_seed=seed,
+                     continuous=bool(seed % 2),
+                     rounds=int(rng.integers(1, 5)))
+
+
+def test_spec_trace_oracle_has_teeth():
+    """The oracle actually catches a scheduler that loses a token."""
+
+    class LossyLane(FakeSpecLane):
+        def spec_round(self, remaining, eos):
+            toks, counts = super().spec_round(remaining, eos)
+            self.slot_tok += 1           # skip a counter value: a lost
+            return toks, counts          # token on the NEXT round
+
+    tiers = _fake_tiers(("a",))
+    eng = ServingEngine({"a": LossyLane(1, k=2, seed=0)},
+                        TierRouter(tiers), check_invariants=True)
+    with pytest.raises(AssertionError):
+        res = eng.run([_req(0, tier="a", max_new=8)], clock=SimClock())
+        first = res[0].tokens[0]
+        assert res[0].tokens == list(range(first, first + 8))
+
+
 def _fake_tiers(names=("a", "b")):
     return [AccuracyTier(n, None, 0.001 * i, 1.0 + i)
             for i, n in enumerate(names)]
@@ -404,6 +507,44 @@ def test_engine_rejects_non_attention_arch():
 
     names = servable_archs()
     assert "qwen3-1.7b" in names and "recurrentgemma-9b" not in names
+
+
+def test_workload_reproducible_across_processes():
+    """poisson_workload must be a pure function of its seed — arrivals,
+    prompt tokens, budgets and tier picks all come from one
+    `np.random.default_rng(seed)` (no global or hash-seeded state), so
+    a workload can be replayed exactly in another process (the
+    benchmark's cross-engine comparisons and the spec-decode
+    differential tests depend on it)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    body = (
+        "import json, sys\n"
+        f"sys.path.insert(0, {src!r})\n"
+        "from repro.serving import poisson_workload\n"
+        "wl = poisson_workload(6, rate=50.0, vocab=97,\n"
+        "                      prompt_len=(2, 5), max_new=(1, 4),\n"
+        "                      tier_mix=(('exact', None, 0.5),\n"
+        "                                ('balanced', None, 0.5)),\n"
+        "                      seed=123)\n"
+        "print(json.dumps([[r.rid, r.arrival, r.max_new, r.tier,\n"
+        "                   r.prompt.tolist()] for r in wl]))\n")
+    out = subprocess.run([sys.executable, "-c", body],
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    child = json.loads(out.stdout.strip().splitlines()[-1])
+    wl = poisson_workload(6, rate=50.0, vocab=97, prompt_len=(2, 5),
+                          max_new=(1, 4),
+                          tier_mix=(("exact", None, 0.5),
+                                    ("balanced", None, 0.5)), seed=123)
+    here = [[r.rid, r.arrival, r.max_new, r.tier, r.prompt.tolist()]
+            for r in wl]
+    assert child == here, "workload drifted across processes"
 
 
 def test_ragged_prefill_rejected_for_stateful_stacks():

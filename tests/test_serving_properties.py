@@ -1,7 +1,18 @@
-"""Hypothesis-driven scheduler property tests (the oracle lives in
-tests/test_serving.py::check_random_trace): no slot leak, no
-starvation, eviction frees capacity, token budget respected, over
-randomized arrival traces and both admission policies."""
+"""Hypothesis-driven scheduler property tests (the oracles live in
+tests/test_serving.py::check_random_trace / check_spec_trace): no slot
+leak, no starvation, eviction frees capacity, token budget respected,
+and — for speculative decoding — per-request sequences preserved
+across seeded variable-length draft/verify emissions, over randomized
+arrival traces and both admission policies.
+
+Profiles are explicit so CI is deterministic and budgeted: ``ci``
+(derandomized, no wall-clock deadline — CI boxes stall unpredictably)
+is selected by ``HYPOTHESIS_PROFILE=ci`` in the workflow; the default
+``dev`` profile keeps hypothesis's random exploration (and database)
+for local runs.  Both keep shrinking enabled: a failing trace minimizes
+to the shortest arrival/accept pattern that breaks the scheduler."""
+
+import os
 
 import pytest
 
@@ -10,14 +21,36 @@ hypothesis = pytest.importorskip(
     "hypothesis dev dependency (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from test_serving import check_random_trace  # noqa: E402
+from test_serving import check_random_trace, check_spec_trace  # noqa: E402
+
+settings.register_profile("ci", max_examples=40, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=40, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 
 req_st = st.tuples(st.floats(0.0, 0.5), st.integers(1, 8),
                    st.integers(1, 6), st.integers(0, 1))
 
+# spec traces: (gap, prompt_len, max_new) — tier is always the spec lane
+spec_req_st = st.tuples(st.floats(0.0, 0.5), st.integers(1, 8),
+                        st.integers(1, 9))
+
 
 @given(st.lists(req_st, min_size=1, max_size=25),
        st.integers(1, 3), st.booleans())
-@settings(max_examples=40, deadline=None)
 def test_scheduler_properties_random_traces(spec, n_slots, continuous):
     check_random_trace(spec, n_slots, continuous)
+
+
+@given(st.lists(spec_req_st, min_size=1, max_size=25),
+       st.integers(1, 3), st.integers(1, 4), st.integers(0, 2 ** 16),
+       st.booleans(), st.integers(1, 4))
+def test_spec_scheduler_properties_random_traces(spec, n_slots, k,
+                                                 accept_seed, continuous,
+                                                 rounds):
+    """Randomized draft/verify acceptance traces: however many tokens
+    each spec call emits per slot (across 1..4 fused sub-rounds), the
+    scheduler's accounting and every request's final sequence must be
+    exactly sequential-decode's."""
+    check_spec_trace(spec, n_slots, k, accept_seed, continuous,
+                     rounds=rounds)
