@@ -1,0 +1,235 @@
+"""Fused CiM attention benchmark harness -> BENCH_attn.json.
+
+Times every attention-routed family at serving-shaped (B, heads, seq,
+head_dim) geometries two ways:
+
+  * **fused** — `cim_attention`: the flash-style Pallas kernels
+    (kernels/attn_gemm.py), quantize-on-load QK^T and PV dots +
+    online softmax + masking + dequant epilogue inside ONE pallas_call;
+    the (B, H, Sq, Skv) score tensor never exists.
+  * **materialized baseline** — the oracle surface
+    (`ops.cim_attn_materialized`): identical integer math split into a
+    scores pallas_call that writes the full masked score tensor to HBM
+    and a PV pallas_call that reads it back.
+
+Per row: median-of-reps steady-state latency for both paths (first call
+timed separately), analytic HBM-traffic accounting at the kernel's
+padded tile geometry (the materialized path adds exactly the score
+write + read), and a numeric `bit_identical` check of fused vs the
+oracle — the two paths share every quantize/accumulate helper, so this
+is an equality assert, not a tolerance.
+
+Off TPU both paths' Pallas kernels run in interpret mode, so absolute
+numbers are a trend line; the exact-mode row's comparison is still
+like-for-like (both interpreted).  `zero_steady_state_retraces` in the
+summary re-runs every fused row after timing and requires the dispatch
+engine's trace counter to stay flat (the §13 zero-retrace contract).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_model
+from repro.core.approx_gemm import (AttnParams, GemmParams,
+                                    attn_materialized_oracle,
+                                    cim_attention, plan_attn, trace_count)
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+OUT_PATH = os.path.join(_DIR, "BENCH_attn.json")
+OUT_PATH_SMOKE = os.path.join(_DIR, "BENCH_attn.smoke.json")
+
+# (label, B, H, KH, Sq, Skv, D): serving-shaped rows — a single-stream
+# GQA prefill and a batched single-token decode against a 1k cache
+SHAPES = [
+    ("prefill-512", 1, 8, 4, 512, 512, 64),
+    ("decode-1k", 8, 8, 4, 1, 1024, 64),
+]
+SHAPES_SMOKE = [("smoke", 2, 4, 2, 64, 64, 32)]
+
+# (family, mode): every attention kernel family.  The exact/exact row
+# documents the MXU-path semantics; the hardware rows carry the
+# fused-vs-materialized claim (like-for-like kernels).
+ROWS = [
+    ("exact", "exact"),            # pallas_attn_mxu
+    ("exact", "hardware"),         # pallas_attn_nibble
+    ("appro42", "hardware"),       # pallas_attn_lut (full table)
+    ("mitchell", "hardware"),      # pallas_attn_log
+    ("log_our", "hardware"),       # pallas_attn_log
+]
+
+DEFAULT_REPS = 5
+_LANE = 128
+
+
+def _timeit_pair(fn_a, fn_b, reps: int = DEFAULT_REPS):
+    """(first_a_us, median_a_us, median_b_us) with the steady-state
+    samples of the two paths *interleaved* (same rationale as
+    bench_conv: shared-container load drift hits both medians)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn_a())
+    first_a = time.perf_counter() - t0
+    jax.block_until_ready(fn_b())              # compile b outside timing
+    ta, tb = [], []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return (first_a * 1e6, float(np.median(ta)) * 1e6,
+            float(np.median(tb)) * 1e6)
+
+
+def _attn_bytes(b, h, kh, sq, skv, d, block, fused):
+    """Ideal HBM traffic at the kernel's padded tile geometry.
+
+    Fused: each (qi, ki) grid cell fetches its q tile and its k/v
+    tiles — q is re-read once per kv tile, k/v once per q tile — and
+    the output is written once.  Materialized adds exactly the
+    (B, H, Sqp, Skvp) f32 score tensor, written by the scores pass and
+    read back by the PV pass; everything else is identical, so the
+    fused path is *strictly* less traffic at every geometry."""
+    f32 = 4
+    bq, bk = block
+    dp = max(_LANE, math.ceil(d / _LANE) * _LANE)
+    sqp = math.ceil(max(sq, bq) / bq) * bq
+    skvp = math.ceil(max(skv, bk) / bk) * bk
+    nq, nk = sqp // bq, skvp // bk
+    q_bytes = f32 * b * h * sqp * dp * nk
+    kv_bytes = 2 * f32 * b * h * skvp * dp * nq
+    out = f32 * b * h * sqp * dp
+    scales = f32 * (b * h + 2 * b * kh)
+    total = q_bytes + kv_bytes + out + scales
+    if not fused:
+        total += 2 * f32 * b * h * sqp * skvp      # score write + read
+    return total
+
+
+def _bench_row(label, family, mode, shape, reps):
+    _, b, h, kh, sq, skv, d = shape
+    kq, kk, kv_ = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, sq, h, d))
+    k = jax.random.normal(kk, (b, skv, kh, d))
+    v = jax.random.normal(kv_, (b, skv, kh, d))
+    # decode-shaped rows: the single query sits at the end of the cache
+    qpos = jnp.broadcast_to(
+        jnp.arange(skv - sq, skv, dtype=jnp.int32), (b, sq))
+    kpos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+    kval = jnp.ones((b, skv), jnp.int32)
+    gp = GemmParams(family=family, bits=8, mode=mode)
+    plan = plan_attn(family, mode, 8, b, h, kh, sq, skv, d, AttnParams(),
+                     spec=gp.spec)
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    khh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+
+    def fused():
+        return cim_attention(q, k, v, gp, q_positions=qpos,
+                             kv_positions=kpos, kv_valid=kval)
+
+    def materialized():
+        return attn_materialized_oracle(qh, khh, vh, gp, plan,
+                                        qpos, kpos, kval)
+
+    first_us, us_fused, us_mat = _timeit_pair(fused, materialized, reps)
+    got = np.asarray(fused())
+    want = np.transpose(np.asarray(materialized()), (0, 2, 1, 3))
+    bit_identical = bool((got == want).all())
+    bytes_f = _attn_bytes(b, h, kh, sq, skv, d, plan.block, fused=True)
+    bytes_m = _attn_bytes(b, h, kh, sq, skv, d, plan.block, fused=False)
+    return {
+        "row": label,
+        "kernel": plan.entry.name,
+        "family": family,
+        "mode": mode,
+        "shape": [b, h, kh, sq, skv, d],
+        "block": list(plan.block),
+        "backend": jax.default_backend(),
+        "interpret": bool(plan.interpret),
+        "reps": reps,
+        "us_fused": round(us_fused, 1),
+        "us_first_fused": round(first_us, 1),
+        "us_materialized": round(us_mat, 1),
+        "speedup": round(us_mat / us_fused, 2),
+        "bit_identical": bit_identical,
+        "bytes_moved_fused": int(bytes_f),
+        "bytes_moved_materialized": int(bytes_m),
+        "bytes_ratio": round(bytes_m / bytes_f, 3),
+        "energy_per_mac_pj": round(
+            energy_model.energy_per_mac_j(family, 8) * 1e12, 3),
+    }, fused
+
+
+def run(fast: bool = True, smoke: bool = False, reps: int = DEFAULT_REPS):
+    """Benchmark fused CiM attention vs the materialized oracle; write
+    BENCH_attn.json; return CSV rows for run.py."""
+    del fast  # one sweep size: the serving-shaped rows
+    shapes = SHAPES_SMOKE if smoke else SHAPES
+    if smoke:
+        reps = 1
+    records, fused_fns = [], []
+    for family, mode in ROWS:
+        for shape in shapes:
+            try:
+                rec, fn = _bench_row(shape[0], family, mode, shape, reps)
+                records.append(rec)
+                fused_fns.append(fn)
+            except Exception as e:  # noqa: BLE001 — keep the sweep alive
+                records.append({"family": family, "mode": mode,
+                                "row": shape[0],
+                                "error": f"{type(e).__name__}: {e}"})
+    # §13 zero-retrace contract: replaying every fused row (a bucket +
+    # tier sweep across everything benchmarked) must not trace anything
+    t0 = trace_count()
+    for fn in fused_fns:
+        jax.block_until_ready(fn())
+    zero_retraces = (trace_count() - t0) == 0
+    hw = [r for r in records if r.get("mode") == "hardware"
+          and "speedup" in r]
+    payload = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "smoke": smoke,
+        "bytes_accounting": "padded-tile analytic "
+                            "(see benchmarks/README.md)",
+        "zero_steady_state_retraces": bool(zero_retraces),
+        "hardware_speedup_min": round(min(r["speedup"] for r in hw), 2)
+        if hw else None,
+        "hardware_speedup_median": round(float(np.median(
+            [r["speedup"] for r in hw])), 2) if hw else None,
+        "hardware_all_bit_identical": bool(all(
+            r["bit_identical"] for r in hw)) if hw else None,
+        "records": records,
+    }
+    with open(OUT_PATH_SMOKE if smoke else OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    rows = []
+    for r in records:
+        if "error" in r:
+            rows.append((f"attn_{r['family']}_{r['row']}", 0.0,
+                         f"ERROR:{r['error'].split(':')[0]}"))
+            continue
+        rows.append((f"attn_{r['kernel']}_{r['family']}_{r['row']}",
+                     r["us_fused"],
+                     f"{r['speedup']}x_vs_materialized;"
+                     f"bytes/{r['bytes_ratio']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke = "--smoke" in sys.argv
+    for name, us, derived in run(smoke=smoke):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"wrote {OUT_PATH_SMOKE if smoke else OUT_PATH}")

@@ -1,7 +1,8 @@
 """Benchmark driver: one entry per paper table, the roofline report and
 the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
-BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_serve ->
-BENCH_serve.json).  Prints ``name,us_per_call,derived`` CSV at the end.
+BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_attn ->
+BENCH_attn.json; bench_serve -> BENCH_serve.json).  Prints
+``name,us_per_call,derived`` CSV at the end.
 
 Flags:
   --fast      skip the slow CNN table; smaller kernel shape sweep
@@ -16,9 +17,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_conv, bench_kernels, bench_serve,
-                            bench_shard, roofline, table2_ppa,
-                            table3_psnr, table4_cnn, table5_yield)
+    from benchmarks import (bench_attn, bench_conv, bench_kernels,
+                            bench_serve, bench_shard, roofline,
+                            table2_ppa, table3_psnr, table4_cnn,
+                            table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -61,6 +63,14 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_conv", 0.0, f"ERROR:{type(e).__name__}"))
+    attn_path = bench_attn.OUT_PATH_SMOKE if smoke else bench_attn.OUT_PATH
+    try:
+        rows.extend(bench_attn.run(fast=fast or "--kernels" in sys.argv,
+                                   smoke=smoke))
+        print(f"attn records -> {attn_path}")
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_attn", 0.0, f"ERROR:{type(e).__name__}"))
     try:
         rows.extend(bench_serve.run(fast=fast or "--kernels" in sys.argv,
                                     smoke=smoke))

@@ -131,7 +131,7 @@ class KernelEntry:
     oracle: str = ""                   # kernels/ref.py oracle it must match
     bound: str = "bit"                 # "bit" | "fp32" | "stochastic"
     description: str = ""
-    op: str = "gemm"                   # "gemm" | "conv" (routing universe)
+    op: str = "gemm"                   # "gemm" | "conv" | "attn" (universe)
     # Optional per-spec routing gate (beyond family/mode/bits), e.g.
     # nibble decomposability.  Entries with a predicate are only
     # eligible when the caller supplies a MultiplierSpec and the
@@ -236,6 +236,45 @@ register_kernel(KernelEntry(
     max_bits=16, pallas=True, autotuned=True,
     oracle="im2col + mitchell_matmul_ref", bound="bit",
     description="implicit-GEMM log-domain conv (LoD+shift+OR per tap)"))
+
+# Attention universe (flash-style CiM attention, DESIGN.md §13).  The
+# pure-jnp `attn_xla` twin stays registered at priority 0 as the
+# always-eligible fallback (same tiled numerics, so still bound="bit"
+# against the materialized oracle); the Pallas kernels outrank it when
+# the VMEM footprint and bit-safety predicates admit them (`plan_attn`).
+# Modes: the quantized integer cores only — float/surrogate attention
+# stays on the models-layer `_chunked_attn` path.
+ATTN_MODES = ("exact", "bit_exact", "hardware")
+
+register_kernel(KernelEntry(
+    name="attn_xla", op="attn", modes=ATTN_MODES, families=(),
+    backends=(), max_bits=12, oracle="attn_materialized", bound="bit",
+    description="pure-jnp flash twin (same bk-tiled online softmax; "
+                "fallback + validation scale)"))
+register_kernel(KernelEntry(
+    name="pallas_attn_mxu", op="attn", modes=("exact",), families=(),
+    backends=(), priority=10, max_bits=8, pallas=True, autotuned=True,
+    oracle="attn_materialized", bound="bit",
+    description="flash attention, integer-valued f32 MXU dots (exact "
+                "in-kernel baseline; qmax^2*K < 2^24 gated)"))
+register_kernel(KernelEntry(
+    name="pallas_attn_lut", op="attn", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), priority=10, max_bits=8,
+    pallas=True, autotuned=True, oracle="attn_materialized", bound="bit",
+    description="flash attention, k-sliced full-LUT gather QK^T/PV"))
+register_kernel(KernelEntry(
+    name="pallas_attn_nibble", op="attn", modes=("hardware",),
+    families=("exact", "appro42"), backends=(), priority=20, max_bits=8,
+    pallas=True, autotuned=True, oracle="attn_materialized", bound="bit",
+    predicate=nibble_decomposable,
+    description="flash attention, nibble sub-LUT QK^T/PV (4 x 2^{b/2} "
+                "tables)"))
+register_kernel(KernelEntry(
+    name="pallas_attn_log", op="attn", modes=("hardware",),
+    families=("mitchell", "log_our"), backends=(), priority=10,
+    max_bits=12, pallas=True, autotuned=True,
+    oracle="attn_materialized", bound="bit",
+    description="flash attention, log-domain QK^T/PV (LoD+shift+OR)"))
 
 
 @functools.lru_cache(maxsize=1024)
@@ -585,6 +624,197 @@ def _plan_conv_mesh_cached(family: str, mode: str, bits: int, b: int,
 
 
 # ---------------------------------------------------------------------------
+# Attention planning universe (flash-style CiM attention, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParams:
+    """Static attention geometry: the masking contract.
+
+    ``causal`` gates ``kpos <= qpos``; ``window`` additionally gates
+    ``kpos > qpos - window`` (sliding-window attention).  Ragged
+    validity rides in the runtime ``kv_valid`` operand, not here — it
+    changes per call, never the executable."""
+
+    causal: bool = True
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        if self.window is not None and self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+
+
+# Entry name -> inner-dot datapath of kernels/attn_gemm.py.  attn_xla
+# resolves per-request (_attn_path): it mirrors whichever datapath the
+# request's mode/family would run, so falling back never changes the
+# multiplier semantics, only the execution engine.
+_ATTN_PATHS = {
+    "pallas_attn_mxu": "mxu",
+    "pallas_attn_lut": "lut",
+    "pallas_attn_nibble": "nibble",
+    "pallas_attn_log": "log",
+}
+
+
+def _attn_path(entry_name: str, family: str, mode: str) -> str:
+    path = _ATTN_PATHS.get(entry_name)
+    if path is not None:
+        return path
+    if mode == "exact":
+        return "mxu"
+    if family in ("mitchell", "log_our"):
+        return "log"
+    return "lut"
+
+
+# VMEM footprint budget for one flash-attention grid step: the q/k/v
+# operand tiles (+ table) are double-buffered by the Pallas pipeline,
+# the m/l/acc scratch is single-buffered, the (bq, bk) score tile and
+# its mask/probability twins are live once, and the gather/product
+# paths materialize a bounded (bq, k_slice, max(bk, dp)) temporary.
+ATTN_VMEM_BUDGET = 8 * 1024 * 1024
+_ATTN_K_SLICE = 16                     # kernels/approx_matmul.DEFAULT_K_SLICE
+
+
+def _attn_lut_vmem(entry_name: str, bits: int) -> int:
+    if entry_name == "pallas_attn_lut":
+        return 4 * (1 << (2 * bits))           # full signed-product table
+    if entry_name == "pallas_attn_nibble":
+        return 4 * 4 * (1 << bits)             # four 2^{b/2} sub-tables
+    return 0
+
+
+def _attn_kernel_fits(entry_name: str, bits: int, block: Tuple[int, int],
+                      head_dim: int) -> bool:
+    bq, bk = block
+    dp = max(128, -(-head_dim // 128) * 128)   # lane-padded head dim
+    operands = (bq + 2 * bk) * dp * 4 + _attn_lut_vmem(entry_name, bits)
+    scratch = bq * dp * 4 + 2 * bq * 128 * 4
+    score = 3 * bq * bk * 4                    # s, mask-widened p, pq
+    temp = 2 * bq * _ATTN_K_SLICE * max(bk, dp) * 4
+    return 2 * operands + scratch + score + temp <= ATTN_VMEM_BUDGET
+
+
+def _attn_bit_safe(bits: int, path: str, head_dim: int, bk: int) -> bool:
+    """True iff every inner-dot partial sum is exactly representable.
+
+    QK^T contracts the lane-padded head dim, PV contracts the kv tile
+    (probabilities quantize to [0, qmax] at fixed scale), so the worst
+    accumulator magnitude is qmax^2 * max(dp, bk).  The MXU path sums
+    in f32 (exact below 2^24); the integer paths accumulate int32."""
+    qm = (1 << (bits - 1)) - 1
+    dp = max(128, -(-head_dim // 128) * 128)
+    worst = qm * qm * max(dp, bk)
+    return worst < ((1 << 24) if path == "mxu" else (1 << 31))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnPlan:
+    """A routed attention: kernel, masking, (bq, bk) block, backend."""
+
+    entry: KernelEntry
+    attn: AttnParams
+    block: Tuple[int, int]
+    interpret: bool
+    backend: str
+
+
+@functools.lru_cache(maxsize=1024)
+def _attn_entries_cached(family: str, mode: str, bits: int, backend: str,
+                         spec: Optional[MultiplierSpec]
+                         ) -> Tuple[KernelEntry, ...]:
+    matches = [e for e in _REGISTRY.values()
+               if e.op == "attn" and e.supports(family, mode, bits, backend)
+               and (e.predicate is None
+                    or (spec is not None and e.predicate(spec)))]
+    if not matches:
+        raise ValueError(
+            f"no attention kernel for family={family!r} mode={mode!r} "
+            f"bits={bits} backend={backend!r}; registered: "
+            f"{sorted(e.name for e in _REGISTRY.values() if e.op == 'attn')}")
+    return tuple(sorted(matches, key=lambda e: -e.priority))
+
+
+def select_attn_kernel(family: str, mode: str, bits: int = 8,
+                       backend: Optional[str] = None,
+                       spec: Optional[MultiplierSpec] = None) -> KernelEntry:
+    """Highest-priority attention entry for the request (no footprint /
+    bit-safety gate — `plan_attn` applies those against the geometry)."""
+    if mode not in ATTN_MODES:
+        raise ValueError(f"mode {mode!r} not in {ATTN_MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    backend = backend or jax.default_backend()
+    return _attn_entries_cached(family, mode, bits, backend, spec)[0]
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_attn_cached(family: str, mode: str, bits: int, bb: int,
+                      heads: int, kv_heads: int, sqb: int, skvb: int,
+                      head_dim: int, attn: AttnParams, backend: str,
+                      interpret: Optional[bool],
+                      block: Optional[Tuple[int, int]],
+                      spec: Optional[MultiplierSpec]) -> AttnPlan:
+    for entry in _attn_entries_cached(family, mode, bits, backend, spec):
+        path = _attn_path(entry.name, family, mode)
+        blk = block
+        if blk is None:
+            if entry.autotuned:
+                blk = autotune.best_attn_block(
+                    entry.name, bits, bb, heads, kv_heads, sqb, skvb,
+                    head_dim, backend=backend)
+            else:
+                blk = autotune.heuristic_attn_block(entry.name, sqb, skvb)
+        if entry.pallas and not _attn_kernel_fits(entry.name, bits, blk,
+                                                  head_dim):
+            continue                   # tile too large: try lower priority
+        if not _attn_bit_safe(bits, path, head_dim, blk[1]):
+            continue                   # accumulator could overflow
+        interp = interpret
+        if interp is None:
+            interp = entry.pallas and backend != "tpu"
+        return AttnPlan(entry=entry, attn=attn, block=tuple(blk),
+                        interpret=interp, backend=backend)
+    raise ValueError(
+        f"no eligible attention kernel for family={family!r} "
+        f"mode={mode!r} bits={bits} head_dim={head_dim} (bit-safety / "
+        "VMEM predicates rejected every entry)")
+
+
+def plan_attn(family: str, mode: str, bits: int, b: int, heads: int,
+              kv_heads: int, sq: int, skv: int, head_dim: int,
+              attn: AttnParams = AttnParams(),
+              backend: Optional[str] = None,
+              interpret: Optional[bool] = None,
+              block: Optional[Tuple[int, int]] = None,
+              spec: Optional[MultiplierSpec] = None) -> AttnPlan:
+    """Route one attention call to an entry + (bq, bk) block.
+
+    Memoized on the attention-bucketed shape (autotune.bucket_attn):
+    powers of two on batch and the sequence axes; heads, kv_heads and
+    head_dim exact.  Entries are gated by the VMEM footprint model
+    (`_attn_kernel_fits`) and the accumulator bit-safety predicate
+    (`_attn_bit_safe`); a request no entry accepts raises, and the
+    models layer falls back to the float `_chunked_attn` path.
+    """
+    if mode not in ATTN_MODES:
+        raise ValueError(f"mode {mode!r} not in {ATTN_MODES}")
+    if family not in FAMILIES:
+        raise ValueError(f"family {family!r} not in {FAMILIES}")
+    if heads % kv_heads:
+        raise ValueError(
+            f"GQA needs heads % kv_heads == 0, got {heads} % {kv_heads}")
+    backend = backend or jax.default_backend()
+    bb, hh, kh, sqb, skvb, hd = autotune.bucket_attn(
+        b, heads, kv_heads, sq, skv, head_dim)
+    return _plan_attn_cached(family, mode, bits, bb, hh, kh, sqb, skvb,
+                             hd, attn, backend, interpret,
+                             tuple(block) if block is not None else None,
+                             spec)
+
+
+# ---------------------------------------------------------------------------
 # Mesh-partitioned planning (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
@@ -649,8 +879,9 @@ def _plan_token(plan) -> Tuple:
         return (_plan_token(plan.plan) + ("mesh",)
                 + (tuple(sorted(plan.mesh.shape.items())), plan.mesh,
                    plan.in_specs, plan.out_spec, plan.reduce_axes))
-    return (plan.entry.name, getattr(plan, "conv", None), plan.block,
-            plan.interpret, plan.backend)
+    return (plan.entry.name, getattr(plan, "conv", None),
+            getattr(plan, "attn", None), plan.block, plan.interpret,
+            plan.backend)
 
 
 def _mesh_gemm_layout(m: int, k: int, n: int, mesh: Mesh, x_spec, w_spec):
@@ -944,6 +1175,66 @@ CONV_RUNNERS: Dict[str, Callable] = {
     "pallas_conv_nibble": _run_conv_nibble,
     "pallas_conv_log": _run_conv_log,
 }
+
+
+# ---------------------------------------------------------------------------
+# Attention runners (DESIGN.md §13).  Kernel-native layout: q
+# (B, H, Sq, D), k/v (B, KH, Skv, D) float, qpos (B, Sq) + kpos/kval
+# (B, Skv) int32 -> f32 (B, H, Sq, D).  Tables/scales resolve inside
+# ops.* so the runners stay pure functions of (operands, gp, plan).
+# ---------------------------------------------------------------------------
+
+
+def _attn_run_kwargs(gp: GemmParams, plan: AttnPlan) -> Dict:
+    path = _attn_path(plan.entry.name, gp.family, gp.mode)
+    kw = dict(path=path, bits=gp.bits, causal=plan.attn.causal,
+              window=plan.attn.window,
+              compensated=(gp.family == "log_our"), block=plan.block)
+    if path in ("lut", "nibble"):
+        kw["spec"] = gp.spec
+    return kw
+
+
+def _run_attn_pallas(qh, kh_, vh, qpos, kpos, kval, gp: GemmParams,
+                     plan: AttnPlan):
+    from repro.kernels import ops
+
+    return ops.cim_attn_fused(qh, kh_, vh, qpos, kpos, kval,
+                              interpret=plan.interpret,
+                              **_attn_run_kwargs(gp, plan))
+
+
+def _run_attn_xla(qh, kh_, vh, qpos, kpos, kval, gp: GemmParams,
+                  plan: AttnPlan):
+    from repro.kernels import ops
+
+    return ops.cim_attn_reference(qh, kh_, vh, qpos, kpos, kval,
+                                  **_attn_run_kwargs(gp, plan))
+
+
+ATTN_RUNNERS: Dict[str, Callable] = {
+    "attn_xla": _run_attn_xla,
+    "pallas_attn_mxu": _run_attn_pallas,
+    "pallas_attn_lut": _run_attn_pallas,
+    "pallas_attn_nibble": _run_attn_pallas,
+    "pallas_attn_log": _run_attn_pallas,
+}
+
+
+def attn_materialized_oracle(q, k, v, gp: GemmParams, plan: AttnPlan,
+                             qpos, kpos, kval):
+    """The bit-exact oracle surface for a routed attention: identical
+    math to the fused kernel, with the full (B, H, Sq, Skv) score
+    tensor materialized through HBM (tests + bench_attn baseline)."""
+    from repro.kernels import ops
+
+    # a non-Pallas plan (attn_xla) carries interpret=False, which only
+    # applies to its jnp twin; the oracle's pallas_calls resolve their
+    # own default (interpret off-TPU)
+    interp = plan.interpret if plan.entry.pallas else None
+    return ops.cim_attn_materialized(q, k, v, qpos, kpos, kval,
+                                     interpret=interp,
+                                     **_attn_run_kwargs(gp, plan))
 
 
 # ---------------------------------------------------------------------------
@@ -1696,6 +1987,102 @@ def _conv_executable_for(gp: GemmParams, plan: ConvPlan, stochastic: bool,
     return fn
 
 
+def _attn_exec_key(gp: GemmParams, plan: AttnPlan, q, k, b: int,
+                   heads: int, kv_heads: int, sq: int, skv: int,
+                   head_dim: int) -> Tuple:
+    return ("attn", gp, _plan_token(plan), q.dtype, k.dtype) + \
+        autotune.bucket_attn(b, heads, kv_heads, sq, skv, head_dim)
+
+
+def _build_attn_executable(gp: GemmParams, plan: AttnPlan) -> Callable:
+    """One jitted attention executable (model layout in/out).
+
+    Forward = the routed integer kernel; backward = exact float VJP
+    through ``attn_float`` (STE semantics, matching the GEMM/conv
+    contract).  The position/validity operands are explicit custom_vjp
+    arguments (closing over tracers is illegal under transforms); being
+    integer, their cotangents are the mandated float0 zeros.
+
+    Bit-identity discipline: the jitted core is EXACTLY the kernel
+    entry-point graph — the layout transposes and the per-head scale
+    reductions run eagerly in the `run` shell, mirroring the ops-layer
+    oracle surface call for call.  Fused into the core graph, XLA's
+    algebraic rewrites (e.g. x / (m / qmax) -> x * qmax / m) perturb
+    the attn_xla path by 1 ulp against the standalone oracle."""
+    import numpy as np
+
+    from repro.kernels.attn_gemm import (attn_float, attn_fused,
+                                         attn_reference, attn_scales)
+    from repro.kernels.ops import _attn_table
+
+    kw = _attn_run_kwargs(gp, plan)
+    kw.pop("spec", None)
+    path, causal, window = kw["path"], plan.attn.causal, plan.attn.window
+    table_spec = gp.spec if path in ("lut", "nibble") else None
+    pallas = plan.entry.pallas
+    if pallas:
+        kw["interpret"] = plan.interpret
+
+    @jax.custom_vjp
+    def f(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval):
+        _mark_trace()
+        # table resolved at use time, not closed over: a build-time jnp
+        # constant hoisted into scan consts leaks as a tracer under
+        # grad-through-scan partial-eval (same rule as _signed_lut_flat;
+        # the numpy table is cached, asarray is free under jit)
+        table = _attn_table(path, table_spec)
+        entry_point = attn_fused if pallas else attn_reference
+        return entry_point(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval,
+                           table, **kw)
+
+    def fwd(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval):
+        out = f(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval)
+        return out, (a, b_, c, qpos, kpos, kval)
+
+    def bwd(res, g):
+        a, b_, c, qpos, kpos, kval = res
+        _, vjp = jax.vjp(
+            lambda x, y, z: attn_float(x, y, z, qpos, kpos, kval,
+                                       causal=causal, window=window),
+            a, b_, c)
+        izero = lambda t: np.zeros(t.shape, jax.dtypes.float0)  # noqa: E731
+        da, db, dc = vjp(g.astype(jnp.float32))
+        return (da, db, dc, jnp.zeros((a.shape[0], a.shape[1])),
+                jnp.zeros((b_.shape[0], b_.shape[1])),
+                jnp.zeros((c.shape[0], c.shape[1])),
+                izero(qpos), izero(kpos), izero(kval))
+
+    f.defvjp(fwd, bwd)
+    core = jax.jit(f)
+
+    def run(q, k, v, qpos, kpos, kval):
+        # model layout (B, S, H, D) -> kernel layout (B, H, S, D)
+        qh = jnp.transpose(q.astype(jnp.float32), (0, 2, 1, 3))
+        kh_ = jnp.transpose(k.astype(jnp.float32), (0, 2, 1, 3))
+        vh = jnp.transpose(v.astype(jnp.float32), (0, 2, 1, 3))
+        sq_s, sk_s, sv_s = attn_scales(qh, kh_, vh, gp.bits)
+        return jnp.transpose(
+            core(qh, kh_, vh, sq_s, sk_s, sv_s, qpos, kpos, kval),
+            (0, 2, 1, 3))
+
+    return run
+
+
+def _attn_executable_for(gp: GemmParams, plan: AttnPlan, q, k, b: int,
+                         heads: int, kv_heads: int, sq: int, skv: int,
+                         head_dim: int) -> Callable:
+    key = _attn_exec_key(gp, plan, q, k, b, heads, kv_heads, sq, skv,
+                         head_dim)
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        with _EXEC_LOCK:
+            fn = _EXEC_CACHE.get(key)
+            if fn is None:
+                fn = _build_attn_executable(gp, plan)
+                _EXEC_CACHE[key] = fn
+    return fn
+
+
 def executable_cache_size() -> int:
     return len(_EXEC_CACHE)
 
@@ -1717,6 +2104,8 @@ def clear_dispatch_caches() -> None:
     _plan_gemm_cached.cache_clear()
     _conv_entries_cached.cache_clear()
     _plan_conv_cached.cache_clear()
+    _attn_entries_cached.cache_clear()
+    _plan_attn_cached.cache_clear()
     _plan_gemm_mesh_cached.cache_clear()
     _plan_conv_mesh_cached.cache_clear()
 
@@ -1901,6 +2290,92 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                               noise_kind)
         return _ste_conv_eps(forward, conv)(x, w, eps)
     return _ste_conv(forward, conv)(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Attention frontend: cim_attention (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def cim_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  gp: GemmParams, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_positions: Optional[jnp.ndarray] = None,
+                  kv_positions: Optional[jnp.ndarray] = None,
+                  kv_valid: Optional[jnp.ndarray] = None,
+                  interpret: Optional[bool] = None,
+                  block: Optional[Tuple[int, int]] = None,
+                  cached: bool = True) -> jnp.ndarray:
+    """Dispatch + execute one approximate attention (macro semantics).
+
+    q: (B, Sq, H, D) float; k/v: (B, Skv, KH, D) float with
+    H % KH == 0 (GQA; KH == H is plain MHA).  Returns float32
+    (B, Sq, H, D) with straight-through exact-float-attention
+    gradients (`attn_float` VJP).
+
+    Both inner dots (QK^T and PV) run through the approximate CiM
+    datapath selected by `gp` — the same quantize-on-load LUT-gather /
+    nibble / log-domain machinery as the GEMM kernels, under
+    online-softmax tiling so the (B, H, Sq, Skv) score tensor never
+    touches HBM.  Masking: `causal`/`window` are static plan geometry;
+    `q_positions` (B, Sq), `kv_positions` + `kv_valid` (B, Skv) are
+    runtime operands defaulting to dense [0, S) positions / all-valid —
+    ragged prefill and single-token decode reuse the dense executable.
+
+    Integer modes only (`ATTN_MODES`); per-token scale requests and
+    geometries every registry predicate rejects raise ValueError, and
+    the models layer (`models/attention.py`) catches that and falls
+    back to the float `_chunked_attn` path.  Executes through the same
+    zero-retrace executable cache as the GEMM/conv frontends, keyed on
+    `autotune.bucket_attn`.
+    """
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError(
+            f"cim_attention wants (B, S, H, D) operands; got q.ndim="
+            f"{q.ndim} k.ndim={k.ndim} v.ndim={v.ndim}")
+    b, sq, heads, hd = q.shape
+    skv, kv_heads = k.shape[1], k.shape[2]
+    if k.shape != (b, skv, kv_heads, hd) or v.shape != k.shape:
+        raise ValueError(f"k/v shape mismatch: {k.shape} vs {v.shape}")
+    if heads % kv_heads:
+        raise ValueError(
+            f"GQA needs H % KH == 0, got {heads} % {kv_heads}")
+    if gp.mode not in ATTN_MODES:
+        raise ValueError(
+            f"cim_attention runs the integer modes {ATTN_MODES}; "
+            f"mode {gp.mode!r} stays on the float attention path")
+    if gp.per_token:
+        raise ValueError(
+            "cim_attention quantizes per-(batch, head); per_token scale "
+            "requests stay on the float attention path")
+    ap = AttnParams(causal=causal, window=window)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(skv, dtype=jnp.int32)[None], (b, skv))
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, skv), jnp.int32)
+    if cached:
+        fkey = (("attn", gp, ap, q.dtype, k.dtype, interpret, block,
+                 jax.default_backend())
+                + autotune.bucket_attn(b, heads, kv_heads, sq, skv, hd))
+        hit = _FAST_CACHE.get(fkey)
+        if hit is not None:
+            run, _ = hit
+            return run(q, k, v, q_positions, kv_positions, kv_valid)
+    plan = plan_attn(gp.family, gp.mode, gp.bits, b, heads, kv_heads, sq,
+                     skv, hd, ap, interpret=interpret, block=block,
+                     spec=gp.spec)
+    if cached:
+        run = _attn_executable_for(gp, plan, q, k, b, heads, kv_heads,
+                                   sq, skv, hd)
+        with _EXEC_LOCK:
+            _FAST_CACHE[fkey] = (run, False)
+        return run(q, k, v, q_positions, kv_positions, kv_valid)
+    return _build_attn_executable(gp, plan)(q, k, v, q_positions,
+                                            kv_positions, kv_valid)
 
 
 # ---------------------------------------------------------------------------

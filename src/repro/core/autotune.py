@@ -130,7 +130,12 @@ def _load_disk(path: str) -> Dict[str, Block]:
         return {}
     out: Dict[str, Block] = {}
     for k, v in raw.items():
-        if (isinstance(v, (list, tuple)) and len(v) == 3
+        # GEMM/conv rows are (bm, bk, bn) triples; attention rows —
+        # recognizable by the ":attn" geometry tag in their cache key —
+        # are (bq, bk) pairs.  Both live in the same file, so the row
+        # arity is validated against the key's kind.
+        want = 2 if isinstance(k, str) and ":attn" in k else 3
+        if (isinstance(v, (list, tuple)) and len(v) == want
                 and all(isinstance(i, int) and not isinstance(i, bool)
                         and i > 0 for i in v)):
             out[k] = tuple(v)
@@ -299,6 +304,157 @@ def best_conv_block(kernel: str, bits: int, b: int, h: int, w: int, c: int,
                     candidate_conv_blocks(kernel, b, c, n),
                     heuristic_conv_block(kernel, b, c, n), measure,
                     cache_file)
+
+
+# ---------------------------------------------------------------------------
+# Attention-shaped resolution (flash-style kernels, kernels/attn_gemm.py)
+# ---------------------------------------------------------------------------
+
+AttnBlock = Tuple[int, int]
+
+# Attention tiles are (bq, bk) pairs: the head dim is padded to the 128
+# lane inside the kernel and is not a tiling degree of freedom.  bk
+# rides the lane dimension of the score tile.
+DEFAULT_ATTN_BLOCKS: Dict[str, AttnBlock] = {
+    "pallas_attn_mxu": (128, 128),
+    "pallas_attn_lut": (32, 128),
+    "pallas_attn_nibble": (64, 128),
+    "pallas_attn_log": (16, 128),
+    # the pure-jnp fallback tiles its kv loop by bk too — the tiling is
+    # part of the bit-identity contract, so it resolves a block like
+    # every other entry (heuristic only; nothing to sweep)
+    "attn_xla": (32, 128),
+}
+
+_ATTN_CANDIDATES: Dict[str, List[AttnBlock]] = {
+    # MXU-bound: native 128x128 score tiles
+    "pallas_attn_mxu": [(128, 128), (64, 128), (128, 256), (256, 128)],
+    # gather-bound: the (bq, k_slice, bk) index temporary scales with
+    # bq, so candidates trade query tile against kv tile
+    "pallas_attn_lut": [(32, 128), (16, 128), (64, 128), (32, 256)],
+    "pallas_attn_nibble": [(64, 128), (32, 128), (128, 128), (64, 256)],
+    # VPU select/shift chains: keep the (bq, k_slice, bk) product
+    # temporaries small
+    "pallas_attn_log": [(16, 128), (16, 64), (32, 128), (8, 128)],
+}
+
+
+def bucket_attn(b: int, heads: int, kv_heads: int, sq: int, skv: int,
+                head_dim: int) -> Tuple[int, ...]:
+    """Attention-shape bucketing (also the dispatch-engine executable
+    cache's shape key, core/approx_gemm.cim_attention): powers of two on
+    batch and the two sequence axes; heads, kv_heads and head_dim kept
+    exact — they change the grid, the GQA index arithmetic and the lane
+    padding, not just tile residency."""
+    return (bucket(b), heads, kv_heads, bucket(sq), bucket(skv), head_dim)
+
+
+def attn_cache_key(kernel: str, bits: int, b: int, heads: int,
+                   kv_heads: int, sq: int, skv: int, head_dim: int,
+                   backend: str) -> str:
+    bb, hh, kh, sqb, skb, hd = bucket_attn(b, heads, kv_heads, sq, skv,
+                                           head_dim)
+    return (f"{kernel}:b{bits}:attn{bb}x{hh}x{kh}x{sqb}x{skb}x{hd}"
+            f":{backend}")
+
+
+def _clip_attn_block(block: AttnBlock, sq: int, skv: int) -> AttnBlock:
+    bq, bk = block
+    return (max(8, min(bq, bucket(sq))), max(8, min(bk, bucket(skv))))
+
+
+def heuristic_attn_block(kernel: str, sq: int, skv: int) -> AttnBlock:
+    return _clip_attn_block(DEFAULT_ATTN_BLOCKS.get(kernel, (32, 128)),
+                            sq, skv)
+
+
+def candidate_attn_blocks(kernel: str, sq: int, skv: int) -> List[AttnBlock]:
+    cands = _ATTN_CANDIDATES.get(
+        kernel, [DEFAULT_ATTN_BLOCKS.get(kernel, (32, 128))])
+    out: List[AttnBlock] = []
+    for cand in cands:
+        clipped = _clip_attn_block(cand, sq, skv)
+        if clipped not in out:
+            out.append(clipped)
+    return out
+
+
+def best_attn_block(kernel: str, bits: int, b: int, heads: int,
+                    kv_heads: int, sq: int, skv: int, head_dim: int,
+                    backend: Optional[str] = None,
+                    measure: Optional[Callable[[AttnBlock], float]] = None,
+                    cache_file: Optional[str] = None) -> AttnBlock:
+    """`best_block` for the flash-attention kernels: same disk cache,
+    same corrupt-cache hardening, attention-shaped key and candidates."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    if measure is None and backend == "tpu":
+        measure = _default_attn_measure(kernel, bits, b, heads, kv_heads,
+                                        sq, skv, head_dim)
+    return _resolve(attn_cache_key(kernel, bits, b, heads, kv_heads, sq,
+                                   skv, head_dim, backend),
+                    candidate_attn_blocks(kernel, sq, skv),
+                    heuristic_attn_block(kernel, sq, skv), measure,
+                    cache_file)
+
+
+def _default_attn_measure(kernel: str, bits: int, b: int, heads: int,
+                          kv_heads: int, sq: int, skv: int,
+                          head_dim: int) -> Callable[[AttnBlock], float]:
+    """Wall-clock measure for the real (non-interpret) attention kernels."""
+    import time
+
+    import jax
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(
+        rng.standard_normal((b, heads, sq, head_dim)).astype(np.float32))
+    k = jnp.asarray(
+        rng.standard_normal((b, kv_heads, skv, head_dim)).astype(np.float32))
+    v = jnp.asarray(
+        rng.standard_normal((b, kv_heads, skv, head_dim)).astype(np.float32))
+    qpos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    kpos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32)[None], (b, skv))
+    kval = jnp.ones((b, skv), jnp.int32)
+
+    def run(block: AttnBlock):
+        from repro.core.multipliers import MultiplierSpec
+        from repro.kernels import ops
+
+        if kernel == "pallas_attn_mxu":
+            return ops.cim_attn_fused(q, k, v, qpos, kpos, kval,
+                                      path="mxu", bits=bits, block=block,
+                                      interpret=False)
+        if kernel == "pallas_attn_lut":
+            spec = MultiplierSpec("appro42", bits, True)
+            return ops.cim_attn_fused(q, k, v, qpos, kpos, kval,
+                                      path="lut", spec=spec, bits=bits,
+                                      block=block, interpret=False)
+        if kernel == "pallas_attn_nibble":
+            spec = MultiplierSpec("exact", bits, True)
+            return ops.cim_attn_fused(q, k, v, qpos, kpos, kval,
+                                      path="nibble", spec=spec, bits=bits,
+                                      block=block, interpret=False)
+        if kernel == "pallas_attn_log":
+            return ops.cim_attn_fused(q, k, v, qpos, kpos, kval,
+                                      path="log", bits=bits, block=block,
+                                      interpret=False)
+        raise ValueError(f"no attn measure recipe for kernel {kernel!r}")
+
+    def measure(block: AttnBlock) -> float:
+        jax.block_until_ready(run(block))          # compile + warm
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run(block))
+        return (time.perf_counter() - t0) / reps
+
+    return measure
 
 
 def _default_measure(kernel: str, bits: int, m: int, k: int,

@@ -48,6 +48,13 @@ class CiMConfig:
     # speculative-decoding verify lane (DESIGN.md §12).  Integer and
     # fake-quant XLA paths only (fused kernels / mesh are gated off).
     per_token: bool = False
+    # route self-attention SDPA through the fused CiM attention kernels
+    # (DESIGN.md §13) in the integer modes.  `attn_heads` optionally
+    # allocates a multiplier family PER QUERY HEAD (tuple of family
+    # names, length n_heads) — the per-head analogue of `apply_to`, so
+    # DSE/tier lanes can spend attention accuracy head by head.
+    attn: bool = False
+    attn_heads: Optional[tuple] = None
     sram: sram_model.SRAMConfig = dataclasses.field(
         default_factory=sram_model.SRAMConfig)
     run_yield: bool = False
@@ -55,6 +62,15 @@ class CiMConfig:
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.attn_heads is not None:
+            if not self.attn:
+                raise ValueError("attn_heads requires attn=True")
+            from .approx_gemm import FAMILIES as _FAMS
+
+            bad = [f for f in self.attn_heads if f not in _FAMS]
+            if bad:
+                raise ValueError(
+                    f"attn_heads families {bad!r} not in {_FAMS}")
 
     @property
     def spec(self) -> MultiplierSpec:

@@ -1,0 +1,572 @@
+"""Pallas TPU kernels: flash-style attention through the approximate
+CiM datapath (DESIGN.md §13).
+
+Attention is the last dense hot path: in hardware mode the QK^T and PV
+matmuls dominate long-context FLOPs, yet until this module they ran as
+plain XLA dots that never touched the quantize-on-load LUT-gather /
+nibble / log-domain datapaths the GEMM and conv kernels share.  Here
+both inner dots route through the same integer product machinery, under
+online-softmax tiling so the (B, H, Sq, Skv) score tensor never exists
+in HBM:
+
+  * **fused** (``attn_fused``) — ONE ``pallas_call`` over a
+    (B, H, Sq/bq, Skv/bk) grid, kv innermost.  Per kv step the kernel
+    quantizes the q/k tiles against per-(batch, head) scales, computes
+    the integer QK^T through the selected datapath (``path`` in
+    {"mxu", "lut", "nibble", "log"}), applies causal/window/ragged
+    validity masking to the score tile in VMEM, runs the online-softmax
+    update (running max m, normalizer l, f32 accumulator in VMEM
+    scratch), quantizes the probability tile at the *fixed* scale
+    ``1/qmax`` and pushes it through the same integer datapath against
+    the quantized V tile, and on the last kv step flushes the
+    ``acc / max(l, eps)`` epilogue.  Only (B, H, Sq, D) touches HBM.
+  * **materialized** (``attn_materialized``) — the bit-exact oracle
+    surface: TWO ``pallas_call``s sharing the exact same score / online
+    update helpers, but writing the full padded (B, H, Sq, Skv) masked
+    score tensor to HBM between them.  Integer products are exactly
+    order-independent and every float expression is evaluated by the
+    same code in the same order, so fused == materialized **bitwise**
+    while the materialized path pays the quadratic HBM round trip the
+    fused path deletes — the honest baseline for ``BENCH_attn.json``.
+  * **reference** (``attn_reference``) — a pure-jnp twin (no Pallas)
+    that loops kv tiles of the same ``bk`` through the same helper
+    expressions on 4D arrays.  It is both the test oracle and the
+    ``attn_xla`` fallback runner for geometries the Pallas kernels
+    decline.
+
+Masking is unified: every entry point takes ``qpos`` (B, Sq) int32
+query positions, ``kpos`` (B, Skv) int32 key positions and ``kval``
+(B, Skv) validity (0 = masked) and builds
+``valid & (causal -> kpos <= qpos) & (window -> kpos > qpos - window)``
+per tile, so dense prefill, ragged prefill and single-token decode are
+all one kernel.  Fully-masked rows are handled by masking the
+probability tile (not just the scores): ``p = where(mask, exp(s - m),
+0)`` — otherwise ``exp(NEG_INF - NEG_INF) = 1`` would resurrect dead
+rows.
+
+Quantization contract: Q scales are per-(batch, q-head), K/V scales
+per-(batch, kv-head) (``attn_scales``).  Head-sliced scales make
+per-head tier composition and GQA head expansion bit-exact: repeating a
+kv head never changes its max.  The probability tile quantizes at the
+fixed scale ``1/qmax`` (p in [0, 1] by construction), so no cross-tile
+scale dependence exists and the online tiling is bit-equivalent to the
+materialized softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .approx_matmul import DEFAULT_K_SLICE, _quantize_tile
+from .mitchell_gemm import _log_product
+
+_LANE = 128
+NEG_INF = -1e30          # finite stand-in for -inf: exp() underflows to 0
+_EPS_L = 1e-30           # normalizer floor for fully-masked rows
+
+ATTN_PATHS = ("mxu", "lut", "nibble", "log")
+
+
+def _sm_scale(head_dim: int) -> float:
+    """The single home of the softmax scale (static python float)."""
+    return 1.0 / math.sqrt(head_dim)
+
+
+# ---------------------------------------------------------------------------
+# batch-generic integer dot helpers
+#
+# `a` is (..., M, K), `b` is (..., K, N), both int32; the result is the
+# int32 (..., M, N) approximate product-sum.  The same code serves the
+# 2D in-kernel tiles and the 4D pure-jnp reference: integer sums are
+# exactly associative, so any tiling of the contraction is bit-equal.
+# ---------------------------------------------------------------------------
+
+
+def _dot_mxu(a, b):
+    """Exact dot through f32 (the MXU path).
+
+    Exact iff every partial sum is f32-representable, i.e.
+    ``qmax^2 * K < 2^24`` — enforced by the planner's bit-safety
+    predicate (core/approx_gemm._attn_bit_safe).
+    """
+    return jnp.einsum("...mk,...kn->...mn", a.astype(jnp.float32),
+                      b.astype(jnp.float32)).astype(jnp.int32)
+
+
+def _dot_lut(table, a, b, bits, k_slice):
+    """Full-LUT gather: each scalar pair indexes the 2^{2b} table.
+
+    The gather materializes a (..., M, ks, N) index tensor, so the
+    contraction is sliced by ``k_slice`` exactly like the GEMM kernels.
+    """
+    half = 1 << (bits - 1)
+    n = 1 << bits
+    ia = a + half
+    ib = b + half
+    kk = a.shape[-1]
+    acc = None
+    for s in range(0, kk, k_slice):
+        e = min(s + k_slice, kk)
+        idx = ia[..., :, s:e, None] * n + ib[..., None, s:e, :]
+        part = jnp.take(table, idx, axis=0).sum(axis=-2, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _dot_nibble(table, a, b, bits, k_slice):
+    """Nibble sub-LUT gather: sign-magnitude half-word decomposition."""
+    h = bits // 2
+    hb = 1 << h
+    sz = hb * hb
+    qm = (1 << (bits - 1)) - 1
+    sa = jnp.sign(a)
+    sb = jnp.sign(b)
+    am = jnp.minimum(jnp.abs(a), qm)
+    bm = jnp.minimum(jnp.abs(b), qm)
+    a_hi, a_lo = am >> h, am & (hb - 1)
+    b_hi, b_lo = bm >> h, bm & (hb - 1)
+    kk = a.shape[-1]
+    acc = None
+    for s in range(0, kk, k_slice):
+        e = min(s + k_slice, kk)
+        ah = a_hi[..., :, s:e, None]
+        al = a_lo[..., :, s:e, None]
+        bh = b_hi[..., None, s:e, :]
+        bl = b_lo[..., None, s:e, :]
+        mag = (jnp.take(table, ah * hb + bh, axis=0)
+               + jnp.take(table, sz + ah * hb + bl, axis=0)
+               + jnp.take(table, 2 * sz + al * hb + bh, axis=0)
+               + jnp.take(table, 3 * sz + al * hb + bl, axis=0))
+        prods = sa[..., :, s:e, None] * sb[..., None, s:e, :] * mag
+        part = prods.sum(axis=-2, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _dot_log(a, b, bits, compensated, k_slice):
+    """Log-domain (Mitchell / Log-our) product-sum, no table."""
+    kk = a.shape[-1]
+    acc = None
+    for s in range(0, kk, k_slice):
+        e = min(s + k_slice, kk)
+        prods = _log_product(a[..., :, s:e, None], b[..., None, s:e, :],
+                             bits, compensated)
+        part = prods.sum(axis=-2, dtype=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def _int_dot(a, b, table, *, path, bits, compensated, k_slice):
+    if path == "mxu":
+        return _dot_mxu(a, b)
+    if path == "lut":
+        return _dot_lut(table, a, b, bits, k_slice)
+    if path == "nibble":
+        return _dot_nibble(table, a, b, bits, k_slice)
+    if path == "log":
+        return _dot_log(a, b, bits, compensated, k_slice)
+    raise ValueError(f"unknown attention datapath {path!r}; "
+                     f"expected one of {ATTN_PATHS}")
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+
+
+def _tile_mask(qp, kp, kv, causal, window):
+    """(bq,) x (bk,) positions -> (bq, bk) bool validity (in-kernel)."""
+    m = kv[None, :] != 0
+    if causal:
+        m = m & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        m = m & (kp[None, :] > qp[:, None] - window)
+    return m
+
+
+def _mask4(qp, kp, kv, causal, window):
+    """(B, Sq) x (B, Skv) positions -> (B, 1, Sq, Skv) bool (reference)."""
+    m = kv[:, None, None, :] != 0
+    if causal:
+        m = m & (kp[:, None, None, :] <= qp[:, None, :, None])
+    if window is not None:
+        m = m & (kp[:, None, None, :] > qp[:, None, :, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# shared score / online-softmax steps (the bit-identity contract: fused,
+# materialized and reference all run THESE expressions, in this order)
+# ---------------------------------------------------------------------------
+
+
+def _score_step(q, k, sq_s, sk_s, mask, table, *, path, bits, compensated,
+                k_slice, sm_scale):
+    """Quantize q/k, integer QK^T, dequant + softmax scale, mask."""
+    qm = (1 << (bits - 1)) - 1
+    qi = _quantize_tile(q, sq_s, qm)
+    ki = _quantize_tile(k, sk_s, qm)
+    qk = _int_dot(qi, ki.swapaxes(-1, -2), table, path=path, bits=bits,
+                  compensated=compensated, k_slice=k_slice)
+    s = qk.astype(jnp.float32) * ((sq_s * sk_s) * sm_scale)
+    return jnp.where(mask, s, NEG_INF)
+
+
+def _online_step(s, mask, v, sv_s, m_prev, l_prev, acc_prev, table, *,
+                 path, bits, compensated, k_slice):
+    """One online-softmax update against a masked score tile."""
+    qm = (1 << (bits - 1)) - 1
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    # mask the PROBABILITY tile: on a fully-masked row s == m_new ==
+    # NEG_INF and exp(0) = 1 would be wrong — the mask, not the score
+    # value, is authoritative.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pq = jnp.round(p * qm).astype(jnp.int32)
+    vi = _quantize_tile(v, sv_s, qm)
+    pv = _int_dot(pq, vi, table, path=path, bits=bits,
+                  compensated=compensated, k_slice=k_slice)
+    acc_new = acc_prev * corr + pv.astype(jnp.float32) * (sv_s / qm)
+    return m_new, l_new, acc_new
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_kernel(sq_ref, sk_ref, sv_ref, q_ref, k_ref, v_ref, qp_ref,
+                 kp_ref, kv_ref, tab_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 path, bits, causal, window, compensated, k_slice,
+                 sm_scale, group):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    sq_s = sq_ref[b, h]
+    sk_s = sk_ref[b, h // group]
+    sv_s = sv_ref[b, h // group]
+    tab = tab_ref[...]
+
+    mask = _tile_mask(qp_ref[0], kp_ref[0], kv_ref[0], causal, window)
+    s = _score_step(q_ref[0, 0], k_ref[0, 0], sq_s, sk_s, mask, tab,
+                    path=path, bits=bits, compensated=compensated,
+                    k_slice=k_slice, sm_scale=sm_scale)
+    m_new, l_new, acc_new = _online_step(
+        s, mask, v_ref[0, 0], sv_s, m_ref[...][:, :1], l_ref[...][:, :1],
+        acc_ref[...], tab, path=path, bits=bits, compensated=compensated,
+        k_slice=k_slice)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+    acc_ref[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...][:, :1], _EPS_L)
+
+
+def _scores_kernel(sq_ref, sk_ref, q_ref, k_ref, qp_ref, kp_ref, kv_ref,
+                   tab_ref, o_ref, *, path, bits, causal, window,
+                   compensated, k_slice, sm_scale, group):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    mask = _tile_mask(qp_ref[0], kp_ref[0], kv_ref[0], causal, window)
+    o_ref[0, 0] = _score_step(
+        q_ref[0, 0], k_ref[0, 0], sq_ref[b, h], sk_ref[b, h // group],
+        mask, tab_ref[...], path=path, bits=bits, compensated=compensated,
+        k_slice=k_slice, sm_scale=sm_scale)
+
+
+def _pv_kernel(sv_ref, s_ref, v_ref, qp_ref, kp_ref, kv_ref, tab_ref,
+               o_ref, m_ref, l_ref, acc_ref, *, path, bits, causal,
+               window, compensated, k_slice, group):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    # the mask is recomputed from positions, NOT recovered from the
+    # stored NEG_INF scores: on a fully-masked row every score equals
+    # NEG_INF and the score value alone cannot distinguish "masked"
+    # from "valid but tiny".
+    mask = _tile_mask(qp_ref[0], kp_ref[0], kv_ref[0], causal, window)
+    m_new, l_new, acc_new = _online_step(
+        s_ref[0, 0], mask, v_ref[0, 0], sv_ref[b, h // group],
+        m_ref[...][:, :1], l_ref[...][:, :1], acc_ref[...], tab_ref[...],
+        path=path, bits=bits, compensated=compensated, k_slice=k_slice)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+    acc_ref[...] = acc_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...][:, :1], _EPS_L)
+
+
+# ---------------------------------------------------------------------------
+# padding + pallas_call plumbing
+# ---------------------------------------------------------------------------
+
+
+def _pad_attn(q, k, v, qpos, kpos, kval, block):
+    """Zero-pad Sq/Skv to block multiples and D to the 128 lane.
+
+    Zero padding annihilates in every family (the (0, 0) table entry is
+    0 and the log product zero-guards), padded kv rows carry kval = 0
+    (masked), and padded q rows are sliced off the output.
+    """
+    bq, bk = block
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    dp = max(_LANE, -(-d // _LANE) * _LANE)
+    sqp = -(-sq // bq) * bq
+    skvp = -(-skv // bk) * bk
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, dp - d)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, dp - d)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, dp - d)))
+    qpos = jnp.pad(qpos.astype(jnp.int32), ((0, 0), (0, sqp - sq)))
+    kpos = jnp.pad(kpos.astype(jnp.int32), ((0, 0), (0, skvp - skv)))
+    kval = jnp.pad(kval.astype(jnp.int32), ((0, 0), (0, skvp - skv)))
+    return q, k, v, qpos, kpos, kval, dp, sqp, skvp
+
+
+def _tab_or_dummy(table):
+    if table is None:
+        return jnp.zeros((1,), jnp.int32)
+    return jnp.asarray(table, jnp.int32)
+
+
+def _common_specs(bq, bk, dp, group, tab_len):
+    """(q, k, v, qpos, kpos, kval, table) BlockSpecs for the 4D grid."""
+    return [
+        pl.BlockSpec((1, 1, bq, dp), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        pl.BlockSpec((1, 1, bk, dp),
+                     lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+        pl.BlockSpec((1, 1, bk, dp),
+                     lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+        pl.BlockSpec((1, bq), lambda bb, hh, qi, ki: (bb, qi)),
+        pl.BlockSpec((1, bk), lambda bb, hh, qi, ki: (bb, ki)),
+        pl.BlockSpec((1, bk), lambda bb, hh, qi, ki: (bb, ki)),
+        pl.BlockSpec((tab_len,), lambda bb, hh, qi, ki: (0,)),
+    ]
+
+
+_SMEM = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("path", "bits", "causal", "window", "compensated",
+                     "block", "interpret", "k_slice"))
+def attn_fused(q, k, v, sq_s, sk_s, sv_s, qpos, kpos, kval, table=None, *,
+               path, bits=8, causal=True, window=None, compensated=True,
+               block=(32, 128), interpret=True, k_slice=DEFAULT_K_SLICE):
+    """One-HBM-pass flash attention through the approximate datapath.
+
+    q (B, H, Sq, D) f32; k/v (B, KH, Skv, D) f32 with H % KH == 0;
+    sq_s (B, H), sk_s/sv_s (B, KH) per-head quantization scales
+    (``attn_scales``); qpos (B, Sq), kpos/kval (B, Skv) int32.
+    Returns f32 (B, H, Sq, D).
+    """
+    b, h, sq, d = q.shape
+    group = h // k.shape[1]
+    bq, bk = block
+    qf, kf, vf, qp, kp, kv_, dp, sqp, skvp = _pad_attn(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), qpos, kpos, kval, block)
+    tab = _tab_or_dummy(table)
+    kernel = functools.partial(
+        _attn_kernel, path=path, bits=bits, causal=causal, window=window,
+        compensated=compensated, k_slice=k_slice, sm_scale=_sm_scale(d),
+        group=group)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, sqp // bq, skvp // bk),
+        in_specs=[_SMEM(), _SMEM(), _SMEM()]
+        + _common_specs(bq, bk, dp, group, tab.shape[0]),
+        out_specs=pl.BlockSpec((1, 1, bq, dp),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, _LANE), jnp.float32),
+                        pltpu.VMEM((bq, _LANE), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
+        interpret=interpret,
+    )(sq_s.astype(jnp.float32), sk_s.astype(jnp.float32),
+      sv_s.astype(jnp.float32), qf, kf, vf, qp, kp, kv_, tab)
+    return out[:, :, :sq, :d]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("path", "bits", "causal", "window", "compensated",
+                     "block", "interpret", "k_slice"))
+def attn_materialized(q, k, v, sq_s, sk_s, sv_s, qpos, kpos, kval,
+                      table=None, *, path, bits=8, causal=True,
+                      window=None, compensated=True, block=(32, 128),
+                      interpret=True, k_slice=DEFAULT_K_SLICE):
+    """The materialized oracle: identical math, quadratic HBM traffic.
+
+    Two pallas_calls sharing ``_score_step`` / ``_online_step`` with
+    the fused kernel; the full padded (B, H, Sq, Skv) masked score
+    tensor round-trips through HBM between them.  Bit-identical to
+    ``attn_fused`` by construction.
+    """
+    b, h, sq, d = q.shape
+    group = h // k.shape[1]
+    bq, bk = block
+    qf, kf, vf, qp, kp, kv_, dp, sqp, skvp = _pad_attn(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), qpos, kpos, kval, block)
+    tab = _tab_or_dummy(table)
+    grid = (b, h, sqp // bq, skvp // bk)
+    common = _common_specs(bq, bk, dp, group, tab.shape[0])
+    score_kernel = functools.partial(
+        _scores_kernel, path=path, bits=bits, causal=causal, window=window,
+        compensated=compensated, k_slice=k_slice, sm_scale=_sm_scale(d),
+        group=group)
+    scores = pl.pallas_call(
+        score_kernel,
+        grid=grid,
+        in_specs=[_SMEM(), _SMEM(), common[0], common[1], common[3],
+                  common[4], common[5], common[6]],
+        out_specs=pl.BlockSpec((1, 1, bq, bk),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, ki)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, skvp), jnp.float32),
+        interpret=interpret,
+    )(sq_s.astype(jnp.float32), sk_s.astype(jnp.float32), qf, kf,
+      qp, kp, kv_, tab)
+    pv_kernel = functools.partial(
+        _pv_kernel, path=path, bits=bits, causal=causal, window=window,
+        compensated=compensated, k_slice=k_slice, group=group)
+    out = pl.pallas_call(
+        pv_kernel,
+        grid=grid,
+        in_specs=[_SMEM(),
+                  pl.BlockSpec((1, 1, bq, bk),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, ki)),
+                  common[2], common[3], common[4], common[5], common[6]],
+        out_specs=pl.BlockSpec((1, 1, bq, dp),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, _LANE), jnp.float32),
+                        pltpu.VMEM((bq, _LANE), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
+        interpret=interpret,
+    )(sv_s.astype(jnp.float32), scores, vf, qp, kp, kv_, tab)
+    return out[:, :, :sq, :d]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("path", "bits", "causal", "window", "compensated",
+                     "block", "k_slice"))
+def attn_reference(q, k, v, sq_s, sk_s, sv_s, qpos, kpos, kval,
+                   table=None, *, path, bits=8, causal=True, window=None,
+                   compensated=True, block=(32, 128),
+                   k_slice=DEFAULT_K_SLICE):
+    """Pure-jnp twin of the fused kernel (test oracle + XLA fallback).
+
+    Loops kv tiles of the same ``bk`` through the same
+    ``_score_step`` / ``_online_step`` expressions on 4D arrays;
+    bit-identical to the Pallas kernels on any backend.
+    """
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    bk = block[1]
+    skv = k.shape[2]
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    sqb = sq_s.astype(jnp.float32)[:, :, None, None]
+    skb = jnp.repeat(sk_s.astype(jnp.float32), group, axis=1)[:, :, None, None]
+    svb = jnp.repeat(sv_s.astype(jnp.float32), group, axis=1)[:, :, None, None]
+    skvp = -(-skv // bk) * bk
+    kf = jnp.pad(kf, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    kp = jnp.pad(kpos.astype(jnp.int32), ((0, 0), (0, skvp - skv)))
+    kv_ = jnp.pad(kval.astype(jnp.int32), ((0, 0), (0, skvp - skv)))
+    qp = qpos.astype(jnp.int32)
+    tab = _tab_or_dummy(table)
+    sm = _sm_scale(d)
+    m = jnp.full((b, h, sq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, h, sq, 1), jnp.float32)
+    acc = jnp.zeros((b, h, sq, d), jnp.float32)
+    for s0 in range(0, skvp, bk):
+        mask = _mask4(qp, kp[:, s0:s0 + bk], kv_[:, s0:s0 + bk],
+                      causal, window)
+        s = _score_step(qf, kf[:, :, s0:s0 + bk], sqb, skb, mask, tab,
+                        path=path, bits=bits, compensated=compensated,
+                        k_slice=k_slice, sm_scale=sm)
+        m, l, acc = _online_step(s, mask, vf[:, :, s0:s0 + bk], svb,
+                                 m, l, acc, tab, path=path, bits=bits,
+                                 compensated=compensated, k_slice=k_slice)
+    return acc / jnp.maximum(l, _EPS_L)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attn_float(q, k, v, qpos, kpos, kval, *, causal=True, window=None):
+    """Plain f32 masked softmax attention — the STE backward reference.
+
+    Same layout/masking contract as the quantized entry points; this is
+    the function the custom-VJP backward differentiates (exact float
+    gradients, straight-through past quantization).
+    """
+    group = q.shape[1] // k.shape[1]
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    mask = _mask4(qpos.astype(jnp.int32), kpos.astype(jnp.int32),
+                  kval.astype(jnp.int32), causal, window)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * _sm_scale(q.shape[-1])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.where(mask, jax.nn.softmax(s, axis=-1), 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+
+
+def attn_scales(q, k, v, bits):
+    """Per-(batch, head) quantization scales, mirroring quant_scale.
+
+    q (B, H, Sq, D) -> (B, H); k/v (B, KH, Skv, D) -> (B, KH).
+    Head-sliced maxima make GQA head expansion and per-head tier
+    composition bit-exact: slicing or repeating heads never changes a
+    head's own max.
+    """
+    qm = (1 << (bits - 1)) - 1
+
+    def one(x):
+        m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(2, 3))
+        return jnp.maximum(m, 1e-8) / qm
+
+    return one(q), one(k), one(v)
+
+
+__all__ = [
+    "ATTN_PATHS",
+    "NEG_INF",
+    "attn_float",
+    "attn_fused",
+    "attn_materialized",
+    "attn_reference",
+    "attn_scales",
+]

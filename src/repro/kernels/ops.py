@@ -28,6 +28,8 @@ from repro.core.luts import nibble_sub_luts, signed_product_lut
 from repro.core.multipliers import MultiplierSpec
 from repro.core.quantization import quant_scale
 
+from .attn_gemm import (attn_fused, attn_materialized, attn_reference,
+                        attn_scales)
 from .approx_matmul import (lut_matmul, lut_matmul_fused,
                             lut_matmul_partial, nibble_lut_matmul,
                             nibble_lut_matmul_fused,
@@ -387,6 +389,102 @@ def conv2d_log_fused_scaled(x, w3, sx, sw, bits: int = 8,
                           stride=stride, block=block, interpret=interp)
 
 
+# ---------------------------------------------------------------------------
+# Flash-style CiM attention (kernels/attn_gemm.py, DESIGN.md §13).
+#
+# All three wrappers share one signature: q (B, H, Sq, D) and k/v
+# (B, KH, Skv, D) float operands in the kernel-native head-major
+# layout, qpos (B, Sq) / kpos, kval (B, Skv) int32 position/validity
+# operands, and a `path` selecting the inner-dot datapath.  Scales are
+# computed here (per-(batch, head), attn_gemm.attn_scales) so callers
+# hand over raw activations exactly like the fused GEMM entry points.
+# ---------------------------------------------------------------------------
+
+_ATTN_KERNELS = {"mxu": "pallas_attn_mxu", "lut": "pallas_attn_lut",
+                 "nibble": "pallas_attn_nibble", "log": "pallas_attn_log"}
+
+
+def _resolve_attn_block(kernel: str, bits: int, b, heads, kv_heads, sq,
+                        skv, head_dim, block):
+    if block is not None:
+        return tuple(block)
+    return autotune.best_attn_block(kernel, bits, b, heads, kv_heads, sq,
+                                    skv, head_dim)
+
+
+def _attn_table(path: str, spec: Optional[MultiplierSpec]):
+    if path in ("lut", "nibble"):
+        if spec is None:
+            raise ValueError(f"attention path {path!r} needs a "
+                             "MultiplierSpec to build its table")
+        getter = _lut_for if path == "lut" else _subs_for
+        return getter(spec.family, spec.bits, spec.compressor,
+                      spec.n_approx_cols)
+    return None
+
+
+def _attn_args(q, k, v, path, spec, bits, block, kernel=None):
+    bits = spec.bits if spec is not None else bits
+    b, h, sq, hd = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    kernel = kernel or _ATTN_KERNELS[path]
+    block = _resolve_attn_block(kernel, bits, b, h, kh, sq, skv, hd, block)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sq_s, sk_s, sv_s = attn_scales(qf, kf, vf, bits)
+    return qf, kf, vf, sq_s, sk_s, sv_s, _attn_table(path, spec), bits, block
+
+
+def cim_attn_fused(q, k, v, qpos, kpos, kval, *, path: str,
+                   spec: Optional[MultiplierSpec] = None, bits: int = 8,
+                   causal: bool = True, window: Optional[int] = None,
+                   compensated: bool = True, block=None,
+                   interpret: Optional[bool] = None):
+    """One-HBM-pass flash attention through the approximate datapath."""
+    interp = default_interpret() if interpret is None else interpret
+    qf, kf, vf, sq_s, sk_s, sv_s, tab, bits, block = _attn_args(
+        q, k, v, path, spec, bits, block)
+    return attn_fused(qf, kf, vf, sq_s, sk_s, sv_s, qpos, kpos, kval, tab,
+                      path=path, bits=bits, causal=causal, window=window,
+                      compensated=compensated, block=block,
+                      interpret=interp)
+
+
+def cim_attn_materialized(q, k, v, qpos, kpos, kval, *, path: str,
+                          spec: Optional[MultiplierSpec] = None,
+                          bits: int = 8, causal: bool = True,
+                          window: Optional[int] = None,
+                          compensated: bool = True, block=None,
+                          interpret: Optional[bool] = None):
+    """The bit-exact materialized oracle: same math, the full
+    (B, H, Sq, Skv) score tensor round-trips through HBM."""
+    interp = default_interpret() if interpret is None else interpret
+    qf, kf, vf, sq_s, sk_s, sv_s, tab, bits, block = _attn_args(
+        q, k, v, path, spec, bits, block)
+    return attn_materialized(qf, kf, vf, sq_s, sk_s, sv_s, qpos, kpos,
+                             kval, tab, path=path, bits=bits,
+                             causal=causal, window=window,
+                             compensated=compensated, block=block,
+                             interpret=interp)
+
+
+def cim_attn_reference(q, k, v, qpos, kpos, kval, *, path: str,
+                       spec: Optional[MultiplierSpec] = None,
+                       bits: int = 8, causal: bool = True,
+                       window: Optional[int] = None,
+                       compensated: bool = True, block=None):
+    """Pure-jnp twin (no Pallas): the ``attn_xla`` fallback runner and
+    the test oracle — bit-identical to the Pallas kernels because its
+    kv loop tiles by the same ``bk`` through the same expressions."""
+    qf, kf, vf, sq_s, sk_s, sv_s, tab, bits, block = _attn_args(
+        q, k, v, path, spec, bits, block, kernel="attn_xla")
+    return attn_reference(qf, kf, vf, sq_s, sk_s, sv_s, qpos, kpos, kval,
+                          tab, path=path, bits=bits, causal=causal,
+                          window=window, compensated=compensated,
+                          block=block)
+
+
 def surrogate_gemm(xq, wq, sx, sw, eps, mu, c0, c1,
                    block=None, interpret: Optional[bool] = None):
     """Fused production surrogate GEMM (int-in oracle surface)."""
@@ -416,5 +514,6 @@ __all__ = ["approx_matmul_bit_exact", "approx_matmul_fused",
            "conv2d_mxu_fused", "conv2d_lut_fused", "conv2d_nibble_fused",
            "conv2d_log_fused", "conv2d_lut_partial", "conv2d_log_partial",
            "conv2d_lut_fused_scaled", "conv2d_log_fused_scaled",
+           "cim_attn_fused", "cim_attn_materialized", "cim_attn_reference",
            "surrogate_gemm", "surrogate_gemm_fused",
            "cim_gemm_core", "default_interpret"]

@@ -100,17 +100,25 @@ def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
     skv, kh = k.shape[1], k.shape[2]
     dv = v.shape[-1]
     g = h // kh
-    qc = min(q_chunk, sq)
-    while sq % qc:
-        qc -= 1
-    # pad KV to a chunk multiple (a 1601-token cross stream must NOT
-    # shrink the chunk to its largest divisor = 1); padded positions are
-    # masked by kv_len_valid below
-    kc = min(kv_chunk, skv)
-    pad_kv = (-skv) % kc
     qpos_arr = kpos_arr = kval_arr = None
     if seq_info is not None:
         qpos_arr, kpos_arr, kval_arr = seq_info
+    # pad q to a chunk multiple, mirroring the KV axis below (a prime Sq,
+    # e.g. a 1601-token stream, must NOT shrink the chunk to its largest
+    # divisor = 1 row); per-query online softmax is independent of the q
+    # chunking, so the sliced result is bit-identical to the unpadded one
+    qc = min(q_chunk, sq)
+    sq_out = sq
+    pad_q = (-sq) % qc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        if seq_info is not None:       # padded queries: position 0 (their
+            qpos_arr = jnp.pad(qpos_arr, ((0, 0), (0, pad_q)))  # rows are
+        sq += pad_q                    # sliced off the output below)
+    # pad KV to a chunk multiple; padded positions are masked by
+    # kv_len_valid below
+    kc = min(kv_chunk, skv)
+    pad_kv = (-skv) % kc
     if pad_kv:
         kv_len_valid = jnp.minimum(kv_len_valid, skv)
         k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
@@ -192,8 +200,70 @@ def _chunked_attn(q, k, v, q_chunk: int, kv_chunk: int, causal: bool,
         return None, o
 
     _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))
-    # chunks: (nq, b, qc, h, dv) -> (b, sq, h, dv)
-    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+    # chunks: (nq, b, qc, h, dv) -> (b, sq, h, dv); drop q padding
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)[:, :sq_out]
+
+
+def _use_cim_attn(p, is_cross: bool) -> bool:
+    """Route this SDPA through the fused CiM attention kernels?
+
+    Integer modes only (float modes keep the XLA flash path), self-
+    attention only, and never under an ambient mesh — the mesh lanes
+    shard the projections but attention stays per-device (DESIGN.md
+    §13 lists cross-attention / mesh as oracle-fallback geometries)."""
+    from .common import _ambient_mesh
+
+    return (getattr(p, "attn", False)
+            and p.mode in ("hardware", "bit_exact")
+            and not is_cross and _ambient_mesh() is None)
+
+
+def _cim_sdpa(q, k, v, p, *, causal, window, qpos, kpos, kval):
+    """SDPA through core.approx_gemm.cim_attention (DESIGN.md §13).
+
+    q: (B, Sq, H, D) float; k/v: (B, Skv, KH, D); qpos (B, Sq),
+    kpos (B, Skv) int32 positions, kval (B, Skv) validity.  Returns the
+    f32 attention output, or None when the dispatch engine rejects the
+    geometry (the caller keeps the float path — the engine raising is
+    the documented fallback contract, not an error).
+
+    Per-head tier allocation (``p.attn_heads``: one family name per q
+    head): K/V expand to the per-q-head MHA layout — bit-consistent with
+    the grouped run because quantization scales are per-head — then each
+    family's head subset runs one fused call and scatters back."""
+    from repro.core.approx_gemm import GemmParams, cim_attention
+
+    def gp_for(family):
+        # per_token is a linear-layer activation-row contract; attention
+        # scales are already per-(batch, head) = per-sequence, so the
+        # batch-invariance the verify lane needs holds without it
+        return GemmParams(family=family, bits=p.bits, mode=p.mode,
+                          mu=p.mu, c0=p.c0, c1=p.c1,
+                          compressor=p.compressor,
+                          n_approx_cols=p.n_approx_cols)
+
+    kw = dict(causal=causal, window=window, q_positions=qpos,
+              kv_positions=kpos, kv_valid=kval)
+    h, kh = q.shape[2], k.shape[2]
+    heads = getattr(p, "attn_heads", None)
+    if heads is not None and len(heads) != h:
+        raise ValueError(
+            f"attn_heads has {len(heads)} entries for {h} query heads")
+    try:
+        if heads is None:
+            return cim_attention(q, k, v, gp_for(p.family), **kw)
+        g = h // kh
+        ke = jnp.repeat(k, g, axis=2)
+        ve = jnp.repeat(v, g, axis=2)
+        out = jnp.zeros(q.shape[:3] + (v.shape[-1],), jnp.float32)
+        for fam in dict.fromkeys(heads):
+            idx = jnp.asarray([i for i, f in enumerate(heads) if f == fam])
+            o = cim_attention(q[:, :, idx], ke[:, :, idx], ve[:, :, idx],
+                              gp_for(fam), **kw)
+            out = out.at[:, :, idx].set(o)
+        return out
+    except ValueError:
+        return None                    # unsupported geometry: float path
 
 
 def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
@@ -242,9 +312,16 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
         seq_info = (positions, positions, valid)
 
     if cache is None:
-        y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
-                          q_offset=0, kv_len_valid=k.shape[1],
-                          seq_info=seq_info)
+        y = None
+        if _use_cim_attn(ctx.p, is_cross or x_kv is not None):
+            kva = valid if valid is not None else \
+                jnp.ones(positions.shape, jnp.int32)
+            y = _cim_sdpa(q, k, v, ctx.p, causal=causal, window=window,
+                          qpos=positions, kpos=positions, kval=kva)
+        if y is None:
+            y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
+                              q_offset=0, kv_len_valid=k.shape[1],
+                              seq_info=seq_info)
         return _out_proj(params, y.astype(x.dtype), ctx), None
 
     # caches store K/V flattened to (B, T, KH*D): the flat dim shards
@@ -324,9 +401,16 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
                           axis=1)
             cv = jnp.roll(vf[:, p0:].astype(cache["v"].dtype), p0 % t,
                           axis=1)
-        y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
-                          q_offset=0, kv_len_valid=k.shape[1],
-                          seq_info=seq_info)
+        y = None
+        if _use_cim_attn(ctx.p, is_cross):
+            kva = valid if valid is not None else \
+                jnp.ones(positions.shape, jnp.int32)
+            y = _cim_sdpa(q, k, v, ctx.p, causal=causal, window=window,
+                          qpos=positions, kpos=positions, kval=kva)
+        if y is None:
+            y = _chunked_attn(q, k, v, q_chunk, kv_chunk, causal, window,
+                              q_offset=0, kv_len_valid=k.shape[1],
+                              seq_info=seq_info)
         if valid is not None:
             # per-slot fill level: pad tokens don't count (right-padded
             # prompts resume decoding at their true length; see
@@ -390,6 +474,19 @@ def attention_block(params, x, *, n_heads, n_kv_heads, head_dim,
     # materialize (and reshard) the whole cache every step
     ck4 = ck.reshape(b, t, kh, head_dim)
     cv4 = cv.reshape(b, t, kh, head_dim)
+    if not is_cross and window is None and _use_cim_attn(ctx.p, is_cross):
+        # dense decode: causal(qpos=pos) + fill-level validity reproduce
+        # the kv_ok mask exactly; window-ring decode keeps the XLA path
+        # (ring slot order scrambles the positional coordinates)
+        qpos_d = pos[:, None].astype(jnp.int32) if per_slot else \
+            jnp.full((b, 1), pos, jnp.int32)
+        kpos_d = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        kval_d = kv_ok if kv_ok.ndim == 2 else \
+            jnp.broadcast_to(kv_ok, (b, t))
+        o = _cim_sdpa(q, ck4, cv4, ctx.p, causal=True, window=None,
+                      qpos=qpos_d, kpos=kpos_d, kval=kval_d)
+        if o is not None:
+            return _out_proj(params, o.astype(x.dtype), ctx), new_cache
     qg = q.reshape(b, 1, kh, g, head_dim).astype(ck.dtype)
     # NB: bf16 einsums + f32 softmax — XLA:CPU cannot *execute*
     # bf16xbf16->f32 dots, and TPU MXUs accumulate bf16 dots in f32

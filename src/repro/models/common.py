@@ -203,6 +203,8 @@ class CiMParams:
     n_approx_cols: Optional[int] = None
     apply_to: tuple = ()         # name prefixes; () = every matmul
     per_token: bool = False      # per-row activation scales (DESIGN.md §12)
+    attn: bool = False           # fused CiM attention (DESIGN.md §13)
+    attn_heads: Optional[tuple] = None   # per-q-head family allocation
 
     @classmethod
     def from_config(cls, cim: Optional[CiMConfig]) -> "CiMParams":
@@ -210,12 +212,15 @@ class CiMParams:
             return cls()
         macro: CiMMacro = compile_macro(cim)
         s = macro.surrogate
+        ah = getattr(cim, "attn_heads", None)
         return cls(mode=cim.mode, bits=cim.bits, family=cim.family,
                    mu=s.mu_rel, c0=s.c0_abs, c1=s.c1_rel,
                    compressor=cim.compressor,
                    n_approx_cols=cim.n_approx_cols,
                    apply_to=tuple(getattr(cim, "apply_to", ())),
-                   per_token=bool(getattr(cim, "per_token", False)))
+                   per_token=bool(getattr(cim, "per_token", False)),
+                   attn=bool(getattr(cim, "attn", False)),
+                   attn_heads=tuple(ah) if ah is not None else None)
 
     def gemm_params(self) -> GemmParams:
         return GemmParams(family=self.family, bits=self.bits,
