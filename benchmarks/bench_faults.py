@@ -1,0 +1,263 @@
+"""Fault-to-degradation benchmark -> BENCH_faults.json (DESIGN.md §14).
+
+Closes the variation-aware loop end to end: stuck-at defects are
+injected into the approximate tiers' stored LUTs + weight words at
+multiples of the MNIS-characterized failure probability (Table V,
+`core/yield_analysis.py`), a sentinel-armed engine serves a Poisson
+workload over the faulted ladder, and the rows record what the
+containment machinery delivers:
+
+  * **detection latency** — tokens emitted by each faulty lane before
+    its sentinel tripped (the corruption exposure window);
+  * **goodput** — completed-request tokens/s after trip + demotion
+    (failed requests, of which there must be none, would not count);
+  * **output integrity** — every request that finished on the exact
+    lane (demoted or routed there) is token-for-token identical to an
+    exact-lane-only run of the same workload;
+  * **zero failed requests** and **zero steady-state retraces**: the
+    trip -> quarantine -> demote -> restart path runs entirely on
+    pre-warmed executables.
+
+A `recovery` section exercises the other half of the breaker state
+machine on a healthy ladder: a forced trip, the half-open verification
+burst, and re-admission — also retrace-free.
+
+The rate=0.0 row is the false-positive control: a sentinel-armed clean
+ladder must serve the whole workload without a single trip.
+
+Off TPU the tokens/s are a CPU trend line (PR-3 convention); smoke mode
+shrinks the sweep and writes BENCH_faults.smoke.json, never clobbering
+the committed trajectory JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+OUT_PATH = os.path.join(_DIR, "BENCH_faults.json")
+OUT_PATH_SMOKE = os.path.join(_DIR, "BENCH_faults.smoke.json")
+
+ARCH = "qwen3-1.7b"
+YIELD_ROWS = 32          # Table V geometry whose Pf anchors the sweep
+
+
+def _build(cfg, params, tiers, *, fault=None, sentinel_cfg=None,
+           smoke=False):
+    from repro.serving import build_engine
+
+    return build_engine(
+        cfg, params, tiers=tiers, slots_per_tier=2,
+        max_len=48 if smoke else 64, prompt_buckets=(8,),
+        group_buckets=(1, 2), fault=fault, sentinel_cfg=sentinel_cfg,
+        retry_budget=3)
+
+
+def _workload(cfg, n, seed):
+    from repro.serving import poisson_workload
+
+    mix = (("exact", None, 0.2), ("balanced", None, 0.4),
+           ("economy", None, 0.4))
+    return poisson_workload(n, 600.0, cfg.vocab, prompt_len=(4, 8),
+                            max_new=(6, 12), tier_mix=mix, seed=seed)
+
+
+def _rate_row(cfg, params, tiers, exact_engine, scale, pf, *, n_req,
+              seed, smoke):
+    """Serve one faulted ladder; immediately afterwards re-arm + run the
+    exact-only reference on the same arrivals for the identity check.
+    The faulted engine's retrace probe is read right after its run —
+    before anything else traces — so the count is its own."""
+    from repro.core.faults import FaultConfig
+    from repro.serving import EngineStats, SentinelConfig
+
+    fault = (FaultConfig.from_yield(rows=YIELD_ROWS, scale=scale)
+             if scale > 0 else None)
+    eng = _build(cfg, params, tiers, fault=fault,
+                 sentinel_cfg=SentinelConfig(), smoke=smoke)
+    t0 = time.perf_counter()
+    eng.warmup()
+    warm_s = time.perf_counter() - t0
+    wl = _workload(cfg, n_req, seed)
+    t0 = time.perf_counter()
+    results = eng.run(wl)
+    stats = EngineStats.from_results(results,
+                                     time.perf_counter() - t0)
+    retraces = eng.steady_retraces()
+
+    exact_engine.warmup()        # re-arm the (global) retrace probe
+    wl_exact = [dataclasses.replace(r, tier="exact", tolerance=None)
+                for r in wl]
+    ref = exact_engine.run(wl_exact)
+
+    on_exact = [r for r in results.values() if r.tier == "exact"]
+    identical = all(r.tokens == ref[r.rid].tokens for r in on_exact)
+    detect = [t["tokens_before_trip"] for t in eng.trip_log]
+    return {
+        "fault_scale": scale,
+        "fault_rate_per_cell": (round(fault.rate, 8) if fault else 0.0),
+        "pf_characterized": round(pf, 8),
+        "warmup_s": round(warm_s, 2),
+        "n_requests": len(results),
+        "n_failed": stats.n_failed,
+        "n_restarted": sum(1 for r in results.values() if r.retries),
+        "goodput_tokens_per_s": round(stats.tokens_per_s, 2),
+        "completed_tokens": stats.total_tokens,
+        "trips": [{"lane": t["lane"], "reason": t["reason"],
+                   "tokens_before_trip": t["tokens_before_trip"],
+                   "in_flight_displaced": t["in_flight_displaced"]}
+                  for t in eng.trip_log],
+        "detection_tokens_max": max(detect) if detect else None,
+        "finished_on_exact": len(on_exact),
+        "identical_to_exact_only_run": identical,
+        "steady_retraces": retraces,
+    }
+
+
+def _recovery(cfg, params, tiers, *, smoke):
+    """Breaker round trip on a HEALTHY ladder: forced trip ->
+    quarantine (in-flight work demoted) -> half-open verification burst
+    -> re-admission, with the retrace probe held at zero throughout."""
+    from repro.serving import Request, SentinelConfig, SimClock
+
+    eng = _build(cfg, params, tiers,
+                 sentinel_cfg=SentinelConfig(cooldown_s=0.0),
+                 smoke=smoke)
+    eng.warmup()
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, (6,),
+                                               dtype=np.int64),
+                    max_new=8, tier="balanced", arrival=0.0)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step(0.0)                       # admit + first decode round
+    lane = eng.lanes["balanced"]
+    assert lane.running, "requests did not land on the balanced lane"
+    eng._trip(lane, 0.01, "forced (recovery drill)")
+    tripped = lane.quarantined
+    displaced_ok = not lane.running and all(
+        eng.results[r.rid].retries == 1 for r in reqs)
+    eng.step(0.02)                      # half-open probe fires here
+    recovered = not lane.quarantined
+    # the lane takes traffic again after recovery
+    back = eng.submit(Request(rid=99, prompt=reqs[0].prompt, max_new=2,
+                              tier="balanced", arrival=0.03))
+    results = eng.run([], clock=SimClock())  # drain the demoted work
+    sen = lane.sentinel
+    return {
+        "tripped": bool(tripped),
+        "in_flight_demoted": bool(displaced_ok),
+        "probe_recovered": bool(recovered),
+        "routed_back_after_recovery": back == "balanced",
+        "breaker_trips": sen.breaker.n_trips,
+        "breaker_recoveries": sen.breaker.n_recoveries,
+        "drained_ok": all(r.done and r.status == "ok"
+                          for r in eng.results.values()),
+        "steady_retraces": eng.steady_retraces(),
+    }
+
+
+def run(fast: bool = False, smoke: bool = False):
+    import jax
+
+    from repro.core.faults import _pf_for_rows
+    from repro.models.transformer import LM
+    from repro.configs import get_config
+    from repro.serving import build_tiers
+
+    cfg = get_config(ARCH, smoke=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    # integer-mode ladder: the fault surfaces are the stored words.
+    # The exact rung gets per-token activation scales (the spec-decode
+    # verifier construction, DESIGN.md §12): row-local quantization
+    # makes its decode invariant to batch composition, so the
+    # cross-engine token-identity check below is well-defined — with a
+    # shared per-tensor scale, co-resident slots perturb each other's
+    # logits and two engines with different batch mixes drift.
+    tiers = tuple(
+        dataclasses.replace(t, cim=dataclasses.replace(
+            t.cim, per_token=True)) if t.name == "exact" else t
+        for t in build_tiers(mode="bit_exact"))
+    pf = _pf_for_rows(YIELD_ROWS)
+    scales = (0.0, 1.0) if smoke else (0.0, 0.5, 1.0, 5.0)
+    n_req = 8 if smoke else 16
+
+    exact_only = tuple(t for t in tiers if t.name == "exact")
+    exact_engine = _build(cfg, params, exact_only, smoke=smoke)
+    exact_engine.warmup()
+
+    rows = [_rate_row(cfg, params, tiers, exact_engine, s, pf,
+                      n_req=n_req, seed=11, smoke=smoke)
+            for s in scales]
+    recovery = _recovery(cfg, params, tiers, smoke=smoke)
+
+    faulted = [r for r in rows if r["fault_scale"] > 0]
+    clean = [r for r in rows if r["fault_scale"] == 0]
+    detect = [r["detection_tokens_max"] for r in faulted
+              if r["detection_tokens_max"] is not None]
+    summary = {
+        "pf_characterized": round(pf, 8),
+        "zero_failed_requests": all(r["n_failed"] == 0 for r in rows),
+        "no_false_positive_trips": all(not r["trips"] for r in clean),
+        "all_faulted_ladders_tripped": all(r["trips"] for r in faulted),
+        "detection_tokens_max": max(detect) if detect else None,
+        "identical_to_exact_only_run": all(
+            r["identical_to_exact_only_run"] for r in rows),
+        "recovery_round_trip": (recovery["tripped"]
+                                and recovery["probe_recovered"]
+                                and recovery["routed_back_after_recovery"]),
+        "zero_steady_state_retraces": (
+            all(r["steady_retraces"] == 0 for r in rows)
+            and recovery["steady_retraces"] == 0),
+    }
+    out = {
+        "meta": {
+            "arch": cfg.name,
+            "backend": jax.default_backend(),
+            "smoke": smoke,
+            "yield_rows": YIELD_ROWS,
+            "tiers": [{"name": t.name, "family": t.family,
+                       "nmed": t.nmed} for t in tiers],
+            "note": "fault_scale multiplies the MNIS-characterized Pf; "
+                    "detection latency is tokens emitted by the faulty "
+                    "lane before its sentinel tripped; goodput counts "
+                    "completed (status=ok) requests only; off-TPU "
+                    "tokens/s is a CPU trend line",
+        },
+        "rows": rows,
+        "recovery": recovery,
+        "summary": summary,
+    }
+    path = OUT_PATH_SMOKE if smoke else OUT_PATH
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"fault records -> {path}")
+
+    det = (f"<={summary['detection_tokens_max']}tok" if detect
+           else "no-trip")
+    good = float(np.median([r["goodput_tokens_per_s"]
+                            for r in faulted])) if faulted else 0.0
+    return [
+        ("faults_detection", 0.0, det),
+        ("faults_goodput", 0.0, f"{good:.1f}tok/s@faulted"),
+        ("faults_failed", 0.0,
+         "0" if summary["zero_failed_requests"] else "FAILED-REQS"),
+        ("faults_identity", 0.0,
+         str(summary["identical_to_exact_only_run"])),
+        ("faults_recovery", 0.0,
+         "ok" if summary["recovery_round_trip"] else "BROKEN"),
+        ("faults_retraces", 0.0,
+         "0" if summary["zero_steady_state_retraces"] else "RETRACED"),
+    ]
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(smoke="--smoke" in sys.argv)

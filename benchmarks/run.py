@@ -1,7 +1,8 @@
 """Benchmark driver: one entry per paper table, the roofline report and
 the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
 BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_attn ->
-BENCH_attn.json; bench_serve -> BENCH_serve.json).  Prints
+BENCH_attn.json; bench_serve -> BENCH_serve.json; bench_faults ->
+BENCH_faults.json).  Prints
 ``name,us_per_call,derived`` CSV at the end.
 
 Flags:
@@ -17,10 +18,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_attn, bench_conv, bench_kernels,
-                            bench_serve, bench_shard, roofline,
-                            table2_ppa, table3_psnr, table4_cnn,
-                            table5_yield)
+    from benchmarks import (bench_attn, bench_conv, bench_faults,
+                            bench_kernels, bench_serve, bench_shard,
+                            roofline, table2_ppa, table3_psnr,
+                            table4_cnn, table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -77,6 +78,12 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_serve", 0.0, f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(bench_faults.run(fast=fast or "--kernels" in sys.argv,
+                                     smoke=smoke))
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_faults", 0.0, f"ERROR:{type(e).__name__}"))
     shard_path = (bench_shard.OUT_PATH_SMOKE if smoke
                   else bench_shard.OUT_PATH)
     try:

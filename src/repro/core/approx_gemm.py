@@ -95,8 +95,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import autotune
+from . import autotune, faults
 from .error_model import SurrogateModel
+from .faults import FAULT_MODES, FaultConfig
 from .luts import MAX_LUT_BITS, nibble_decomposable, signed_product_lut
 from .multipliers import MultiplierSpec
 from .quantization import dequantize, fake_quant, quant_scale, quantize
@@ -584,6 +585,16 @@ def plan_conv(family: str, mode: str, bits: int, b: int, h: int, w: int,
                                   dp, wk, wn)
 
 
+@functools.lru_cache(maxsize=64)
+def _fault_conv_plan(conv: ConvParams, backend: str) -> ConvPlan:
+    """The forced materialized-fallback plan for as-fabricated convs
+    (`cim_conv2d` with a fault config): `conv_im2col` is always
+    registered and always eligible, and its inner GEMM re-routes
+    through the faultable integer paths."""
+    return ConvPlan(entry=_REGISTRY["conv_im2col"], conv=conv,
+                    block=None, interpret=False, backend=backend)
+
+
 def _one_spec(x_spec):
     """First entry of a conv x_spec (the batch dim); rest must be
     unsharded — H/W tiling needs halo exchange (known follow-up)."""
@@ -1002,19 +1013,44 @@ class GemmParams:
     # fused Pallas runners and the mesh shard_map route carry the
     # scalar per-tensor scale in SMEM and are gated off.
     per_token: bool = False
+    # as-fabricated stuck-at defects (core/faults.py, DESIGN.md §14):
+    # faults the stored LUT tables and the quantized weight words of the
+    # integer datapaths.  Part of the frozen params, so every executable
+    # / front-cache key (they all embed `gp`) distinguishes faulted from
+    # clean executables — flipping a lane between the two never
+    # retraces.  Integer/exact modes only; fused Pallas runners and the
+    # mesh path quantize in-kernel from float and are gated off.
+    fault: Optional[FaultConfig] = None
+
+    def __post_init__(self):
+        if self.fault is not None and self.mode not in FAULT_MODES:
+            raise ValueError(
+                f"fault injection needs an integer storage domain "
+                f"(modes {FAULT_MODES}); mode {self.mode!r} stores no "
+                "words or tables to fault")
 
     @property
     def spec(self) -> MultiplierSpec:
         return MultiplierSpec(self.family, self.bits, True,
                               self.compressor, self.n_approx_cols)
 
+    @property
+    def routing_spec(self) -> Optional[MultiplierSpec]:
+        """The spec the planners should route with.  Under fault it is
+        None: predicate-gated entries (the nibble GEMM/conv kernels)
+        resolve their clean sub-LUTs inside `kernels/ops.py` and cannot
+        see the defect map, so routing falls to the full-LUT gather —
+        whose table operand IS faultable (`_lut_for`)."""
+        return None if self.fault is not None else self.spec
+
     @classmethod
     def from_spec(cls, spec: MultiplierSpec, surrogate: SurrogateModel,
-                  mode: str) -> "GemmParams":
+                  mode: str,
+                  fault: Optional[FaultConfig] = None) -> "GemmParams":
         return cls(family=spec.family, bits=spec.bits, mode=mode,
                    mu=surrogate.mu_rel, c0=surrogate.c0_abs,
                    c1=surrogate.c1_rel, compressor=spec.compressor,
-                   n_approx_cols=spec.n_approx_cols)
+                   n_approx_cols=spec.n_approx_cols, fault=fault)
 
 
 # ---------------------------------------------------------------------------
@@ -1034,8 +1070,11 @@ def _signed_lut_flat(spec_key):
 
 
 def _lut_for(gp: GemmParams) -> jnp.ndarray:
-    return jnp.asarray(_signed_lut_flat((gp.family, gp.bits, gp.compressor,
-                                         gp.n_approx_cols)))
+    spec_key = (gp.family, gp.bits, gp.compressor, gp.n_approx_cols)
+    if gp.fault is not None:
+        return jnp.asarray(
+            faults.faulted_signed_lut_flat(spec_key, gp.fault))
+    return jnp.asarray(_signed_lut_flat(spec_key))
 
 
 def _run_jnp_lut(xq, wq, gp: GemmParams, plan: GemmPlan):
@@ -1573,14 +1612,20 @@ def _cim_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
             _mark_trace()
             xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits,
                                                 gp.per_token)
+            if gp.fault is not None:
+                wq = faults.apply_weight_faults(wq, gp.fault, gp.bits)
             return dequantize(xq, sx) @ dequantize(wq, sw)
         return forward, False
 
     if mode in ("bit_exact", "hardware"):
         # the fused runners carry the per-tensor sx as an SMEM scalar;
         # per-token (per-row) scales must take the unfused path where
-        # the (M, 1) scale applies in the XLA epilogue
-        if fused and not gp.per_token and plan.entry.name in FUSED_RUNNERS:
+        # the (M, 1) scale applies in the XLA epilogue.  Faulted
+        # executables also go unfused: the fused kernels quantize on
+        # tile load, so the stored-word surgery has to happen in the
+        # XLA prologue around the int kernel.
+        if (fused and not gp.per_token and gp.fault is None
+                and plan.entry.name in FUSED_RUNNERS):
             runner = FUSED_RUNNERS[plan.entry.name]
 
             def forward(xf, wf):
@@ -1592,6 +1637,9 @@ def _cim_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
                 _mark_trace()
                 xq, sx, wq, sw = _quantize_operands(xf, wf, gp.bits,
                                                     gp.per_token)
+                if gp.fault is not None:
+                    wq = faults.apply_weight_faults(wq, gp.fault,
+                                                    gp.bits)
                 acc = run_int_kernel(plan, xq, wq, gp)
                 return (acc.astype(jnp.float32) * sx) * sw
         return forward, False
@@ -1632,7 +1680,8 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     kernel-backed rank-2 paths or ("plain", fn, needs_key) for the
     fake-quant XLA paths (gradients flow through the quantizer)."""
     if apply and gp.mode in ("bit_exact", "hardware"):
-        if fused and not gp.per_token and plan.entry.name in FUSED_RUNNERS:
+        if (fused and not gp.per_token and gp.fault is None
+                and plan.entry.name in FUSED_RUNNERS):
             runner = FUSED_RUNNERS[plan.entry.name]
 
             def forward(x2, wf):
@@ -1646,6 +1695,9 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
                 xq, sx, wq, sw = _quantize_operands(
                     x2.astype(jnp.float32), wf.astype(jnp.float32),
                     gp.bits, gp.per_token)
+                if gp.fault is not None:
+                    wq = faults.apply_weight_faults(wq, gp.fault,
+                                                    gp.bits)
                 acc = run_int_kernel(plan, xq, wq, gp)
                 out = (acc.astype(jnp.float32) * sx) * sw
                 return out.astype(x2.dtype)
@@ -1671,7 +1723,19 @@ def _model_forward(gp: GemmParams, plan: GemmPlan, noise_kind: str,
     def fn(x, w, key=None):
         _mark_trace()
         xq = fake_quant(x, gp.bits, axis=-1 if gp.per_token else None)
-        wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
+        if apply and gp.fault is not None:
+            # as-fabricated exact macro: true-quantize the weight,
+            # fault the stored words, dequantize — STE around the whole
+            # read path so QAT gradients still flow to w
+            sw = quant_scale(jax.lax.stop_gradient(w).astype(jnp.float32),
+                             gp.bits, axis=0)
+            wi = quantize(jax.lax.stop_gradient(w).astype(jnp.float32),
+                          sw, gp.bits)
+            wi = faults.apply_weight_faults(wi, gp.fault, gp.bits)
+            wdq = dequantize(wi, sw).astype(w.dtype)
+            wq = w + jax.lax.stop_gradient(wdq - w)
+        else:
+            wq = fake_quant(w, gp.bits, axis=0).astype(x.dtype)
         d = xq @ wq
         if not apply or gp.mode == "exact":
             # mixed-macro allocation / QAT baseline: exact int8 macro
@@ -1725,7 +1789,7 @@ def _conv_forward(gp: GemmParams, plan: ConvPlan, noise_kind: str,
                       autotune.bucket(b) * oh * ow,
                       conv.kh * conv.kw * autotune.bucket(c),
                       autotune.bucket(n), backend=plan.backend,
-                      spec=gp.spec)
+                      spec=gp.routing_spec)
     inner, takes_eps = _cim_forward(gp, gplan, noise_kind, stochastic,
                                     fused=True)
     if takes_eps:
@@ -2023,6 +2087,9 @@ def _build_attn_executable(gp: GemmParams, plan: AttnPlan) -> Callable:
     if pallas:
         kw["interpret"] = plan.interpret
 
+    spec_key = (gp.family, gp.bits, gp.compressor, gp.n_approx_cols)
+    fault = gp.fault
+
     @jax.custom_vjp
     def f(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval):
         _mark_trace()
@@ -2030,7 +2097,21 @@ def _build_attn_executable(gp: GemmParams, plan: AttnPlan) -> Callable:
         # constant hoisted into scan consts leaks as a tracer under
         # grad-through-scan partial-eval (same rule as _signed_lut_flat;
         # the numpy table is cached, asarray is free under jit)
-        table = _attn_table(path, table_spec)
+        if fault is not None and path in ("lut", "nibble"):
+            # the table is an explicit kernel operand here, so attention
+            # runs as-fabricated with NO kernel changes: swap in the
+            # faulted stored form (full signed table rebuilt from the
+            # faulted magnitude array, or the four faulted sub-LUTs).
+            # mxu/log paths store no table — they are fault-transparent
+            # and the projection GEMMs carry the defects (DESIGN.md §14)
+            if path == "lut":
+                table = jnp.asarray(
+                    faults.faulted_signed_lut_flat(spec_key, fault))
+            else:
+                table = jnp.asarray(
+                    faults.faulted_nibble_subs_flat(spec_key, fault))
+        else:
+            table = _attn_table(path, table_spec)
         entry_point = attn_fused if pallas else attn_reference
         return entry_point(a, b_, c, sq_s, sk_s, sv_s, qpos, kpos, kval,
                            table, **kw)
@@ -2108,6 +2189,7 @@ def clear_dispatch_caches() -> None:
     _plan_attn_cached.cache_clear()
     _plan_gemm_mesh_cached.cache_clear()
     _plan_conv_mesh_cached.cache_clear()
+    _fault_conv_plan.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -2148,6 +2230,11 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             raise ValueError(
                 "per-token activation scales are not supported on the "
                 "mesh shard_map path; drop the mesh or per_token")
+        if gp.fault is not None:
+            raise ValueError(
+                "fault injection is not supported on the mesh shard_map "
+                "path (the partial/fused shard kernels quantize their "
+                "words in-kernel); drop the mesh or the fault config")
         # exact-shape validation on EVERY call: the front cache keys on
         # bucketed shapes, and a warm entry must never serve a shape
         # the planner would reject (divisibility is not bucket-stable)
@@ -2164,8 +2251,9 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
     if gp.mode not in MODES:
         raise ValueError(f"mode {gp.mode!r} not in {MODES}")
     plan = plan_gemm(gp.family, gp.mode, gp.bits, m, k, n,
-                     interpret=interpret, block=block, spec=gp.spec,
-                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
+                     interpret=interpret, block=block,
+                     spec=gp.routing_spec, mesh=mesh, x_spec=x_spec,
+                     w_spec=w_spec)
     stochastic = (gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:
@@ -2252,6 +2340,11 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
         raise ValueError(
             f"weight rows {w.shape[0]} != kh*kw*C = {kh}*{kw}*{c}")
     if mesh is not None:
+        if gp.fault is not None:
+            raise ValueError(
+                "fault injection is not supported on the mesh shard_map "
+                "path (the partial/fused shard kernels quantize their "
+                "words in-kernel); drop the mesh or the fault config")
         # every call: bit-safety and divisibility depend on the EXACT
         # geometry, which the conv-bucketed front-cache key masks
         _check_mesh_conv(gp.mode, h, w_, conv, b, c, n, mesh, x_spec,
@@ -2268,9 +2361,17 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             return run(x, w, key) if stochastic else run(x, w)
     if gp.mode not in MODES:
         raise ValueError(f"mode {gp.mode!r} not in {MODES}")
-    plan = plan_conv(gp.family, gp.mode, gp.bits, b, h, w_, c, n, conv,
-                     interpret=interpret, block=block, spec=gp.spec,
-                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
+    if gp.fault is not None:
+        # every implicit conv kernel quantizes in-kernel from float, so
+        # the stored-word fault surgery cannot reach it; as-fabricated
+        # convs run the materialized fallback, whose inner GEMM routes
+        # through the faultable LUT/log paths (gp.routing_spec)
+        plan = _fault_conv_plan(conv, jax.default_backend())
+    else:
+        plan = plan_conv(gp.family, gp.mode, gp.bits, b, h, w_, c, n,
+                         conv, interpret=interpret, block=block,
+                         spec=gp.spec, mesh=mesh, x_spec=x_spec,
+                         w_spec=w_spec)
     stochastic = (gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:
@@ -2417,6 +2518,11 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             "per-token activation scales are not supported on the mesh "
             "shard_map path (global per-tensor scales are computed "
             "outside the shard); drop the mesh or per_token")
+    if mesh is not None and gp.fault is not None:
+        raise ValueError(
+            "fault injection is not supported on the mesh shard_map "
+            "path (the partial/fused shard kernels quantize their "
+            "words in-kernel); drop the mesh or the fault config")
     if mesh is not None:
         # divisibility is not bucket-stable: validate the raw shape
         # before the bucketed front cache can answer
@@ -2431,8 +2537,9 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
             run, stochastic = hit
             return run(x, w, key) if stochastic else run(x, w)
     mode = gp.mode if apply else "exact"
-    plan = plan_gemm(gp.family, mode, gp.bits, m, k, n, spec=gp.spec,
-                     mesh=mesh, x_spec=x_spec, w_spec=w_spec)
+    plan = plan_gemm(gp.family, mode, gp.bits, m, k, n,
+                     spec=gp.routing_spec, mesh=mesh, x_spec=x_spec,
+                     w_spec=w_spec)
     stochastic = (apply and gp.mode in ("surrogate", "surrogate_fast")
                   and key is not None and (gp.c0 > 0.0 or gp.c1 > 0.0))
     if cached:

@@ -143,15 +143,27 @@ def _load_disk(path: str) -> Dict[str, Block]:
 
 
 def _save_disk(path: str, table: Dict[str, Block]) -> None:
+    """Atomic publish: write to a PER-PROCESS temp name, then
+    os.replace.  A shared ".tmp" name would let two concurrent tuners
+    (multi-host workers, pytest-xdist) interleave writes into one file
+    and publish a torn JSON; with a unique temp each writer replaces
+    whole-file, last-writer-wins per key — which the merge-on-save in
+    `_resolve` makes loss-free for everything but a simultaneous sweep
+    of the *same* key (where both winners are valid measurements)."""
+    tmp = f"{path}.{os.getpid()}.tmp"
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
         with open(tmp, "w") as fh:
             json.dump({k: list(v) for k, v in sorted(table.items())}, fh,
                       indent=1)
         os.replace(tmp, path)
     except OSError:
-        pass  # read-only FS: fall back to the in-memory cache only
+        # read-only FS: fall back to the in-memory cache only (and
+        # leave no orphaned temp behind)
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
 
 
 def _clip_block(block: Block, m: int, k: int, n: int) -> Block:

@@ -23,6 +23,7 @@ from . import energy_model, sram_model, yield_analysis
 from .approx_gemm import (MODES, GemmParams, GemmPlan, cim_matmul,
                           plan_gemm)
 from .error_model import ErrorMetrics, SurrogateModel, characterize
+from .faults import FAULT_MODES, FaultConfig
 from .multipliers import MultiplierSpec
 
 
@@ -58,10 +59,21 @@ class CiMConfig:
     sram: sram_model.SRAMConfig = dataclasses.field(
         default_factory=sram_model.SRAMConfig)
     run_yield: bool = False
+    # as-fabricated stuck-at defects (core/faults.py, DESIGN.md §14):
+    # seeded SA0/SA1 masks over the stored LUT tables and quantized
+    # weight words, at rates typically derived from the yield
+    # characterization (FaultConfig.from_yield).  Integer/exact modes
+    # only — the surrogate modes store nothing to fault.
+    fault: Optional[FaultConfig] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.fault is not None and self.mode not in FAULT_MODES:
+            raise ValueError(
+                f"fault injection needs an integer storage domain "
+                f"(modes {FAULT_MODES}); mode {self.mode!r} stores no "
+                "words or tables to fault")
         if self.attn_heads is not None:
             if not self.attn:
                 raise ValueError("attn_heads requires attn=True")
@@ -91,7 +103,8 @@ class CiMMacro:
     def gemm_params(self, mode: Optional[str] = None) -> GemmParams:
         """Static dispatch parameters for this macro (DESIGN.md §8)."""
         return GemmParams.from_spec(self.config.spec, self.surrogate,
-                                    mode or self.config.mode)
+                                    mode or self.config.mode,
+                                    fault=self.config.fault)
 
     def matmul(self, x, w, key: Optional[jax.Array] = None,
                mode: Optional[str] = None):

@@ -1,0 +1,248 @@
+"""Variation-aware stuck-at fault injection (DESIGN.md §14).
+
+`yield_analysis` characterizes the macro offline: MNIS importance
+sampling puts a number Pf on the probability that process variation
+breaks a bit-cell's read stability (Table V).  This module closes the
+loop at runtime — it samples the defect map that Pf predicts and
+applies it to everything the macro actually *stores*:
+
+  * the compiled product LUTs (`core/luts.py`) — full signed tables and
+    the nibble sub-LUT factorization, faulted over their 2b-bit words;
+  * the quantized weight words — faulted over their b-bit
+    two's-complement cells at trace time (masks are shape-keyed numpy
+    constants, the bit surgery itself is jnp and lives inside the jitted
+    executable).
+
+Activations are transient (they stream through the ADC, they are never
+held in the array), so they carry no faults.
+
+Determinism is the whole point: a `FaultConfig` is a frozen, hashable
+value (it rides inside `GemmParams` and therefore inside every
+executable-cache key, DESIGN.md §8), and every mask derives from
+`np.random.SeedSequence([seed, crc32(tag), nbits, *shape])` through
+PCG64 — byte-identical across processes and platforms, mirroring the
+workload-seeding contract of `serving/workload.py`.  Two executables
+that differ only in fault config coexist in the cache; flipping a lane
+between clean and as-fabricated never retraces.
+
+Mask sharing: one (shape, tag) pair = one physical array's defect map.
+Every weight of the same shape reuses the same mask, the way every
+GEMM of the same bucketed shape reuses one executable — the model's
+layers stream through one macro geometry, they do not each own a die.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import yield_analysis
+from .luts import build_lut, nibble_sub_luts
+from .multipliers import MultiplierSpec
+
+# Modes that have an integer storage domain to fault.  The surrogate
+# modes model the *average* approximation error statistically — they
+# store no words and no tables, so "as-fabricated" is undefined there.
+FAULT_MODES = ("exact", "bit_exact", "hardware")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """One macro's stuck-at defect statistics (frozen: cache-key safe).
+
+    `p_sa0` / `p_sa1` are PER-CELL probabilities of a bit stuck at 0 /
+    stuck at 1; `seed` picks the concrete defect map.  Equality is
+    structural, so the executable cache distinguishes fault configs the
+    same way it distinguishes multiplier families.
+    """
+
+    p_sa0: float = 0.0
+    p_sa1: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("p_sa0", "p_sa1"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.p_sa0 + self.p_sa1 > 1.0:
+            raise ValueError(
+                f"p_sa0 + p_sa1 = {self.p_sa0 + self.p_sa1} > 1; a cell "
+                "cannot be stuck both ways")
+
+    @property
+    def rate(self) -> float:
+        """Total per-cell defect probability."""
+        return self.p_sa0 + self.p_sa1
+
+    @classmethod
+    def from_yield(cls, rows: int = 64, seed: int = 0,
+                   sa1_frac: float = 0.5,
+                   scale: float = 1.0) -> "FaultConfig":
+        """Derive the defect rate from the MNIS yield characterization.
+
+        `rows` selects the Table V geometry; the characterized Pf
+        becomes the total stuck-at rate, split `sa1_frac` to
+        stuck-at-1 (a read-stability failure flips either way with no
+        preferred polarity).  `scale` stress-tests above/below the
+        characterized point (bench_faults.py sweeps it).
+        """
+        pf = min(_pf_for_rows(rows) * scale, 1.0)
+        return cls(p_sa0=pf * (1.0 - sa1_frac), p_sa1=pf * sa1_frac,
+                   seed=seed)
+
+
+@functools.lru_cache(maxsize=16)
+def _pf_for_rows(rows: int) -> float:
+    res = yield_analysis.mnis_yield(
+        yield_analysis.model_for_geometry(rows))
+    return float(res.pf)
+
+
+def stuck_at_masks(fault: FaultConfig, shape: Tuple[int, ...],
+                   nbits: int, tag: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample the (sa0, sa1) bit masks for one stored array.
+
+    Returns int64 arrays of `shape`: `m0` has a 1 wherever a cell is
+    stuck at 0 (AND with ~m0 clears it), `m1` wherever stuck at 1 (OR
+    with m1 sets it).  A cell is exclusively SA0 or SA1 (single uniform
+    draw per cell), and the stream is keyed on (seed, tag, nbits,
+    shape) through SeedSequence/PCG64 — never Python `hash`, which is
+    per-process salted.
+    """
+    if nbits < 1 or nbits > 62:
+        raise ValueError(f"nbits must be in [1, 62], got {nbits}")
+    ss = np.random.SeedSequence(
+        [fault.seed & 0xFFFFFFFF, zlib.crc32(tag.encode("utf-8")),
+         nbits, *[int(s) for s in shape]])
+    rng = np.random.default_rng(ss)
+    r = rng.random(size=tuple(shape) + (nbits,))
+    sa0 = r < fault.p_sa0
+    sa1 = (~sa0) & (r < fault.p_sa0 + fault.p_sa1)
+    weights = (np.int64(1) << np.arange(nbits, dtype=np.int64))
+    return (sa0 * weights).sum(axis=-1), (sa1 * weights).sum(axis=-1)
+
+
+def fault_unsigned_words(words: np.ndarray, fault: FaultConfig,
+                         nbits: int, tag: str) -> np.ndarray:
+    """Apply stuck-at masks to a numpy array of unsigned nbits-bit words
+    (the stored-LUT read path).  Values stay in [0, 2^nbits)."""
+    m0, m1 = stuck_at_masks(fault, words.shape, nbits, tag)
+    span = np.int64(1) << nbits
+    u = words.astype(np.int64) & (span - 1)
+    return (u & ~m0) | m1
+
+
+def apply_weight_faults(wq, fault: FaultConfig, bits: int,
+                        tag: str = "w"):
+    """Apply stuck-at faults to quantized weight words at trace time.
+
+    `wq` is a traced integer array of signed b-bit words in
+    [-qmax, qmax]; its shape is static, so the masks are concrete numpy
+    constants baked into the executable while the bit surgery runs in
+    jnp.  The faulted word is re-read as b-bit two's complement and
+    clipped back to [-qmax, qmax] — the macro's read path saturates at
+    the quantizer range, which keeps every downstream kernel's operand
+    contract (LUT index ranges, log-domain magnitudes) intact.
+    """
+    import jax.numpy as jnp
+
+    m0, m1 = stuck_at_masks(fault, tuple(wq.shape), bits, tag)
+    span = 1 << bits
+    half = span >> 1
+    qmax = half - 1
+    u = wq.astype(jnp.int32) & (span - 1)
+    f = ((u & jnp.asarray((~m0 & (span - 1)).astype(np.int32)))
+         | jnp.asarray(m1.astype(np.int32)))
+    s = f - (f >= half) * span
+    return jnp.clip(s, -qmax, qmax).astype(wq.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Faulted stored tables (the LUT twin of core/luts.py)
+# ---------------------------------------------------------------------------
+#
+# numpy-only, lru-cached on (spec_key, fault) — the same tracer-leak
+# rule as approx_gemm._signed_lut_flat: never cache a jnp array built
+# under a trace; jnp.asarray at use time is free under jit.
+
+
+def _spec_of(spec_key: Tuple) -> MultiplierSpec:
+    family, bits, compressor, n_approx = spec_key
+    return MultiplierSpec(family, bits, False, compressor, n_approx)
+
+
+@functools.lru_cache(maxsize=32)
+def _faulted_unsigned_lut_cached(spec_key: Tuple,
+                                 fault: FaultConfig) -> np.ndarray:
+    """As-fabricated unsigned magnitude table: each of the 2^b x 2^b
+    products sits in a 2b-bit word row of the array."""
+    spec = _spec_of(spec_key)
+    u = build_lut(spec)
+    return fault_unsigned_words(u, fault, 2 * spec.bits, "lut")
+
+
+@functools.lru_cache(maxsize=32)
+def _faulted_signed_lut_flat_cached(spec_key: Tuple,
+                                    fault: FaultConfig) -> np.ndarray:
+    """Signed product table rebuilt from the faulted magnitude storage.
+
+    Same sign-magnitude construction as `luts.signed_product_lut`, so
+    the zero-annihilation invariant the Pallas kernels' ragged-tile
+    padding relies on survives ANY defect map for free: sign(0) == 0
+    zeroes the whole row/column regardless of what the faulted
+    magnitude cells read back.
+    """
+    family, bits, _, _ = spec_key
+    uf = _faulted_unsigned_lut_cached(spec_key, fault).astype(np.int64)
+    half = 1 << (bits - 1)
+    vals = np.arange(-half, half, dtype=np.int64)
+    mags = np.minimum(np.abs(vals), half - 1)
+    signs = np.sign(vals)
+    out = uf[np.ix_(mags, mags)] * np.outer(signs, signs)
+    assert (out[half, :] == 0).all() and (out[:, half] == 0).all()
+    return out.astype(np.int32).ravel()
+
+
+def faulted_signed_lut_flat(spec_key: Tuple,
+                            fault: FaultConfig) -> np.ndarray:
+    """Flat faulted signed LUT (the `_lut_for` drop-in, approx_gemm)."""
+    return _faulted_signed_lut_flat_cached(spec_key, fault)
+
+
+@functools.lru_cache(maxsize=32)
+def _faulted_nibble_subs_flat_cached(spec_key: Tuple,
+                                     fault: FaultConfig):
+    """Faulted nibble sub-LUTs, flat (4 * 2^h * 2^h,) — the stored form
+    of the attention nibble datapath.  Each sub-table is its own
+    physical array (tags subs0..3); entries are 2b-bit words like the
+    full table.  The in-kernel sign-magnitude recomposition multiplies
+    by sign(a)*sign(b), so zero operands still annihilate.  Returns
+    None when the clean spec is not nibble-decomposable (the dispatcher
+    never routes there)."""
+    family, bits, compressor, n_approx = spec_key
+    spec = MultiplierSpec(family, bits, True, compressor, n_approx)
+    subs = nibble_sub_luts(spec)
+    if subs is None:
+        return None
+    out = np.stack([
+        fault_unsigned_words(subs[i], fault, 2 * bits, f"subs{i}")
+        for i in range(4)])
+    assert out.max() < np.iinfo(np.int32).max
+    return out.astype(np.int32).ravel()
+
+
+def faulted_nibble_subs_flat(spec_key: Tuple, fault: FaultConfig):
+    return _faulted_nibble_subs_flat_cached(spec_key, fault)
+
+
+def clear_fault_caches() -> None:
+    """Drop the memoized defect tables (tests)."""
+    _pf_for_rows.cache_clear()
+    _faulted_unsigned_lut_cached.cache_clear()
+    _faulted_signed_lut_flat_cached.cache_clear()
+    _faulted_nibble_subs_flat_cached.cache_clear()

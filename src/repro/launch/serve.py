@@ -57,6 +57,26 @@ def main():
                     help="draft+verify rounds fused into one dispatch "
                          "(amortizes per-call overhead; admission waits "
                          "up to R-1 rounds for a free slot)")
+    ap.add_argument("--fault-rate", type=float, default=0.0, metavar="P",
+                    help="inject stuck-at faults into the approximate "
+                         "tiers' stored tables + weight words at this "
+                         "per-bit-cell rate, split evenly SA0/SA1 "
+                         "(DESIGN.md §14; needs an integer --mode); "
+                         "0 = as-designed")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="defect-map seed for --fault-rate")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="arm per-approximate-lane accuracy sentinels: "
+                         "shadow-score against the exact reference, trip "
+                         "+ quarantine + demote on drift (DESIGN.md §14)")
+    ap.add_argument("--sentinel-period", type=int, default=2, metavar="N",
+                    help="shadow-score every Nth decode round")
+    ap.add_argument("--max-queued", type=int, default=0, metavar="Q",
+                    help="admission-queue bound (backpressure); "
+                         "0 = unbounded")
+    ap.add_argument("--retry-budget", type=int, default=3, metavar="R",
+                    help="restarts per request across sentinel trips "
+                         "before it is marked failed")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -73,6 +93,24 @@ def main():
         mesh = make_host_mesh(model_parallel=args.mesh)
         print(f"mesh: {dict(mesh.shape)}")
 
+    fault = None
+    if args.fault_rate > 0:
+        from repro.core.faults import FAULT_MODES, FaultConfig
+
+        if args.mode not in FAULT_MODES:
+            ap.error(f"--fault-rate needs an integer --mode "
+                     f"({'/'.join(FAULT_MODES)}): the surrogate modes "
+                     "store no words or tables to fault")
+        fault = FaultConfig(p_sa0=args.fault_rate / 2,
+                            p_sa1=args.fault_rate / 2,
+                            seed=args.fault_seed)
+
+    sentinel_cfg = None
+    if args.sentinel:
+        from repro.serving import SentinelConfig
+
+        sentinel_cfg = SentinelConfig(period=args.sentinel_period)
+
     cfg = get_config(args.arch, smoke=True)
     tiers = build_tiers(mode=args.mode)
     pmax = max(args.prompt_len)
@@ -83,7 +121,10 @@ def main():
         group_buckets=(1, 2, args.slots) if args.slots > 2 else (1, 2),
         continuous=not args.static, seed=args.seed, mesh=mesh,
         spec_decode=args.spec_decode or None,
-        spec_drafter=args.spec_drafter, spec_rounds=args.spec_rounds)
+        spec_drafter=args.spec_drafter, spec_rounds=args.spec_rounds,
+        fault=fault, sentinel_cfg=sentinel_cfg,
+        max_queued=args.max_queued or None,
+        retry_budget=args.retry_budget)
 
     t0 = time.perf_counter()
     n_exec = engine.warmup()
@@ -119,6 +160,17 @@ def main():
               f"(drafter {sb.drafter_lm.cfg.cim.family}): acceptance "
               f"{sb.acceptance_rate:.2f}, {sb.tokens_per_round:.2f} "
               f"tokens/round over {sb.n_rounds} rounds")
+    if args.sentinel:
+        n_fail = sum(1 for r in results.values()
+                     if r.done and r.status != "ok")
+        retried = sum(1 for r in results.values() if r.retries)
+        print(f"  sentinel: {len(engine.trip_log)} trips "
+              f"({[t['lane'] for t in engine.trip_log]}), "
+              f"{retried} requests restarted, {n_fail} failed")
+        for t in engine.trip_log:
+            print(f"    [{t['lane']}] {t['reason']} after "
+                  f"{t['tokens_before_trip']} tokens "
+                  f"({t['in_flight_displaced']} in flight displaced)")
     assert engine.steady_retraces() == 0, "serving retraced after warmup"
 
 

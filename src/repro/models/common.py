@@ -205,6 +205,7 @@ class CiMParams:
     per_token: bool = False      # per-row activation scales (DESIGN.md §12)
     attn: bool = False           # fused CiM attention (DESIGN.md §13)
     attn_heads: Optional[tuple] = None   # per-q-head family allocation
+    fault: Optional[Any] = None  # as-fabricated defects (DESIGN.md §14)
 
     @classmethod
     def from_config(cls, cim: Optional[CiMConfig]) -> "CiMParams":
@@ -220,14 +221,15 @@ class CiMParams:
                    apply_to=tuple(getattr(cim, "apply_to", ())),
                    per_token=bool(getattr(cim, "per_token", False)),
                    attn=bool(getattr(cim, "attn", False)),
-                   attn_heads=tuple(ah) if ah is not None else None)
+                   attn_heads=tuple(ah) if ah is not None else None,
+                   fault=getattr(cim, "fault", None))
 
     def gemm_params(self) -> GemmParams:
         return GemmParams(family=self.family, bits=self.bits,
                           mode=self.mode, mu=self.mu, c0=self.c0,
                           c1=self.c1, compressor=self.compressor,
                           n_approx_cols=self.n_approx_cols,
-                          per_token=self.per_token)
+                          per_token=self.per_token, fault=self.fault)
 
     def selects(self, name: str) -> bool:
         """Mixed-macro allocation (beyond-paper DSE extension): does the

@@ -1,9 +1,12 @@
 # Continuous-batching CiM serving engine (DESIGN.md §10): slot-pool KV
 # caches, token-budget scheduler, per-request accuracy tiers routed to
-# CiM configs through the DSE characterization.
-from .engine import (EngineStats, LMLaneBackend, Request, RequestResult,
-                     ServingEngine, build_engine,
+# CiM configs through the DSE characterization, and per-lane accuracy
+# sentinels with graceful tier degradation (DESIGN.md §14).
+from .engine import (AdmissionRejected, EngineStats, LMLaneBackend,
+                     Request, RequestResult, ServingEngine, build_engine,
                      servable_archs)  # noqa: F401
+from .sentinel import (CircuitBreaker, LaneHealthError, LaneSentinel,
+                       RollingStats, SentinelConfig)  # noqa: F401
 from .spec import SpecDecodeBackend  # noqa: F401
 from .tiers import AccuracyTier, TierRouter, build_tiers, spec_pair  # noqa: F401
 from .workload import SimClock, poisson_workload  # noqa: F401

@@ -41,10 +41,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .sentinel import LaneHealthError
+
 
 # ---------------------------------------------------------------------------
 # Requests / results
 # ---------------------------------------------------------------------------
+
+
+class AdmissionRejected(RuntimeError):
+    """Structured backpressure signal: the admission queue is full.
+
+    Carries enough for the caller to implement retry-after semantics
+    instead of parsing a message; the engine's own `run` loop responds
+    by holding further arrivals until the queues drain.
+    """
+
+    def __init__(self, rid: int, queued: int, limit: int):
+        super().__init__(
+            f"request {rid} rejected: {queued} requests queued >= "
+            f"admission limit {limit}")
+        self.rid, self.queued, self.limit = rid, queued, limit
 
 
 @dataclasses.dataclass
@@ -78,6 +95,8 @@ class RequestResult:
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     logits: Optional[List[np.ndarray]] = None   # record_logits engines
+    retries: int = 0         # sentinel-trip restarts (DESIGN.md §14)
+    status: str = "ok"       # "ok" | "failed" (retry budget exhausted)
 
     @property
     def done(self) -> bool:
@@ -99,11 +118,15 @@ class EngineStats:
     p95_ms_per_token: float
     p50_ttft_ms: float
     p95_ttft_ms: float
+    n_failed: int = 0        # retry budget exhausted (DESIGN.md §14)
 
     @classmethod
     def from_results(cls, results: Dict[int, "RequestResult"],
                      duration_s: float) -> "EngineStats":
-        done = [r for r in results.values() if r.done]
+        n_failed = sum(1 for r in results.values()
+                       if r.done and r.status != "ok")
+        done = [r for r in results.values()
+                if r.done and r.status == "ok"]
         tot = sum(len(r.tokens) for r in done)
         lat = np.asarray([r.ms_per_token for r in done]) if done else \
             np.zeros(1)
@@ -115,7 +138,8 @@ class EngineStats:
                    p50_ms_per_token=float(np.percentile(lat, 50)),
                    p95_ms_per_token=float(np.percentile(lat, 95)),
                    p50_ttft_ms=float(np.percentile(ttft, 50)),
-                   p95_ttft_ms=float(np.percentile(ttft, 95)))
+                   p95_ttft_ms=float(np.percentile(ttft, 95)),
+                   n_failed=n_failed)
 
 
 def _bucket_up(v: int, buckets: Sequence[int], what: str) -> int:
@@ -275,8 +299,18 @@ class LMLaneBackend:
         """Host-side greedy sampling.  The slice+cast is its own tiny
         XLA executable (it runs outside the jitted step), so it MUST be
         part of warmup — a per-shape compile here would otherwise land
-        on the first real request."""
+        on the first real request.
+
+        Non-finite logits raise a diagnostic `LaneHealthError` instead
+        of silently emitting argmax-of-garbage (np.argmax would return
+        the first NaN's index); on sentinel-guarded lanes the engine
+        catches it as an immediate trip (DESIGN.md §14)."""
         lg = np.asarray(logits[:, -1, :], np.float32)
+        if not np.isfinite(lg).all():
+            bad = int((~np.isfinite(lg)).sum())
+            raise LaneHealthError(
+                f"lane produced non-finite logits ({bad}/{lg.size} "
+                "entries NaN/inf)")
         return np.argmax(lg, axis=-1), lg
 
     def admit(self, prompts: List[np.ndarray],
@@ -367,6 +401,9 @@ class _Lane:
         self.queue: deque = deque()
         self.free: List[int] = list(range(backend.n_slots))
         self.running: Dict[int, _Running] = {}
+        self.sentinel = None          # LaneSentinel (DESIGN.md §14)
+        self.quarantined = False      # breaker open: no admit, no decode
+        self.emitted = 0              # tokens since last trip/recovery
 
 
 class ServingEngine:
@@ -384,7 +421,11 @@ class ServingEngine:
                  continuous: bool = True,
                  token_budget: Optional[int] = None,
                  record_logits: bool = False,
-                 check_invariants: bool = False):
+                 check_invariants: bool = False,
+                 sentinels: Optional[Dict[str, object]] = None,
+                 max_queued: Optional[int] = None,
+                 retry_budget: int = 3,
+                 retry_backoff_s: float = 0.0):
         if not lanes:
             raise ValueError("need at least one lane")
         self.lanes = {name: _Lane(name, b) for name, b in lanes.items()}
@@ -393,18 +434,30 @@ class ServingEngine:
         self.token_budget = token_budget
         self.record_logits = record_logits
         self.check_invariants = check_invariants
+        self.max_queued = max_queued
+        self.retry_budget = int(retry_budget)
+        self.retry_backoff_s = float(retry_backoff_s)
+        for name, sen in (sentinels or {}).items():
+            self.lanes[name].sentinel = sen
         self.results: Dict[int, RequestResult] = {}
         self.active_tokens = 0
         self.peak_running = 0
+        self.trip_log: List[dict] = []           # one entry per trip
+        self._deferred: List[Tuple[float, Request]] = []   # backoff queue
         self._expected: Dict[str, int] = {}
         self._trace_mark: Optional[int] = None
 
     # -- warmup / retrace probe -------------------------------------------
     def warmup(self) -> int:
-        """Pre-warm every (tier x bucket) executable, then arm the
-        steady-state retrace probe."""
+        """Pre-warm every (tier x bucket) executable — including each
+        sentinel's shadow scorer — then arm the steady-state retrace
+        probe, so trip/demote/recover cycles never retrace."""
         n = sum(lane.backend.warmup() for lane in self.lanes.values()
                 if hasattr(lane.backend, "warmup"))
+        n += sum(lane.sentinel.warmup(lane.backend)
+                 for lane in self.lanes.values()
+                 if lane.sentinel is not None
+                 and hasattr(lane.sentinel, "warmup"))
         from repro.core.approx_gemm import trace_count
 
         self._trace_mark = trace_count()
@@ -419,17 +472,41 @@ class ServingEngine:
         return trace_count() - self._trace_mark
 
     # -- submission --------------------------------------------------------
+    def _route_name(self, req: Request) -> str:
+        """Route honoring quarantines: tripped lanes are passed to the
+        router as `avoid` so pinned requests demote to the next-feasible
+        rung (routers without the kwarg never see quarantine — it only
+        arises on sentinel-guarded lanes, which build_engine always
+        pairs with a TierRouter)."""
+        avoid = {n for n, l in self.lanes.items() if l.quarantined}
+        if avoid:
+            tier = self.router.route(req.tolerance, req.tier,
+                                     avoid=avoid)
+        else:
+            tier = self.router.route(req.tolerance, req.tier)
+        return tier.name if hasattr(tier, "name") else str(tier)
+
     def submit(self, req: Request) -> str:
         """Route + enqueue; returns the tier name it was routed to.
         A rid may be reused only after its previous request completed
         (its result is replaced) — a live duplicate would alias two
-        slots onto one RequestResult and corrupt the accounting."""
+        slots onto one RequestResult and corrupt the accounting.
+
+        With `max_queued` set, submission is bounded: once that many
+        requests sit in arrival queues (admitted/running requests do
+        not count — they are bounded by the slot pools and the token
+        budget), further submits raise `AdmissionRejected` instead of
+        growing the queues without limit."""
         prev = self.results.get(req.rid)
         if prev is not None and not prev.done:
             raise ValueError(
                 f"request id {req.rid} is already queued or running")
-        tier = self.router.route(req.tolerance, req.tier)
-        name = tier.name if hasattr(tier, "name") else str(tier)
+        if self.max_queued is not None:
+            queued = (sum(len(l.queue) for l in self.lanes.values())
+                      + len(self._deferred))
+            if queued >= self.max_queued:
+                raise AdmissionRejected(req.rid, queued, self.max_queued)
+        name = self._route_name(req)
         lane = self.lanes[name]
         b = lane.backend
         if hasattr(b, "max_len") and req.cost > b.max_len:
@@ -478,6 +555,14 @@ class ServingEngine:
             taken.append((req, slot))
         if not taken:
             return
+        # register every taken request as running BEFORE touching the
+        # backend: if a prefill raises LaneHealthError mid-chunk, the
+        # trip path sees all of them in `running` and requeues them
+        # uniformly (no orphans between popped-queue and admitted)
+        for req, slot in taken:
+            rr = self.results[req.rid]
+            rr.t_admit = now
+            lane.running[slot] = _Running(req, rr)
         # group by prompt bucket (one traced shape per admit call),
         # chunked to the largest pre-warmed group bucket
         groups: Dict[int, List[Tuple[Request, int]]] = {}
@@ -496,9 +581,6 @@ class ServingEngine:
                 pre_lg = getattr(lane.backend, "last_prefill_logits",
                                  None)
                 for j, (req, slot) in enumerate(chunk):
-                    rr = self.results[req.rid]
-                    rr.t_admit = now
-                    lane.running[slot] = _Running(req, rr)
                     lg = (pre_lg[j] if self.record_logits
                           and pre_lg is not None else None)
                     self._emit(lane, slot, int(first[j]), now, lg)
@@ -511,6 +593,7 @@ class ServingEngine:
         run = lane.running[slot]
         rr = run.result
         rr.tokens.append(tok)
+        lane.emitted += 1
         if rr.t_first is None:
             rr.t_first = now
         if rr.logits is not None and logits_row is not None:
@@ -524,20 +607,59 @@ class ServingEngine:
             bisect.insort(lane.free, slot)     # eviction frees capacity
 
     def step(self, now: Optional[float] = None) -> List[RequestResult]:
-        """One scheduler tick: admit, then one decode round per lane
-        with live slots (a speculative round on spec-decode lanes).
+        """One scheduler tick: release due backoff requeues, probe
+        quarantined lanes whose cooldown expired, admit, then one
+        decode round per lane with live slots (a speculative round on
+        spec-decode lanes).  On sentinel-guarded lanes the round is
+        shadow-scored every period-th tick, and a trip (drift out of
+        envelope, or a LaneHealthError from the sampling path) is
+        handled BEFORE the round's tokens are emitted — a tripped
+        round's output never reaches a result (DESIGN.md §14).
         Returns results completed this tick."""
         now = 0.0 if now is None else now
         done_before = {rid for rid, r in self.results.items() if r.done}
+        if self._deferred:
+            due = [d for d in self._deferred if d[0] <= now]
+            if due:
+                self._deferred = [d for d in self._deferred
+                                  if d[0] > now]
+                for _, req in due:
+                    self._requeue(req)
         for lane in self.lanes.values():
-            self._admit_lane(lane, now)
+            if lane.quarantined:
+                self._maybe_probe(lane, now)
+                continue
+            try:
+                self._admit_lane(lane, now)
+            except LaneHealthError as e:
+                if lane.sentinel is None:
+                    raise
+                self._trip(lane, now, str(e))
         for lane in self.lanes.values():
-            if not lane.running:
+            if lane.quarantined or not lane.running:
                 continue
             if hasattr(lane.backend, "spec_round"):
                 self._spec_round(lane, now)
                 continue
-            nxt = lane.backend.decode_round()
+            sen = lane.sentinel
+            shadow = None
+            if sen is not None and sen.due():
+                # exact reference for the CURRENT state — must precede
+                # the lane's own decode, which donates the caches
+                shadow = sen.shadow(lane.backend)
+            try:
+                nxt = lane.backend.decode_round()
+            except LaneHealthError as e:
+                if sen is None:
+                    raise
+                self._trip(lane, now, str(e))
+                continue
+            if shadow is not None and sen.observe(
+                    lane.backend.last_decode_logits, shadow,
+                    sorted(lane.running), now):
+                self._trip(lane, now, sen.last_trip_reason,
+                           breaker_tripped=True)
+                continue               # trip-before-emit
             dec_lg = getattr(lane.backend, "last_decode_logits", None)
             for slot in sorted(lane.running):
                 lg = (dec_lg[slot] if self.record_logits
@@ -547,6 +669,82 @@ class ServingEngine:
             self._check()
         return [r for rid, r in self.results.items()
                 if r.done and rid not in done_before]
+
+    # -- fault containment (DESIGN.md §14) ---------------------------------
+    def _safest_lane(self) -> str:
+        """Healthy lane with the tightest characterized NMED (the
+        "exact lane" of the ISSUE contract; in a custom assembly,
+        whatever healthy rung is safest)."""
+        ok = [n for n, l in self.lanes.items() if not l.quarantined]
+        if not ok:
+            raise RuntimeError("every lane is quarantined")
+        tiers = getattr(self.router, "tiers", None)
+        if tiers:
+            ok.sort(key=lambda n: tiers[n].nmed if n in tiers
+                    else float("inf"))
+            return ok[0]
+        return "exact" if "exact" in ok else ok[0]
+
+    def _requeue(self, req: Request) -> None:
+        """Re-enqueue a displaced request on the safest healthy lane
+        (bypasses submit: its RequestResult — retry count included —
+        survives the restart)."""
+        name = self._safest_lane()
+        self.results[req.rid].tier = name
+        self.lanes[name].queue.append(req)
+
+    def _trip(self, lane: _Lane, now: float, reason: str,
+              breaker_tripped: bool = False) -> None:
+        """Quarantine `lane` and displace all of its work: queued
+        requests re-route untouched (they never ran on the faulty
+        datapath); in-flight requests RESTART — emitted tokens are
+        discarded (they are fault-suspect) and the request re-prefills
+        from its prompt on the safest healthy lane, so its final output
+        is token-for-token what an exact-lane-only run produces.  Each
+        restart spends one unit of the retry budget; exhaustion marks
+        the result "failed" instead of looping forever."""
+        if lane.sentinel is not None and not breaker_tripped:
+            lane.sentinel.record_failure(now, reason)
+        lane.quarantined = True
+        displaced = len(lane.running)
+        self.trip_log.append({
+            "lane": lane.name, "t": now, "reason": reason,
+            "tokens_before_trip": lane.emitted,
+            "in_flight_displaced": displaced})
+        lane.emitted = 0
+        while lane.queue:
+            self._requeue(lane.queue.popleft())
+        for slot in sorted(lane.running):
+            run = lane.running.pop(slot)
+            bisect.insort(lane.free, slot)
+            self.active_tokens -= run.req.cost
+            rr = run.result
+            rr.tokens.clear()
+            if rr.logits is not None:
+                rr.logits.clear()
+            rr.t_admit = rr.t_first = None
+            rr.retries += 1
+            if rr.retries > self.retry_budget:
+                rr.status = "failed"
+                rr.t_done = now
+                continue
+            delay = self.retry_backoff_s * (2 ** (rr.retries - 1))
+            if delay > 0:
+                self._deferred.append((now + delay, run.req))
+            else:
+                self._requeue(run.req)
+
+    def _maybe_probe(self, lane: _Lane, now: float) -> None:
+        """Half-open re-admission: once the cooldown expires (and the
+        lane is fully drained), run the sentinel's verification burst
+        in a free slot; a clean burst lifts the quarantine."""
+        sen = lane.sentinel
+        if (sen is None or lane.running or not lane.free
+                or not sen.breaker.should_probe(now)):
+            return
+        if sen.probe(lane.backend, lane.free[0], now):
+            lane.quarantined = False
+            lane.emitted = 0
 
     def _spec_round(self, lane: _Lane, now: float) -> None:
         """One spec call: up to rounds_per_call draft+verify rounds, up
@@ -615,14 +813,21 @@ class ServingEngine:
         for _ in range(max_steps):
             now = clock.now()
             while pending and pending[0].arrival <= now:
-                self.submit(pending.popleft())
+                try:
+                    self.submit(pending[0])
+                except AdmissionRejected:
+                    break          # backpressure: hold further arrivals
+                pending.popleft()
             self.step(now)
             busy = any(l.running for l in self.lanes.values())
             queued = any(l.queue for l in self.lanes.values())
-            if not pending and not busy and not queued:
+            if (not pending and not busy and not queued
+                    and not self._deferred):
                 return {rid: self.results[rid] for rid in submitted}
-            if not busy and pending:
-                clock.wait_until(pending[0].arrival)
+            if not busy and (pending or self._deferred):
+                targets = [r.arrival for r in list(pending)[:1]]
+                targets += [t for t, _ in self._deferred]
+                clock.wait_until(min(targets))
         raise RuntimeError("engine did not drain the workload "
                            f"within {max_steps} steps")
 
@@ -643,6 +848,12 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
                  spec_drafter: Optional[str] = None,
                  spec_ks: Optional[Sequence[int]] = None,
                  spec_rounds: int = 4,
+                 fault=None,
+                 sentinel: bool = False,
+                 sentinel_cfg=None,
+                 max_queued: Optional[int] = None,
+                 retry_budget: int = 3,
+                 retry_backoff_s: float = 0.0,
                  seed: int = 0, mesh=None) -> ServingEngine:
     """One lane per accuracy tier over shared weights.
 
@@ -664,6 +875,15 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     With `mesh` every lane's slot pool is data-parallel sharded and the
     shared weights are placed TP-sharded once per `DECODE_RULES`
     (DESIGN.md §11); the scheduler is unchanged.
+
+    `fault` (a `core.faults.FaultConfig`) injects as-fabricated
+    stuck-at defects into every APPROXIMATE tier's stored tables and
+    weight words — the tiers must run an integer mode
+    (`faults.FAULT_MODES`); the exact tier stays clean, it is the
+    containment target.  `sentinel=True` (or a `SentinelConfig` via
+    `sentinel_cfg`) arms a per-approximate-lane accuracy sentinel with
+    graceful degradation (DESIGN.md §14); `max_queued` /
+    `retry_budget` / `retry_backoff_s` bound admission and restarts.
     """
     import dataclasses as dc
 
@@ -674,8 +894,19 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     from .tiers import TierRouter, build_tiers
 
     check_engine_arch(cfg)
+    if fault is not None and mesh is not None:
+        raise ValueError(
+            "fault injection does not compose with mesh execution: the "
+            "shard_map kernels quantize their words in-kernel and "
+            "cannot see the defect map (DESIGN.md §14); drop the mesh "
+            "or the fault config")
     if tiers is None:
         tiers = build_tiers()
+    if fault is not None:
+        tiers = tuple(
+            t if t.name == "exact" or t.cim is None
+            else dc.replace(t, cim=dc.replace(t.cim, fault=fault))
+            for t in tiers)
     d_tier = None
     if spec_decode is not None:
         from .tiers import spec_pair
@@ -713,6 +944,23 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
             lm, params, n_slots=slots_per_tier, max_len=max_len,
             prompt_buckets=prompt_buckets, group_buckets=group_buckets,
             mesh=mesh)
+    sentinels = None
+    if sentinel or sentinel_cfg is not None:
+        from .sentinel import LaneSentinel, reference_lm
+
+        by_name = {t.name: t for t in tiers}
+        if "exact" not in by_name:
+            raise ValueError("sentinels need an 'exact' tier as the "
+                             "shadow-scoring reference and demotion "
+                             f"target; configured: {sorted(by_name)}")
+        ref_lm = reference_lm(cfg, by_name["exact"].cim)
+        sentinels = {t.name: LaneSentinel(ref_lm, params, t.nmed,
+                                          sentinel_cfg)
+                     for t in tiers
+                     if t.name != "exact" and t.cim is not None}
     return ServingEngine(lanes, TierRouter(tiers), continuous=continuous,
                          token_budget=token_budget,
-                         record_logits=record_logits)
+                         record_logits=record_logits,
+                         sentinels=sentinels, max_queued=max_queued,
+                         retry_budget=retry_budget,
+                         retry_backoff_s=retry_backoff_s)

@@ -1,0 +1,346 @@
+"""Per-lane accuracy sentinels: online drift detection + circuit
+breaker for the serving engine (DESIGN.md §14).
+
+The DSE characterization bounds each tier's error *at the multiplier*
+(NMED over the operand distribution); `core/faults.py` models what a
+defective die does to that bound.  The sentinel closes the loop at the
+logit level, where corruption actually reaches users: every
+``period``-th decode round it shadow-scores the lane's own state on an
+exact reference — ``LM.decode_multi`` at width 1 over the *same* KV
+caches, tokens and positions the lane is about to decode (the
+spec-decode verifier machinery, DESIGN.md §12, reused as a read-only
+probe) — and maintains rolling argmax-agreement / logit-NMED statistics
+over a fixed window.
+
+When the rolling drift leaves the tier's envelope the breaker trips:
+
+    healthy --trip()--> tripped --cooldown--> half_open
+       ^                   ^                     |
+       |                   +---- probe fails ----+
+       +------------------------ probe passes ---+
+
+The engine quarantines a tripped lane (no admission, no decode),
+re-enqueues its in-flight requests on the exact lane, and — once the
+cooldown expires — runs the half-open verification burst: a synthetic
+prompt admitted into a free slot, ``probe_rounds`` decode rounds each
+shadow-scored, every one required to agree.  Only a clean burst
+re-admits the lane.
+
+Everything here is host-side numpy except the shadow scorer itself,
+which is one more pre-warmed jitted executable: `LaneSentinel.warmup`
+traces it before the engine arms its retrace probe, so trip / demote /
+recover cycles keep ``steady_retraces() == 0``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class LaneHealthError(RuntimeError):
+    """A lane produced numerically invalid output (non-finite logits).
+
+    Raised by the sampling path instead of silently emitting
+    argmax-of-garbage; the engine treats it as an immediate sentinel
+    trip on sentinel-guarded lanes and re-raises it elsewhere.
+    """
+
+
+# ---------------------------------------------------------------------------
+# Configuration + rolling statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelConfig:
+    """Drift-detection policy for one lane.
+
+    The NMED trip threshold is ``max(nmed_floor, nmed_factor *
+    envelope)`` where ``envelope`` is the tier's DSE-characterized
+    multiplier NMED: logit-level error accumulates over K-deep dot
+    products, so the factor maps the per-MAC bound to an end-to-end
+    allowance, and the floor keeps near-exact tiers (envelope ~ 0) from
+    tripping on quantization dust.
+    """
+
+    period: int = 2          # shadow-score every Nth decode round
+    window: int = 4          # rolling window (shadow samples)
+    min_samples: int = 2     # no trip before this many samples
+    min_agree: float = 0.3   # rolling argmax agreement floor (the log
+    #                          tiers legitimately flip argmaxes on near
+    #                          ties; NMED is the primary signal)
+    nmed_factor: float = 10.0
+    nmed_floor: float = 0.25
+    cooldown_s: float = 0.1  # quarantine time before half-open probe
+    #                          (0 would re-probe a still-faulty lane on
+    #                          every scheduler tick)
+    probe_rounds: int = 4    # verification-burst length
+
+    def __post_init__(self):
+        if self.period < 1:
+            raise ValueError("period must be >= 1")
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if self.probe_rounds < 1:
+            raise ValueError("probe_rounds must be >= 1")
+        if not 0.0 <= self.min_agree <= 1.0:
+            raise ValueError("min_agree must be in [0, 1]")
+
+    def nmed_threshold(self, envelope: float) -> float:
+        return max(self.nmed_floor, self.nmed_factor * envelope)
+
+
+class RollingStats:
+    """Fixed-window mean of (argmax agreement, logit NMED) samples."""
+
+    def __init__(self, window: int):
+        self._agree: deque = deque(maxlen=window)
+        self._nmed: deque = deque(maxlen=window)
+
+    def push(self, agree: float, nmed: float) -> None:
+        self._agree.append(float(agree))
+        self._nmed.append(float(nmed))
+
+    def reset(self) -> None:
+        self._agree.clear()
+        self._nmed.clear()
+
+    @property
+    def n(self) -> int:
+        return len(self._agree)
+
+    @property
+    def agree(self) -> float:
+        return float(np.mean(self._agree)) if self._agree else 1.0
+
+    @property
+    def nmed(self) -> float:
+        return float(np.mean(self._nmed)) if self._nmed else 0.0
+
+
+def logit_drift(lane_logits: np.ndarray, ref_logits: np.ndarray,
+                slots) -> Tuple[float, float]:
+    """(argmax agreement, normalized mean logit error) over the live
+    slots.  NMED normalizes each row by the reference's mean magnitude
+    so the statistic is scale-free, like the multiplier-level NMED it
+    is compared against."""
+    idx = np.asarray(list(slots), np.int64)
+    a = np.asarray(lane_logits, np.float64)[idx]
+    e = np.asarray(ref_logits, np.float64)[idx]
+    agree = float((a.argmax(axis=-1) == e.argmax(axis=-1)).mean())
+    denom = np.abs(e).mean(axis=-1) + 1e-12
+    nmed = float((np.abs(a - e).mean(axis=-1) / denom).mean())
+    return agree, nmed
+
+
+# ---------------------------------------------------------------------------
+# Breaker state machine
+# ---------------------------------------------------------------------------
+
+HEALTHY = "healthy"
+TRIPPED = "tripped"
+HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """healthy -> tripped -> half_open -> healthy|tripped."""
+
+    def __init__(self, cooldown_s: float = 0.0):
+        self.cooldown_s = float(cooldown_s)
+        self.state = HEALTHY
+        self.tripped_at: Optional[float] = None
+        self.n_trips = 0
+        self.n_recoveries = 0
+
+    def trip(self, now: float) -> None:
+        self.state = TRIPPED
+        self.tripped_at = now
+        self.n_trips += 1
+
+    def should_probe(self, now: float) -> bool:
+        return (self.state == TRIPPED
+                and now - self.tripped_at >= self.cooldown_s)
+
+    def probe_started(self) -> None:
+        if self.state != TRIPPED:
+            raise RuntimeError(f"cannot probe from state {self.state!r}")
+        self.state = HALF_OPEN
+
+    def probe_passed(self) -> None:
+        self.state = HEALTHY
+        self.tripped_at = None
+        self.n_recoveries += 1
+
+    def probe_failed(self, now: float) -> None:
+        self.state = TRIPPED
+        self.tripped_at = now
+
+
+# ---------------------------------------------------------------------------
+# The lane sentinel
+# ---------------------------------------------------------------------------
+
+
+class LaneSentinel:
+    """Shadow-scoring drift detector + breaker for one approximate lane.
+
+    `lm` is the exact reference model (the spec-decode verifier config:
+    exact family, ``per_token=True`` so the width-1 batched scoring is
+    bitwise the sequential exact decode, DESIGN.md §12) sharing the
+    lane's weights; `envelope` is the lane tier's characterized NMED.
+
+    Engine protocol, per decode round on a live lane:
+
+      1. ``due()``            — count the round; True every period-th
+      2. ``shadow(backend)``  — exact logits for the lane's *current*
+                                state; MUST run before the lane's own
+                                (cache-donating) decode
+      3. ``observe(...)``     — push drift stats, return True on trip
+
+    Quarantine protocol: ``breaker.should_probe(now)`` then
+    ``probe(backend, slot, now)`` — the half-open verification burst.
+    """
+
+    def __init__(self, lm, params, envelope: float,
+                 cfg: Optional[SentinelConfig] = None):
+        self.lm, self.params = lm, params
+        self.envelope = float(envelope)
+        self.cfg = cfg or SentinelConfig()
+        self.stats = RollingStats(self.cfg.window)
+        self.breaker = CircuitBreaker(self.cfg.cooldown_s)
+        self._score = None        # jitted decode_multi, built lazily
+        self._round = 0
+        self.rounds_since_reset = 0
+        self.n_checks = 0
+        self.last_detection_rounds: Optional[int] = None
+        self.last_trip_reason: Optional[str] = None
+
+    # -- shadow scoring ----------------------------------------------------
+    def _scorer(self):
+        if self._score is None:
+            import jax
+
+            # read-only: no donation — the lane's caches stay alive for
+            # its own decode call right after
+            self._score = jax.jit(self.lm.decode_multi)
+        return self._score
+
+    def shadow(self, backend) -> np.ndarray:
+        """Exact next-token logits (B, V) for the lane's current state.
+
+        Reads ``backend.caches`` non-destructively (the jit does not
+        donate; the returned advanced caches are discarded)."""
+        import jax.numpy as jnp
+
+        tok = jnp.asarray(backend.slot_tokens[:, None], jnp.int32)
+        pos = jnp.asarray(backend.slot_pos, jnp.int32)
+        with backend._ctx():
+            logits, _ = self._scorer()(self.params, backend.caches,
+                                       tok, pos)
+        return np.asarray(logits[:, 0, :], np.float32)
+
+    # -- the observation protocol ------------------------------------------
+    def due(self) -> bool:
+        self._round += 1
+        self.rounds_since_reset += 1
+        return self._round % self.cfg.period == 0
+
+    def observe(self, lane_logits, ref_logits, slots,
+                now: float) -> bool:
+        """Push one drift sample; True if the lane just tripped."""
+        self.n_checks += 1
+        lane = np.asarray(lane_logits)
+        if not np.isfinite(lane).all():
+            self._trip(now, "non-finite lane logits")
+            return True
+        agree, nmed = logit_drift(lane, ref_logits, slots)
+        self.stats.push(agree, nmed)
+        if self.stats.n < self.cfg.min_samples:
+            return False
+        thresh = self.cfg.nmed_threshold(self.envelope)
+        if self.stats.agree < self.cfg.min_agree:
+            self._trip(now, f"argmax agreement {self.stats.agree:.3f} < "
+                            f"{self.cfg.min_agree:.3f}")
+            return True
+        if self.stats.nmed > thresh:
+            self._trip(now, f"logit NMED {self.stats.nmed:.3g} > "
+                            f"{thresh:.3g}")
+            return True
+        return False
+
+    def record_failure(self, now: float, reason: str) -> None:
+        """Immediate trip on a diagnostic failure (LaneHealthError)."""
+        self._trip(now, reason)
+
+    def _trip(self, now: float, reason: str) -> None:
+        self.last_trip_reason = reason
+        self.last_detection_rounds = self.rounds_since_reset
+        self.breaker.trip(now)
+        self.stats.reset()
+        self._round = 0
+        self.rounds_since_reset = 0
+
+    @property
+    def tripped(self) -> bool:
+        return self.breaker.state != HEALTHY
+
+    # -- half-open verification burst --------------------------------------
+    def probe(self, backend, slot: int, now: float) -> bool:
+        """Admit a synthetic prompt into `slot` and shadow-score
+        ``probe_rounds`` decode rounds; every round must agree (exact
+        argmax match, NMED within the envelope) for the lane to be
+        re-admitted.  Uses only pre-warmed shapes: the smallest
+        (1, prompt-bucket) prefill and the pool decode — the probe slot
+        is a scheduler-free row whose pool state the next real
+        admission fully overwrites (same contract as warmup)."""
+        self.breaker.probe_started()
+        plen = min(backend.prompt_buckets)
+        vocab = backend.lm.cfg.vocab
+        prompt = (np.arange(1, plen + 1, dtype=np.int64) % vocab)
+        thresh = self.cfg.nmed_threshold(self.envelope)
+        ok = True
+        try:
+            backend.admit([prompt], [slot])
+            for _ in range(self.cfg.probe_rounds):
+                ref = self.shadow(backend)
+                backend.decode_round()
+                agree, nmed = logit_drift(backend.last_decode_logits,
+                                          ref, [slot])
+                if agree < 1.0 or nmed > thresh:
+                    ok = False
+                    break
+        except LaneHealthError:
+            ok = False
+        if ok:
+            self.breaker.probe_passed()
+        else:
+            self.breaker.probe_failed(now)
+        self.stats.reset()
+        self._round = 0
+        self.rounds_since_reset = 0
+        return ok
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, backend) -> int:
+        """Compile the shadow scorer against the lane's cache/pool
+        shapes (and its host-side slice) so the first real shadow score
+        — and the half-open probe — never trace.  Must run before the
+        engine arms its steady-state retrace probe."""
+        self.shadow(backend)
+        return 1
+
+
+def reference_lm(cfg, exact_cim):
+    """The sentinel's exact reference model over shared weights: the
+    ladder's exact rung upgraded to per-token activation scales — the
+    same construction as the spec-decode verifier (tiers.spec_pair)."""
+    import dataclasses as dc
+
+    from repro.models.transformer import LM
+
+    ref = dc.replace(exact_cim, per_token=True)
+    return LM(dc.replace(cfg, cim=ref))

@@ -1,0 +1,209 @@
+"""Stuck-at fault injection (core/faults.py + dispatch, DESIGN.md §14).
+
+The fault model's contract: defect maps are pure functions of
+(seed, tag, nbits, shape) — byte-identical across calls AND processes;
+a cell is stuck one way or the other, never both; faulted words stay in
+their storage domain; the sign-magnitude LUT rebuild preserves zero
+annihilation under any defect map; and `GemmParams.fault` separates
+clean from as-fabricated executables in every cache key with zero
+steady-state retraces.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.faults as faults_mod
+from repro.core import CiMConfig
+from repro.core.approx_gemm import GemmParams, cim_matmul, trace_count
+from repro.core.faults import (FAULT_MODES, FaultConfig,
+                               apply_weight_faults, fault_unsigned_words,
+                               faulted_nibble_subs_flat,
+                               faulted_signed_lut_flat, stuck_at_masks)
+
+F = FaultConfig(p_sa0=0.01, p_sa1=0.01, seed=3)
+SPEC_KEY = ("appro42", 8, "yang1", None)
+
+
+# ------------------------------------------------------------ config ----
+
+
+@pytest.mark.parametrize("kw", [
+    {"p_sa0": -0.1}, {"p_sa1": 1.5}, {"p_sa0": 0.6, "p_sa1": 0.5},
+])
+def test_config_validation(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+def test_config_rate_and_hashability():
+    f = FaultConfig(p_sa0=0.01, p_sa1=0.03, seed=7)
+    assert f.rate == pytest.approx(0.04)
+    assert f == FaultConfig(p_sa0=0.01, p_sa1=0.03, seed=7)
+    assert hash(f) == hash(FaultConfig(p_sa0=0.01, p_sa1=0.03, seed=7))
+    assert f != dataclasses.replace(f, seed=8)
+
+
+def test_from_yield_scale_and_split(monkeypatch):
+    monkeypatch.setattr(faults_mod, "_pf_for_rows", lambda rows: 0.02)
+    f = FaultConfig.from_yield(rows=32, sa1_frac=0.25, scale=2.0)
+    assert f.rate == pytest.approx(0.04)
+    assert f.p_sa1 == pytest.approx(0.01)
+    assert FaultConfig.from_yield(rows=32, scale=1e6).rate == 1.0
+
+
+def test_fault_needs_integer_mode():
+    with pytest.raises(ValueError, match="integer storage"):
+        GemmParams(family="appro42", mode="surrogate_fast", fault=F)
+    with pytest.raises(ValueError, match="integer storage"):
+        CiMConfig(family="appro42", mode="surrogate_fast", fault=F)
+    for mode in FAULT_MODES:
+        GemmParams(family="appro42", mode=mode, fault=F)
+
+
+# ------------------------------------------------------------- masks ----
+
+
+def test_masks_deterministic_and_exclusive():
+    m0a, m1a = stuck_at_masks(F, (64, 32), 8, "w")
+    m0b, m1b = stuck_at_masks(F, (64, 32), 8, "w")
+    np.testing.assert_array_equal(m0a, m0b)
+    np.testing.assert_array_equal(m1a, m1b)
+    assert (m0a & m1a).sum() == 0          # never stuck both ways
+    assert m0a.max() < (1 << 8) and m1a.max() < (1 << 8)
+
+
+def test_masks_keyed_on_seed_and_tag():
+    base = stuck_at_masks(F, (64, 32), 8, "w")
+    other_seed = stuck_at_masks(dataclasses.replace(F, seed=4),
+                                (64, 32), 8, "w")
+    other_tag = stuck_at_masks(F, (64, 32), 8, "lut")
+    assert not np.array_equal(base[0] | base[1],
+                              other_seed[0] | other_seed[1])
+    assert not np.array_equal(base[0] | base[1],
+                              other_tag[0] | other_tag[1])
+
+
+def test_mask_empirical_rate():
+    f = FaultConfig(p_sa0=0.03, p_sa1=0.02, seed=0)
+    m0, m1 = stuck_at_masks(f, (200, 200), 8, "w")
+    bits = 200 * 200 * 8
+    n0 = np.unpackbits(m0.astype(np.uint8)[..., None], axis=-1).sum()
+    n1 = np.unpackbits(m1.astype(np.uint8)[..., None], axis=-1).sum()
+    assert n0 / bits == pytest.approx(0.03, rel=0.1)
+    assert n1 / bits == pytest.approx(0.02, rel=0.1)
+
+
+def test_masks_never_use_python_hash():
+    """PYTHONHASHSEED-salted `hash` would silently break cross-process
+    determinism; the derivation must be SeedSequence over crc32."""
+    body = (
+        "import json, sys, zlib\n"
+        f"sys.path.insert(0, {_SRC!r})\n"
+        "from repro.core.faults import FaultConfig, stuck_at_masks\n"
+        "f = FaultConfig(p_sa0=0.01, p_sa1=0.01, seed=3)\n"
+        "m0, m1 = stuck_at_masks(f, (64, 32), 8, 'w')\n"
+        "print(json.dumps([zlib.crc32(m0.tobytes()),\n"
+        "                  zlib.crc32(m1.tobytes())]))\n")
+    out = subprocess.run([sys.executable, "-c", body],
+                         capture_output=True, text=True, timeout=120,
+                         env={**os.environ, "PYTHONHASHSEED": "12345"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    child = json.loads(out.stdout.strip().splitlines()[-1])
+    m0, m1 = stuck_at_masks(F, (64, 32), 8, "w")
+    assert child == [zlib.crc32(m0.tobytes()), zlib.crc32(m1.tobytes())]
+
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# ------------------------------------------------------------- words ----
+
+
+def test_fault_unsigned_words_domain():
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 256, (32, 32), dtype=np.int64)
+    out = fault_unsigned_words(words, F, 8, "lut")
+    assert out.min() >= 0 and out.max() < 256
+    all0 = fault_unsigned_words(words, FaultConfig(p_sa0=1.0), 8, "lut")
+    all1 = fault_unsigned_words(words, FaultConfig(p_sa1=1.0), 8, "lut")
+    assert (all0 == 0).all() and (all1 == 255).all()
+
+
+def test_weight_faults_identity_at_zero_rate_and_clipped():
+    rng = np.random.default_rng(1)
+    wq = jnp.asarray(rng.integers(-127, 128, (48, 16), dtype=np.int8))
+    clean = apply_weight_faults(wq, FaultConfig(), 8)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(wq))
+    hot = apply_weight_faults(
+        wq, FaultConfig(p_sa0=0.05, p_sa1=0.05, seed=2), 8)
+    hot = np.asarray(hot)
+    assert hot.min() >= -127 and hot.max() <= 127   # saturating read
+    again = np.asarray(apply_weight_faults(
+        wq, FaultConfig(p_sa0=0.05, p_sa1=0.05, seed=2), 8))
+    np.testing.assert_array_equal(hot, again)
+    assert (hot != np.asarray(wq)).any()
+
+
+# ----------------------------------------------------- stored tables ----
+
+
+def test_faulted_lut_preserves_zero_annihilation():
+    for fault in (F, FaultConfig(p_sa0=0.2, p_sa1=0.2, seed=9)):
+        lut = faulted_signed_lut_flat(SPEC_KEY, fault).reshape(256, 256)
+        half = 128                     # row/col of operand value 0
+        assert (lut[half, :] == 0).all() and (lut[:, half] == 0).all()
+        clean = faulted_signed_lut_flat(SPEC_KEY, FaultConfig())
+        assert (lut.ravel() != clean).any()
+
+
+def test_faulted_nibble_subs_domain():
+    # only bit-exactly half-word-decomposable families store sub-LUTs
+    subs = faulted_nibble_subs_flat(("exact", 8, "yang1", None), F)
+    assert subs is not None and subs.shape == (4 * 16 * 16,)
+    assert subs.min() >= 0 and subs.max() < (1 << 16)
+    assert faulted_nibble_subs_flat(SPEC_KEY, F) is None  # appro42
+
+
+# ---------------------------------------------------------- dispatch ----
+
+
+def test_fault_separates_executables_without_retraces():
+    """Clean and faulted params of the same shape are distinct cache
+    entries (divergent outputs), each deterministic, and steady-state
+    repeat calls — including flipping between the two — never retrace."""
+    gp = GemmParams(family="appro42", bits=8, mode="bit_exact")
+    gpf = dataclasses.replace(gp, fault=FaultConfig(
+        p_sa0=0.01, p_sa1=0.01, seed=5))
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (8, 64))
+    w = jax.random.normal(kw, (64, 16))
+    y = np.asarray(cim_matmul(x, w, gp))
+    yf = np.asarray(cim_matmul(x, w, gpf))
+    assert not np.allclose(y, yf)
+    t0 = trace_count()
+    for _ in range(3):
+        np.testing.assert_array_equal(np.asarray(cim_matmul(x, w, gp)), y)
+        np.testing.assert_array_equal(np.asarray(cim_matmul(x, w, gpf)),
+                                      yf)
+    assert trace_count() == t0
+
+
+def test_fault_rejected_on_mesh_path():
+    gpf = GemmParams(family="exact", bits=8, mode="exact",
+                     fault=FaultConfig(p_sa0=0.01))
+    x = jnp.zeros((8, 64))
+    w = jnp.zeros((64, 16))
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]), ("x",))
+    with pytest.raises(ValueError, match="mesh"):
+        cim_matmul(x, w, gpf, mesh=mesh)

@@ -1,0 +1,323 @@
+"""Lane sentinels, circuit breaker and graceful degradation
+(serving/sentinel.py + engine integration, DESIGN.md §14).
+
+Two layers, mirroring test_serving.py:
+
+  * pure-host units: SentinelConfig thresholds, rolling stats, breaker
+    state machine, the drift statistic, and LaneSentinel.observe over
+    synthetic logits;
+  * scheduler integration against fake lanes (no jax): a scripted trip
+    must quarantine the lane, discard its fault-suspect tokens, restart
+    in-flight requests on the safest healthy lane, honor the retry
+    budget and backoff, re-admit through the half-open probe, demote
+    pinned routing around quarantined tiers, and bound admission with
+    structured backpressure.
+
+The real-LM differential acceptance run (fault injected at the
+Table V-characterized rate -> trip -> demote -> token-for-token
+identity with an exact-lane-only run) lives in benchmarks/
+bench_faults.py; test_serve_consistency.py keeps the underlying
+exact-lane invariants honest.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving import (AdmissionRejected, CircuitBreaker,
+                           EngineStats, LaneHealthError, Request,
+                           RollingStats, SentinelConfig, ServingEngine,
+                           SimClock)
+from repro.serving.engine import LMLaneBackend
+from repro.serving.sentinel import (HALF_OPEN, HEALTHY, TRIPPED,
+                                    LaneSentinel, logit_drift)
+from repro.serving.tiers import AccuracyTier, TierRouter
+
+from test_serving import FakeLane, _fake_tiers, _req
+
+
+# ------------------------------------------------------------- units ----
+
+
+def test_sentinel_config_validation():
+    for kw in ({"period": 0}, {"window": 0}, {"probe_rounds": 0},
+               {"min_agree": 1.5}):
+        with pytest.raises(ValueError):
+            SentinelConfig(**kw)
+    cfg = SentinelConfig(nmed_factor=10.0, nmed_floor=0.25)
+    assert cfg.nmed_threshold(0.0) == 0.25        # floor for near-exact
+    assert cfg.nmed_threshold(0.1) == pytest.approx(1.0)
+
+
+def test_rolling_stats_window():
+    st = RollingStats(window=3)
+    assert st.agree == 1.0 and st.nmed == 0.0     # benign defaults
+    for a in (0.0, 0.0, 0.0, 1.0, 1.0, 1.0):
+        st.push(a, 0.5)
+    assert st.n == 3 and st.agree == 1.0          # old samples evicted
+    st.reset()
+    assert st.n == 0 and st.agree == 1.0
+
+
+def test_breaker_state_machine():
+    br = CircuitBreaker(cooldown_s=1.0)
+    assert br.state == HEALTHY
+    with pytest.raises(RuntimeError):
+        br.probe_started()                        # healthy: no probe
+    br.trip(now=10.0)
+    assert br.state == TRIPPED and br.n_trips == 1
+    assert not br.should_probe(10.5)              # cooling down
+    assert br.should_probe(11.0)
+    br.probe_started()
+    assert br.state == HALF_OPEN
+    br.probe_failed(now=11.0)
+    assert br.state == TRIPPED and not br.should_probe(11.5)
+    br.probe_started() if br.should_probe(12.0) else None
+    br.probe_passed()
+    assert br.state == HEALTHY and br.n_recoveries == 1
+
+
+def test_logit_drift_statistic():
+    ref = np.array([[1.0, 2.0, 4.0], [1.0, 2.0, 4.0]])
+    agree, nmed = logit_drift(ref, ref, slots=[0, 1])
+    assert agree == 1.0 and nmed == pytest.approx(0.0)
+    lane = np.array([[4.0, 2.0, 1.0],             # argmax flipped
+                     [1.0, 2.0, 4.0]])
+    agree, nmed = logit_drift(lane, ref, slots=[0, 1])
+    assert agree == 0.5
+    # slot 0: mean|a-e| = 2, mean|e| = 7/3 -> 6/7; slot 1 exact
+    assert nmed == pytest.approx(0.5 * 6 / 7)
+    agree, _ = logit_drift(lane, ref, slots=[1])  # dead slots ignored
+    assert agree == 1.0
+
+
+def _sentinel(envelope=0.02, **kw):
+    cfg = SentinelConfig(period=1, window=2, min_samples=2, **kw)
+    return LaneSentinel(lm=None, params=None, envelope=envelope, cfg=cfg)
+
+
+def test_observe_trips_on_nmed_after_min_samples():
+    sen = _sentinel()
+    ref = np.ones((1, 8))
+    bad = np.full((1, 8), 50.0)
+    assert sen.due()
+    assert not sen.observe(bad, ref, [0], now=0.0)   # 1 < min_samples
+    assert sen.due()
+    assert sen.observe(bad, ref, [0], now=0.1)
+    assert sen.tripped and "NMED" in sen.last_trip_reason
+    assert sen.last_detection_rounds == 2
+
+
+def test_observe_trips_on_agreement():
+    sen = _sentinel(min_agree=0.9)
+    ref = np.tile(np.array([[0.0, 1.0]]), (1, 1))
+    flipped = np.array([[1.0, 0.999]])               # tiny NMED, wrong argmax
+    sen.due(), sen.observe(flipped, ref, [0], 0.0)
+    sen.due()
+    assert sen.observe(flipped, ref, [0], 0.1)
+    assert "agreement" in sen.last_trip_reason
+
+
+def test_observe_trips_immediately_on_nonfinite():
+    sen = _sentinel()
+    ref = np.ones((1, 4))
+    lane = np.array([[1.0, np.nan, 1.0, 1.0]])
+    sen.due()
+    assert sen.observe(lane, ref, [0], 0.0)          # no min_samples wait
+    assert "non-finite" in sen.last_trip_reason
+
+
+def test_greedy_guard_raises_lane_health_error():
+    lg = np.zeros((2, 1, 4), np.float32)
+    lg[1, 0, 2] = np.inf
+    with pytest.raises(LaneHealthError, match="non-finite"):
+        LMLaneBackend._greedy(None, lg)
+
+
+# ----------------------------------------- scheduler integration --------
+
+
+class FakeSentinel:
+    """LaneSentinel double: scripted trip after `trip_at` checks,
+    scripted probe verdict — drives the engine's quarantine machinery
+    without jax."""
+
+    def __init__(self, trip_at=2, probe_ok=True):
+        self.trip_at, self.probe_ok = trip_at, probe_ok
+        self.checks = 0
+        self.breaker = CircuitBreaker(cooldown_s=0.0)
+        self.last_trip_reason = None
+
+    def warmup(self, backend):
+        return 0
+
+    def due(self):
+        return True
+
+    def shadow(self, backend):
+        return np.zeros(1)
+
+    def observe(self, lane_logits, ref, slots, now):
+        self.checks += 1
+        if self.checks == self.trip_at:
+            self.last_trip_reason = "scripted drift"
+            self.breaker.trip(now)
+            return True
+        return False
+
+    def record_failure(self, now, reason):
+        self.last_trip_reason = reason
+        self.breaker.trip(now)
+
+    def probe(self, backend, slot, now):
+        self.breaker.probe_started()
+        if self.probe_ok:
+            self.breaker.probe_passed()
+        else:
+            self.breaker.probe_failed(now)
+        return self.probe_ok
+
+
+def _guarded_engine(trip_at=2, probe_ok=False, **kw):
+    tiers = _fake_tiers(("a", "b"))       # a: nmed 0.000, b: 0.001
+    lanes = {t.name: FakeLane(3) for t in tiers}
+    for lane in lanes.values():
+        lane.last_decode_logits = None    # engine reads it post-decode
+    sen = FakeSentinel(trip_at=trip_at, probe_ok=probe_ok)
+    eng = ServingEngine(lanes, TierRouter(tiers), check_invariants=True,
+                        sentinels={"b": sen}, **kw)
+    return eng, sen
+
+
+def test_trip_restarts_in_flight_on_safest_lane():
+    eng, sen = _guarded_engine(trip_at=2, probe_ok=False)
+    reqs = [_req(i, tier="b", max_new=5) for i in range(2)]
+    res = eng.run(reqs, clock=SimClock())
+    assert len(eng.trip_log) == 1
+    t = eng.trip_log[0]
+    assert t["lane"] == "b" and t["in_flight_displaced"] == 2
+    assert t["tokens_before_trip"] == 4   # 2 slots x 2 emitted rounds
+    for r in res.values():
+        assert r.done and r.status == "ok"
+        assert r.tier == "a" and r.retries == 1
+        assert len(r.tokens) == 5
+        # fault-suspect tokens discarded: the sequence is one fresh
+        # contiguous counter run from the healthy lane's admission
+        assert r.tokens == list(range(r.tokens[0], r.tokens[0] + 5))
+    assert eng.lanes["b"].quarantined     # probe keeps failing
+    assert eng.active_tokens == 0
+
+
+def test_queued_requests_reroute_without_retry_penalty():
+    eng, _ = _guarded_engine(trip_at=1, probe_ok=False)
+    running = [_req(0, tier="b", max_new=4)]
+    queued = [_req(i, tier="b", max_new=2, arrival=0.0)
+              for i in range(1, 6)]      # > n_slots: some stay queued
+    res = eng.run(running + queued, clock=SimClock())
+    assert all(r.done and r.status == "ok" for r in res.values())
+    displaced = [r for r in res.values() if r.retries]
+    rerouted = [r for r in res.values() if not r.retries]
+    assert displaced and rerouted        # both paths exercised
+    assert all(r.tier == "a" for r in res.values())
+
+
+def test_probe_readmits_lane():
+    eng, sen = _guarded_engine(trip_at=2, probe_ok=True)
+    res = eng.run([_req(0, tier="b", max_new=6)], clock=SimClock())
+    assert res[0].done and res[0].tier == "a"
+    assert not eng.lanes["b"].quarantined
+    assert sen.breaker.n_recoveries == 1
+    assert eng.submit(_req(7, tier="b")) == "b"   # takes traffic again
+
+
+def test_retry_budget_exhaustion_marks_failed():
+    eng, _ = _guarded_engine(trip_at=2, probe_ok=False, retry_budget=0)
+    res = eng.run([_req(0, tier="b", max_new=5)], clock=SimClock())
+    assert res[0].status == "failed" and res[0].done
+    assert res[0].retries == 1
+    stats = EngineStats.from_results(res, 1.0)
+    assert stats.n_failed == 1 and stats.total_tokens == 0
+
+
+def test_retry_backoff_defers_restart():
+    eng, _ = _guarded_engine(trip_at=2, probe_ok=False,
+                             retry_backoff_s=0.5)
+    clock = SimClock()
+    res = eng.run([_req(0, tier="b", max_new=4)], clock=clock)
+    assert res[0].done and res[0].status == "ok" and res[0].retries == 1
+    assert clock.t >= 0.5                 # waited out the backoff
+    assert res[0].t_admit >= 0.5
+
+
+def test_trip_on_lane_health_error_during_decode():
+    class SickLane(FakeLane):
+        def decode_round(self):
+            raise LaneHealthError("non-finite logits (test)")
+
+    tiers = _fake_tiers(("a", "b"))
+    lanes = {"a": FakeLane(3), "b": SickLane(3)}
+    lanes["a"].last_decode_logits = None
+    sen = FakeSentinel(trip_at=10 ** 9)
+    eng = ServingEngine(lanes, TierRouter(tiers), check_invariants=True,
+                        sentinels={"b": sen})
+    res = eng.run([_req(0, tier="b", max_new=3)], clock=SimClock())
+    assert res[0].done and res[0].tier == "a" and res[0].retries == 1
+    assert "non-finite" in eng.trip_log[0]["reason"]
+    assert sen.breaker.n_trips == 1
+
+
+def test_health_error_without_sentinel_propagates():
+    class SickLane(FakeLane):
+        def decode_round(self):
+            raise LaneHealthError("boom")
+
+    tiers = _fake_tiers(("a",))
+    eng = ServingEngine({"a": SickLane(2)}, TierRouter(tiers))
+    with pytest.raises(LaneHealthError):
+        eng.run([_req(0, tier="a")], clock=SimClock())
+
+
+def test_router_demotes_pinned_tier_around_quarantine():
+    tiers = [AccuracyTier("exact", None, 0.0, 3.0),
+             AccuracyTier("balanced", None, 0.01, 2.0),
+             AccuracyTier("economy", None, 0.05, 1.0)]
+    router = TierRouter(tiers)
+    # pinned economy, economy down -> balanced (nmed <= economy's;
+    # cheapest energy among the not-worse healthy rungs)
+    assert router.route(None, "economy",
+                        avoid={"economy"}).name == "balanced"
+    assert router.route(None, "balanced",
+                        avoid={"balanced", "economy"}).name == "exact"
+    with pytest.raises(ValueError):
+        router.route(None, "exact", avoid={"exact"})
+    # tolerance routing skips quarantined rungs too
+    assert router.route(0.1, None, avoid={"economy"}).name == "balanced"
+
+
+def test_admission_backpressure():
+    eng, _ = _guarded_engine(trip_at=10 ** 9, max_queued=2)
+    eng.submit(_req(0, tier="b"))
+    eng.submit(_req(1, tier="b"))
+    with pytest.raises(AdmissionRejected) as ei:
+        eng.submit(_req(2, tier="b"))
+    assert ei.value.rid == 2 and ei.value.queued == 2
+    assert ei.value.limit == 2
+    assert 2 not in eng.results          # rejected: no result entry
+
+
+def test_backpressure_holds_arrivals_until_drain():
+    eng, _ = _guarded_engine(trip_at=10 ** 9, max_queued=1)
+    reqs = [_req(i, tier="a", max_new=2, arrival=0.0) for i in range(8)]
+    res = eng.run(reqs, clock=SimClock())
+    assert len(res) == 8                  # held, not dropped
+    assert all(r.done and r.status == "ok" for r in res.values())
+
+
+def test_build_engine_rejects_fault_on_mesh():
+    from repro.configs import get_config
+    from repro.core.faults import FaultConfig
+    from repro.serving import build_engine
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    with pytest.raises(ValueError, match="mesh"):
+        build_engine(cfg, fault=FaultConfig(p_sa0=0.01),
+                     mesh=object())
