@@ -35,7 +35,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 
 import numpy as np
 
@@ -74,20 +73,19 @@ def _rate_row(cfg, params, tiers, exact_engine, scale, pf, *, n_req,
     The faulted engine's retrace probe is read right after its run —
     before anything else traces — so the count is its own."""
     from repro.core.faults import FaultConfig
-    from repro.serving import EngineStats, SentinelConfig
+    from repro.serving import EngineStats, RealClock, SentinelConfig
 
     fault = (FaultConfig.from_yield(rows=YIELD_ROWS, scale=scale)
              if scale > 0 else None)
     eng = _build(cfg, params, tiers, fault=fault,
                  sentinel_cfg=SentinelConfig(), smoke=smoke)
-    t0 = time.perf_counter()
+    wclk = RealClock()
+    t0 = wclk.now()
     eng.warmup()
-    warm_s = time.perf_counter() - t0
+    warm_s = wclk.now() - t0
     wl = _workload(cfg, n_req, seed)
-    t0 = time.perf_counter()
     results = eng.run(wl)
-    stats = EngineStats.from_results(results,
-                                     time.perf_counter() - t0)
+    stats = EngineStats.from_results(results, eng.last_run_s)
     retraces = eng.steady_retraces()
 
     exact_engine.warmup()        # re-arm the (global) retrace probe

@@ -42,7 +42,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 
 import numpy as np
 
@@ -70,11 +69,13 @@ def _stats_dict(stats, engine, warm_s):
 
 
 def _serve(engine, wl):
+    # durations come from the engine's own clock (engine.last_run_s,
+    # DESIGN.md §15) — the same time source the scheduler and telemetry
+    # spans read, so bench numbers and traces agree
     from repro.serving import EngineStats
 
-    t0 = time.perf_counter()
     results = engine.run(wl)
-    stats = EngineStats.from_results(results, time.perf_counter() - t0)
+    stats = EngineStats.from_results(results, engine.last_run_s)
     assert all(r.done for r in results.values()), "workload not drained"
     return stats
 
@@ -134,9 +135,7 @@ def _spec_sweep(cfg, params, *, smoke: bool):
     ±20% wall-clock drift, and interleaving makes the drift hit both
     engines equally instead of biasing the ratio.
     """
-    import time as _time
-
-    from repro.serving import (build_engine, build_tiers,
+    from repro.serving import (RealClock, build_engine, build_tiers,
                                poisson_workload, spec_pair)
 
     ks = (1, 2) if smoke else (1, 2, 4, 8)
@@ -157,9 +156,10 @@ def _spec_sweep(cfg, params, *, smoke: bool):
     base.warmup()
     spec = build_engine(cfg, params, tiers=tiers, spec_decode=ks[0],
                         spec_ks=ks, spec_rounds=spec_rounds, **kw)
-    t0 = _time.perf_counter()
+    wclk = RealClock()
+    t0 = wclk.now()
     spec.warmup()
-    warm_s = _time.perf_counter() - t0
+    warm_s = wclk.now() - t0
     base.warmup()        # re-arm: the retrace probe is a global counter
     sb = spec.lanes["exact"].backend
 
@@ -240,7 +240,7 @@ def run(fast: bool = False, smoke: bool = False):
 
     from repro.configs import get_config
     from repro.models.transformer import LM
-    from repro.serving import build_tiers, poisson_workload
+    from repro.serving import RealClock, build_tiers, poisson_workload
 
     cfg = get_config(ARCH, smoke=True)
     params = LM(cfg).init(jax.random.PRNGKey(0))
@@ -278,13 +278,14 @@ def run(fast: bool = False, smoke: bool = False):
 
     kw = dict(slots_per_tier=slots, max_len=max_len,
               prompt_buckets=pbkts, group_buckets=gbkts)
+    wclk = RealClock()
     engines, warm_s = {}, {}
     for cont in (True, False):
         engines[cont] = build_engine(cfg, params, tiers=tiers,
                                      continuous=cont, **kw)
-        t0 = time.perf_counter()
+        t0 = wclk.now()
         engines[cont].warmup()
-        warm_s[cont] = time.perf_counter() - t0
+        warm_s[cont] = wclk.now() - t0
 
     runs = []
     for seed in seeds:

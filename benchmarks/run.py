@@ -2,7 +2,7 @@
 the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
 BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_attn ->
 BENCH_attn.json; bench_serve -> BENCH_serve.json; bench_faults ->
-BENCH_faults.json).  Prints
+BENCH_faults.json; bench_obs -> BENCH_obs.json).  Prints
 ``name,us_per_call,derived`` CSV at the end.
 
 Flags:
@@ -19,9 +19,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_attn, bench_conv, bench_faults,
-                            bench_kernels, bench_serve, bench_shard,
-                            roofline, table2_ppa, table3_psnr,
-                            table4_cnn, table5_yield)
+                            bench_kernels, bench_obs, bench_serve,
+                            bench_shard, roofline, table2_ppa,
+                            table3_psnr, table4_cnn, table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -84,6 +84,12 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_faults", 0.0, f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(bench_obs.run(fast=fast or "--kernels" in sys.argv,
+                                  smoke=smoke))
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_obs", 0.0, f"ERROR:{type(e).__name__}"))
     shard_path = (bench_shard.OUT_PATH_SMOKE if smoke
                   else bench_shard.OUT_PATH)
     try:

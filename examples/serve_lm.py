@@ -9,11 +9,10 @@ completion.
 """
 
 import argparse
-import time
 
 from repro.configs import get_config
-from repro.serving import (Request, build_engine, build_tiers,
-                           servable_archs)
+from repro.serving import (RealClock, Request, build_engine,
+                           build_tiers, servable_archs)
 import numpy as np
 
 
@@ -35,9 +34,10 @@ def main():
     engine = build_engine(cfg, tiers=tiers, slots_per_tier=args.slots,
                           max_len=64, prompt_buckets=(16,),
                           group_buckets=(1, 2), record_logits=False)
-    t0 = time.perf_counter()
+    clock = RealClock()          # the engine's injectable time source
+    t0 = clock.now()
     n = engine.warmup()
-    print(f"pre-warmed {n} executables in {time.perf_counter() - t0:.1f}s "
+    print(f"pre-warmed {n} executables in {clock.now() - t0:.1f}s "
           "(steady state never retraces)")
 
     # declared tolerances route to the cheapest-energy feasible rung:
@@ -55,11 +55,13 @@ def main():
                     arrival=0.002 * i)
             for i, (k, v) in enumerate(kinds)]
 
-    t0 = time.perf_counter()
-    results = engine.run(reqs)
-    dt = time.perf_counter() - t0
+    base = clock.now()
+    for r in reqs:
+        r.arrival += base        # arrivals on the shared engine clock
+    results = engine.run(reqs, clock=clock)
     total = sum(len(r.tokens) for r in results.values())
-    print(f"served {len(results)} requests / {total} tokens in {dt:.2f}s; "
+    print(f"served {len(results)} requests / {total} tokens in "
+          f"{engine.last_run_s:.2f}s; "
           f"steady-state retraces: {engine.steady_retraces()}")
     for r in sorted(results.values(), key=lambda r: r.rid):
         k, v = kinds[r.rid]

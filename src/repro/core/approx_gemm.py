@@ -85,11 +85,12 @@ VJP), the standard choice for approximate/quantized training.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
 import threading
-from typing import Callable, Dict, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -1594,6 +1595,52 @@ def trace_count() -> int:
 
 def _mark_trace() -> None:
     _TRACE_COUNT[0] += 1
+    sink = _OBS_SINK[0]
+    if sink is not None:
+        sink.retrace()
+
+
+# Observability sink (obs/, DESIGN.md §15): a host-side object notified
+# at dispatch boundaries — once per *frontend call* (eager calls and
+# outer-jit traces; a jitted steady-state replay never re-enters the
+# Python frontends, which is exactly the zero-overhead contract) — and
+# once per executable trace.  `None` (the default) short-circuits to a
+# single list-load + branch.
+_OBS_SINK: List[Optional[object]] = [None]
+_OBS_MAC_SCALE: List[float] = [1.0]
+
+
+def set_obs_sink(sink) -> Optional[object]:
+    """Install the dispatch-boundary telemetry sink; returns the
+    previous one so scoped captures (obs/energy.py) can restore it.
+    The sink must expose ``dispatch(op, family, mode, bits, macs,
+    cache_hit)`` and ``retrace()``."""
+    prev = _OBS_SINK[0]
+    _OBS_SINK[0] = sink
+    return prev
+
+
+@contextlib.contextmanager
+def obs_mac_scale(factor: float):
+    """Multiply the ambient MAC attribution scale for dispatches issued
+    inside the context.  `models/transformer.py` wraps its scanned body
+    in ``obs_mac_scale(cfg.n_periods)``: a `lax.scan` body traces ONCE
+    but executes `n_periods` times, so trace-time MAC capture would
+    otherwise undercount the stack by the body depth."""
+    prev = _OBS_MAC_SCALE[0]
+    _OBS_MAC_SCALE[0] = prev * float(factor)
+    try:
+        yield
+    finally:
+        _OBS_MAC_SCALE[0] = prev
+
+
+def _obs_dispatch(op: str, gp: "GemmParams", macs: float,
+                  cache_hit: bool) -> None:
+    _OBS_SINK[0].dispatch(op=op, family=gp.family, mode=gp.mode,
+                          bits=gp.bits,
+                          macs=macs * _OBS_MAC_SCALE[0],
+                          cache_hit=cache_hit)
 
 
 # ---------------------------------------------------------------------------
@@ -2245,6 +2292,8 @@ def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                 noise_kind, interpret, block, jax.default_backend(),
                 mesh, _canon_spec(x_spec), _canon_spec(w_spec))
         hit = _FAST_CACHE.get(fkey)
+        if _OBS_SINK[0] is not None:
+            _obs_dispatch("gemm", gp, float(m) * k * n, hit is not None)
         if hit is not None:
             run, stochastic = hit
             return run(x, w, key) if stochastic else run(x, w)
@@ -2356,6 +2405,11 @@ def cim_conv2d(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                 + autotune.bucket_conv(b, h, w_, c, kh, kw, stride)
                 + (autotune.bucket(n),))
         hit = _FAST_CACHE.get(fkey)
+        if _OBS_SINK[0] is not None:
+            oh_, ow_ = conv_out_hw(h, w_, kh, kw, stride)
+            _obs_dispatch("conv", gp,
+                          float(b) * oh_ * ow_ * kh * kw * c * n,
+                          hit is not None)
         if hit is not None:
             run, stochastic = hit
             return run(x, w, key) if stochastic else run(x, w)
@@ -2463,6 +2517,11 @@ def cim_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  jax.default_backend())
                 + autotune.bucket_attn(b, heads, kv_heads, sq, skv, hd))
         hit = _FAST_CACHE.get(fkey)
+        if _OBS_SINK[0] is not None:
+            # QK^T + PV: two Skv-deep dots per (batch, head, query)
+            _obs_dispatch("attn", gp,
+                          2.0 * b * heads * sq * skv * hd,
+                          hit is not None)
         if hit is not None:
             run, _ = hit
             return run(q, k, v, q_positions, kv_positions, kv_valid)
@@ -2533,6 +2592,9 @@ def model_matmul(x: jnp.ndarray, w: jnp.ndarray, gp: GemmParams,
                 noise_kind, apply, jax.default_backend(),
                 mesh, _canon_spec(x_spec), _canon_spec(w_spec))
         hit = _FAST_CACHE.get(fkey)
+        if _OBS_SINK[0] is not None:
+            _obs_dispatch("model_gemm", gp, float(m) * k * n,
+                          hit is not None)
         if hit is not None:
             run, stochastic = hit
             return run(x, w, key) if stochastic else run(x, w)

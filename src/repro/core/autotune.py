@@ -194,6 +194,26 @@ def clear_memory_cache() -> None:
         _mem_cache.clear()
 
 
+# Observability sink (obs/, DESIGN.md §15): notified once per
+# `_resolve` with the cache outcome ("mem_hit" | "disk_hit" | "sweep" |
+# "heuristic").  None short-circuits to a list-load + branch.
+_OBS_SINK: List[Optional[Callable]] = [None]
+
+
+def set_obs_sink(sink) -> Optional[object]:
+    """Install the autotune telemetry sink (must expose
+    ``autotune(key, outcome)``); returns the previous one."""
+    prev = _OBS_SINK[0]
+    _OBS_SINK[0] = sink
+    return prev
+
+
+def _obs_autotune(key: str, outcome: str) -> None:
+    sink = _OBS_SINK[0]
+    if sink is not None:
+        sink.autotune(key=key, outcome=outcome)
+
+
 def _resolve(key: str, candidates: List[Block], fallback: Block,
              measure: Optional[Callable[[Block], float]],
              cache_file: Optional[str]) -> Block:
@@ -202,17 +222,20 @@ def _resolve(key: str, candidates: List[Block], fallback: Block,
     heuristic path) never touches the disk cache."""
     with _lock:
         if key in _mem_cache:
+            _obs_autotune(key, "mem_hit")
             return _mem_cache[key]
     path = cache_file or cache_path()
     disk = _load_disk(path)
     if key in disk:
         with _lock:
             _mem_cache[key] = disk[key]
+        _obs_autotune(key, "disk_hit")
         return disk[key]
 
     if measure is None:
         with _lock:
             _mem_cache[key] = fallback
+        _obs_autotune(key, "heuristic")
         return fallback
 
     timings = []
@@ -229,6 +252,7 @@ def _resolve(key: str, candidates: List[Block], fallback: Block,
         merged = _load_disk(path)
         merged[key] = block
         _save_disk(path, merged)
+    _obs_autotune(key, "sweep")
     return block
 
 

@@ -15,11 +15,11 @@ the production mesh.
 from __future__ import annotations
 
 import argparse
-import time
 
 from repro.configs import get_config
-from repro.serving import (EngineStats, build_engine, build_tiers,
-                           poisson_workload, servable_archs)
+from repro.serving import (EngineStats, RealClock, build_engine,
+                           build_tiers, poisson_workload,
+                           servable_archs)
 
 
 def main():
@@ -77,8 +77,23 @@ def main():
     ap.add_argument("--retry-budget", type=int, default=3, metavar="R",
                     help="restarts per request across sentinel trips "
                          "before it is marked failed")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition of the "
+                         "run's telemetry at shutdown ('-' = stdout; "
+                         "DESIGN.md §15)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "per-request lifecycle spans (queue -> prefill "
+                         "-> decode, retries, lane rounds)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="serve without the telemetry spine (the "
+                         "overhead baseline; disables --metrics/"
+                         "--trace-out and the energy columns)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.no_telemetry and (args.metrics or args.trace_out):
+        ap.error("--no-telemetry contradicts --metrics/--trace-out")
 
     if args.spec_decode and args.mesh:
         ap.error("--spec-decode does not compose with --mesh: the "
@@ -111,6 +126,12 @@ def main():
 
         sentinel_cfg = SentinelConfig(period=args.sentinel_period)
 
+    telemetry = None
+    if not args.no_telemetry:
+        from repro.obs import EngineTelemetry
+
+        telemetry = EngineTelemetry()
+
     cfg = get_config(args.arch, smoke=True)
     tiers = build_tiers(mode=args.mode)
     pmax = max(args.prompt_len)
@@ -124,12 +145,15 @@ def main():
         spec_drafter=args.spec_drafter, spec_rounds=args.spec_rounds,
         fault=fault, sentinel_cfg=sentinel_cfg,
         max_queued=args.max_queued or None,
-        retry_budget=args.retry_budget)
+        retry_budget=args.retry_budget, telemetry=telemetry)
 
-    t0 = time.perf_counter()
+    # ONE clock end to end (DESIGN.md §15): warmup timing, arrivals,
+    # scheduler ticks, span timestamps, and throughput all share it
+    clock = RealClock()
+    t0 = clock.now()
     n_exec = engine.warmup()
     print(f"[{cfg.name}] warmed {n_exec} executables over "
-          f"{len(tiers)} tiers in {time.perf_counter() - t0:.1f}s")
+          f"{len(tiers)} tiers in {clock.now() - t0:.1f}s")
 
     mix = (("exact", None, 0.3), ("balanced", None, 0.4),
            ("economy", None, 0.3))
@@ -137,13 +161,12 @@ def main():
                           prompt_len=tuple(args.prompt_len),
                           max_new=tuple(args.max_new), tier_mix=mix,
                           seed=args.seed)
-    t0 = time.perf_counter()
-    results = engine.run(wl)
-    stats = EngineStats.from_results(results, time.perf_counter() - t0)
+    base = clock.now()
+    for r in wl:
+        r.arrival += base        # arrivals on the shared engine clock
+    results = engine.run(wl, clock=clock)
+    stats = EngineStats.from_results(results, engine.last_run_s)
 
-    per_tier = {}
-    for r in results.values():
-        per_tier[r.tier] = per_tier.get(r.tier, 0) + len(r.tokens)
     policy = "static" if args.static else "continuous"
     print(f"[{cfg.name}] {policy}: {stats.n_requests} requests, "
           f"{stats.total_tokens} tokens in {stats.duration_s:.2f}s "
@@ -151,26 +174,54 @@ def main():
     print(f"  per-token latency p50 {stats.p50_ms_per_token:.1f}ms "
           f"p95 {stats.p95_ms_per_token:.1f}ms; "
           f"ttft p50 {stats.p50_ttft_ms:.1f}ms")
-    print(f"  tokens by tier: {per_tier}; peak concurrency "
-          f"{engine.peak_running}; steady-state retraces "
-          f"{engine.steady_retraces()}")
     if args.spec_decode:
         sb = engine.lanes["exact"].backend
         print(f"  spec-decode k={sb.draft_k} "
-              f"(drafter {sb.drafter_lm.cfg.cim.family}): acceptance "
-              f"{sb.acceptance_rate:.2f}, {sb.tokens_per_round:.2f} "
-              f"tokens/round over {sb.n_rounds} rounds")
+              f"(drafter {sb.drafter_lm.cfg.cim.family}): "
+              f"{sb.n_rounds} fused rounds")
     if args.sentinel:
-        n_fail = sum(1 for r in results.values()
-                     if r.done and r.status != "ok")
-        retried = sum(1 for r in results.values() if r.retries)
-        print(f"  sentinel: {len(engine.trip_log)} trips "
-              f"({[t['lane'] for t in engine.trip_log]}), "
-              f"{retried} requests restarted, {n_fail} failed")
         for t in engine.trip_log:
-            print(f"    [{t['lane']}] {t['reason']} after "
+            print(f"  trip [{t['lane']}] {t['reason']} after "
                   f"{t['tokens_before_trip']} tokens "
                   f"({t['in_flight_displaced']} in flight displaced)")
+
+    # closing per-tier summary, sourced from engine.metrics()
+    m = engine.metrics()
+    print(f"  peak concurrency {m['peak_concurrency']}; steady-state "
+          f"retraces {m['steady_retraces']}; {m['n_failed']} failed")
+    hdr = (f"  {'tier':<10} {'tokens':>7} {'tok/s':>8} {'J/token':>10} "
+           f"{'accept':>7} {'trips':>6} {'retries':>8}")
+    print(hdr)
+    for name, d in m["lanes"].items():
+        tps = f"{d['tokens_per_s']:.1f}" if d["tokens_per_s"] else "-"
+        ept = (f"{d['energy_per_token_j']:.3e}"
+               if d["energy_per_token_j"] is not None else "-")
+        acc = (f"{d['acceptance_rate']:.2f}"
+               if d["acceptance_rate"] is not None else "-")
+        print(f"  {name:<10} {d['tokens']:>7} {tps:>8} {ept:>10} "
+              f"{acc:>7} {d['trips']:>6} {d['retries']:>8}")
+
+    if args.metrics:
+        from repro.obs import prometheus_text
+
+        text = prometheus_text(telemetry.registry)
+        if args.metrics == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+            print(f"  metrics -> {args.metrics}")
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(telemetry.registry.spans.items(),
+                           args.trace_out,
+                           tid_names=telemetry.tid_names)
+        print(f"  trace -> {args.trace_out} "
+              f"({len(telemetry.registry.spans)} spans, "
+              f"{telemetry.registry.spans.dropped} dropped)")
+    if telemetry is not None:
+        telemetry.detach()
     assert engine.steady_retraces() == 0, "serving retraced after warmup"
 
 

@@ -434,7 +434,13 @@ class LM:
             step = jax.checkpoint(step) if cfg.remat else step
             body_caches = None if caches is None else caches["body"]
             xs = (params["body"], keys, body_caches)
-            x, (new_body, auxes) = jax.lax.scan(step, x, xs)
+            # the scan body traces ONCE but executes n_periods times:
+            # scale MAC attribution so trace-time capture (obs/energy)
+            # charges the full stack, not one period
+            from repro.core.approx_gemm import obs_mac_scale
+
+            with obs_mac_scale(cfg.n_periods):
+                x, (new_body, auxes) = jax.lax.scan(step, x, xs)
             aux_total += auxes.sum()
         return x, {"prefix": new_prefix, "body": new_body}, aux_total
 

@@ -1,0 +1,11 @@
+# Runtime telemetry spine (DESIGN.md §15): host-side metrics core,
+# dispatch-boundary instrumentation sinks, energy/accuracy metering over
+# the paper's per-MAC anchors, and Prometheus / JSONL / Perfetto
+# exporters.  Never allocates or records inside jitted code.
+from .energy import (LaneEnergyMeter, MacCapture, capture_macs,
+                     macs_to_energy_j, profile_macs)  # noqa: F401
+from .export import (chrome_trace, events_jsonl, prometheus_text,
+                     write_chrome_trace)  # noqa: F401
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Ring,
+                      Span)  # noqa: F401
+from .telemetry import EngineTelemetry  # noqa: F401

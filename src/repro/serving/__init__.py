@@ -3,10 +3,10 @@
 # CiM configs through the DSE characterization, and per-lane accuracy
 # sentinels with graceful tier degradation (DESIGN.md §14).
 from .engine import (AdmissionRejected, EngineStats, LMLaneBackend,
-                     Request, RequestResult, ServingEngine, build_engine,
-                     servable_archs)  # noqa: F401
+                     Request, RequestResult, ServingEngine, TripEvent,
+                     build_engine, servable_archs)  # noqa: F401
 from .sentinel import (CircuitBreaker, LaneHealthError, LaneSentinel,
                        RollingStats, SentinelConfig)  # noqa: F401
 from .spec import SpecDecodeBackend  # noqa: F401
 from .tiers import AccuracyTier, TierRouter, build_tiers, spec_pair  # noqa: F401
-from .workload import SimClock, poisson_workload  # noqa: F401
+from .workload import Clock, RealClock, SimClock, poisson_workload  # noqa: F401

@@ -142,6 +142,38 @@ class EngineStats:
                    n_failed=n_failed)
 
 
+@dataclasses.dataclass
+class TripEvent:
+    """One sentinel trip, structured (DESIGN.md §15): engine-clock
+    timestamp, tripped lane, the trigger metric (rolling agree/NMED at
+    detection, None for forced or non-finite trips), and the breaker
+    state on either side of the transition.  Dict-style access
+    (``ev["lane"]``, ``ev.get(...)``, ``dict(ev)``) is kept for the
+    pre-structured `trip_log` consumers."""
+
+    lane: str
+    t: float
+    reason: str
+    tokens_before_trip: int
+    in_flight_displaced: int
+    trigger_agree: Optional[float] = None
+    trigger_nmed: Optional[float] = None
+    breaker_before: str = "healthy"
+    breaker_after: str = "tripped"
+
+    def __getitem__(self, key: str):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def keys(self):
+        return [f.name for f in dataclasses.fields(self)]
+
+
 def _bucket_up(v: int, buckets: Sequence[int], what: str) -> int:
     for b in buckets:
         if b >= v:
@@ -404,6 +436,8 @@ class _Lane:
         self.sentinel = None          # LaneSentinel (DESIGN.md §14)
         self.quarantined = False      # breaker open: no admit, no decode
         self.emitted = 0              # tokens since last trip/recovery
+        self.total_emitted = 0        # tokens ever (never reset)
+        self.n_retries = 0            # restarts this lane's trips caused
 
 
 class ServingEngine:
@@ -425,7 +459,8 @@ class ServingEngine:
                  sentinels: Optional[Dict[str, object]] = None,
                  max_queued: Optional[int] = None,
                  retry_budget: int = 3,
-                 retry_backoff_s: float = 0.0):
+                 retry_backoff_s: float = 0.0,
+                 telemetry=None):
         if not lanes:
             raise ValueError("need at least one lane")
         self.lanes = {name: _Lane(name, b) for name, b in lanes.items()}
@@ -439,13 +474,16 @@ class ServingEngine:
         self.retry_backoff_s = float(retry_backoff_s)
         for name, sen in (sentinels or {}).items():
             self.lanes[name].sentinel = sen
+        self.telemetry = telemetry               # obs.EngineTelemetry
         self.results: Dict[int, RequestResult] = {}
         self.active_tokens = 0
         self.peak_running = 0
-        self.trip_log: List[dict] = []           # one entry per trip
+        self.trip_log: List[TripEvent] = []      # one entry per trip
+        self.last_run_s: Optional[float] = None  # engine-clock duration
         self._deferred: List[Tuple[float, Request]] = []   # backoff queue
         self._expected: Dict[str, int] = {}
         self._trace_mark: Optional[int] = None
+        self._clock = None                       # set by run()
 
     # -- warmup / retrace probe -------------------------------------------
     def warmup(self) -> int:
@@ -458,6 +496,10 @@ class ServingEngine:
                  for lane in self.lanes.values()
                  if lane.sentinel is not None
                  and hasattr(lane.sentinel, "warmup"))
+        if self.telemetry is not None:
+            # eval_shape MAC profiling may trace; it must finish before
+            # the steady-state retrace probe arms
+            self.telemetry.on_warmup(self)
         from repro.core.approx_gemm import trace_count
 
         self._trace_mark = trace_count()
@@ -578,6 +620,10 @@ class ServingEngine:
                 prompts = [r.prompt for r, _ in chunk]
                 slots = [s for _, s in chunk]
                 first = lane.backend.admit(prompts, slots)
+                if self.telemetry is not None:
+                    self.telemetry.on_prefill(
+                        lane.name, len(chunk), pb,
+                        [r.rid for r, _ in chunk], now)
                 pre_lg = getattr(lane.backend, "last_prefill_logits",
                                  None)
                 for j, (req, slot) in enumerate(chunk):
@@ -594,6 +640,9 @@ class ServingEngine:
         rr = run.result
         rr.tokens.append(tok)
         lane.emitted += 1
+        lane.total_emitted += 1
+        if self.telemetry is not None:
+            self.telemetry.on_token(lane.name)
         if rr.t_first is None:
             rr.t_first = now
         if rr.logits is not None and logits_row is not None:
@@ -605,6 +654,14 @@ class ServingEngine:
             self.active_tokens -= run.req.cost
             del lane.running[slot]
             bisect.insort(lane.free, slot)     # eviction frees capacity
+            if self.telemetry is not None:
+                self.telemetry.on_request_done(rr, lane.name)
+
+    def _now_fine(self, now: float) -> float:
+        """Sub-tick timestamp for span durations: the run() clock when
+        one is live, else the tick's own `now` (durations degrade to 0
+        under direct step() driving — deterministic tests)."""
+        return self._clock.now() if self._clock is not None else now
 
     def step(self, now: Optional[float] = None) -> List[RequestResult]:
         """One scheduler tick: release due backoff requeues, probe
@@ -647,6 +704,7 @@ class ServingEngine:
                 # exact reference for the CURRENT state — must precede
                 # the lane's own decode, which donates the caches
                 shadow = sen.shadow(lane.backend)
+            t0 = self._now_fine(now)
             try:
                 nxt = lane.backend.decode_round()
             except LaneHealthError as e:
@@ -654,12 +712,23 @@ class ServingEngine:
                     raise
                 self._trip(lane, now, str(e))
                 continue
-            if shadow is not None and sen.observe(
+            if self.telemetry is not None:
+                self.telemetry.on_decode_round(
+                    lane.name, [r.result.rid for r in
+                                lane.running.values()],
+                    t0, self._now_fine(now) - t0)
+            if shadow is not None:
+                tripped = sen.observe(
                     lane.backend.last_decode_logits, shadow,
-                    sorted(lane.running), now):
-                self._trip(lane, now, sen.last_trip_reason,
-                           breaker_tripped=True)
-                continue               # trip-before-emit
+                    sorted(lane.running), now)
+                if (self.telemetry is not None
+                        and sen.last_agree is not None):
+                    self.telemetry.on_sentinel(lane.name, sen.last_agree,
+                                               sen.last_nmed)
+                if tripped:
+                    self._trip(lane, now, sen.last_trip_reason,
+                               breaker_tripped=True)
+                    continue           # trip-before-emit
             dec_lg = getattr(lane.backend, "last_decode_logits", None)
             for slot in sorted(lane.running):
                 lg = (dec_lg[slot] if self.record_logits
@@ -707,10 +776,21 @@ class ServingEngine:
             lane.sentinel.record_failure(now, reason)
         lane.quarantined = True
         displaced = len(lane.running)
-        self.trip_log.append({
-            "lane": lane.name, "t": now, "reason": reason,
-            "tokens_before_trip": lane.emitted,
-            "in_flight_displaced": displaced})
+        sen = lane.sentinel
+        trigger = getattr(sen, "last_trip_stats", None) if sen else None
+        after = (sen.breaker.state if sen is not None
+                 and hasattr(sen, "breaker") else "tripped")
+        ev = TripEvent(
+            lane=lane.name, t=now, reason=reason,
+            tokens_before_trip=lane.emitted,
+            in_flight_displaced=displaced,
+            trigger_agree=trigger[0] if trigger else None,
+            trigger_nmed=trigger[1] if trigger else None,
+            breaker_before="healthy", breaker_after=after)
+        self.trip_log.append(ev)
+        if self.telemetry is not None:
+            self.telemetry.on_trip(ev)
+            self.telemetry.on_breaker(lane.name, "healthy", after, now)
         lane.emitted = 0
         while lane.queue:
             self._requeue(lane.queue.popleft())
@@ -719,6 +799,9 @@ class ServingEngine:
             bisect.insort(lane.free, slot)
             self.active_tokens -= run.req.cost
             rr = run.result
+            lane.n_retries += 1
+            if self.telemetry is not None:
+                self.telemetry.on_request_retry(rr, lane.name, now)
             rr.tokens.clear()
             if rr.logits is not None:
                 rr.logits.clear()
@@ -727,6 +810,8 @@ class ServingEngine:
             if rr.retries > self.retry_budget:
                 rr.status = "failed"
                 rr.t_done = now
+                if self.telemetry is not None:
+                    self.telemetry.on_request_done(rr, lane.name)
                 continue
             delay = self.retry_backoff_s * (2 ** (rr.retries - 1))
             if delay > 0:
@@ -742,7 +827,15 @@ class ServingEngine:
         if (sen is None or lane.running or not lane.free
                 or not sen.breaker.should_probe(now)):
             return
-        if sen.probe(lane.backend, lane.free[0], now):
+        if self.telemetry is not None:
+            self.telemetry.on_breaker(lane.name, "tripped", "half_open",
+                                      now)
+        ok = sen.probe(lane.backend, lane.free[0], now)
+        if self.telemetry is not None:
+            self.telemetry.on_breaker(
+                lane.name, "half_open", "healthy" if ok else "tripped",
+                now)
+        if ok:
             lane.quarantined = False
             lane.emitted = 0
 
@@ -761,7 +854,18 @@ class ServingEngine:
             remaining[slot] = run.req.max_new - len(run.result.tokens)
             if run.req.eos_id is not None:
                 eos[slot] = run.req.eos_id
+        tel = self.telemetry
+        pre = ((b.n_rounds, b.n_drafted, b.n_accepted, b.n_emitted)
+               if tel is not None and hasattr(b, "n_rounds") else None)
+        t0 = self._now_fine(now)
         toks, counts = b.spec_round(remaining, eos)
+        if pre is not None:
+            tel.on_spec_round(
+                lane.name, getattr(b, "draft_k", 0),
+                b.n_rounds - pre[0], b.n_drafted - pre[1],
+                b.n_accepted - pre[2], b.n_emitted - pre[3],
+                [r.result.rid for r in lane.running.values()],
+                t0, self._now_fine(now) - t0)
         toks, counts = np.asarray(toks), np.asarray(counts)
         lg = getattr(b, "last_spec_logits", None)
         if counts.ndim == 1:
@@ -801,6 +905,8 @@ class ServingEngine:
             from .workload import RealClock
 
             clock = RealClock()
+        self._clock = clock              # one time source per run:
+        t_run0 = clock.now()             # spans + stats stay coherent
         submitted = [r.rid for r in requests]
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         self.peak_running = sum(len(l.running)                 # per-run
@@ -823,6 +929,7 @@ class ServingEngine:
             queued = any(l.queue for l in self.lanes.values())
             if (not pending and not busy and not queued
                     and not self._deferred):
+                self.last_run_s = clock.now() - t_run0
                 return {rid: self.results[rid] for rid in submitted}
             if not busy and (pending or self._deferred):
                 targets = [r.arrival for r in list(pending)[:1]]
@@ -830,6 +937,57 @@ class ServingEngine:
                 clock.wait_until(min(targets))
         raise RuntimeError("engine did not drain the workload "
                            f"within {max_steps} steps")
+
+    # -- telemetry snapshot ------------------------------------------------
+    def metrics(self) -> dict:
+        """Structured per-lane serving metrics (DESIGN.md §15): tokens,
+        throughput (over `last_run_s`), sentinel trips/retries, spec
+        acceptance, and — with an `EngineTelemetry` attached — the
+        estimated energy per token from the paper's per-MAC anchors.
+        Works without telemetry (energy fields are then None)."""
+        dur = self.last_run_s
+        lanes = {}
+        for name, lane in self.lanes.items():
+            b = lane.backend
+            d = {
+                "tokens": lane.total_emitted,
+                "tokens_per_s": (lane.total_emitted / dur
+                                 if dur else None),
+                "trips": sum(1 for t in self.trip_log
+                             if t["lane"] == name),
+                "retries": lane.n_retries,
+                "quarantined": lane.quarantined,
+                "energy_j": None,
+                "energy_per_token_j": None,
+                "acceptance_rate": None,
+                "tokens_per_round": None,
+                "draft_k": None,
+            }
+            if hasattr(b, "acceptance_rate"):
+                d["acceptance_rate"] = b.acceptance_rate
+                d["tokens_per_round"] = b.tokens_per_round
+                d["draft_k"] = getattr(b, "draft_k", None)
+            if self.telemetry is not None:
+                m = self.telemetry.meters.get(name)
+                if m is not None and m.profiled:
+                    d["energy_j"] = m.energy_j
+                    d["energy_per_token_j"] = m.energy_per_token_j
+                    d["macs"] = m.macs
+            lanes[name] = d
+        n_done = sum(1 for r in self.results.values() if r.done)
+        out = {
+            "duration_s": dur,
+            "n_requests": n_done,
+            "n_failed": sum(1 for r in self.results.values()
+                            if r.done and r.status != "ok"),
+            "total_tokens": sum(d["tokens"] for d in lanes.values()),
+            "peak_concurrency": self.peak_running,
+            "steady_retraces": (self.steady_retraces()
+                                if self._trace_mark is not None
+                                else None),
+            "lanes": lanes,
+        }
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -854,6 +1012,7 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
                  max_queued: Optional[int] = None,
                  retry_budget: int = 3,
                  retry_backoff_s: float = 0.0,
+                 telemetry=None,
                  seed: int = 0, mesh=None) -> ServingEngine:
     """One lane per accuracy tier over shared weights.
 
@@ -884,6 +1043,8 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
     `sentinel_cfg`) arms a per-approximate-lane accuracy sentinel with
     graceful degradation (DESIGN.md §14); `max_queued` /
     `retry_budget` / `retry_backoff_s` bound admission and restarts.
+    `telemetry` (an `obs.EngineTelemetry`) threads the runtime
+    telemetry spine through warmup and serving (DESIGN.md §15).
     """
     import dataclasses as dc
 
@@ -963,4 +1124,5 @@ def build_engine(cfg, params=None, *, tiers=None, slots_per_tier: int = 4,
                          record_logits=record_logits,
                          sentinels=sentinels, max_queued=max_queued,
                          retry_budget=retry_budget,
-                         retry_backoff_s=retry_backoff_s)
+                         retry_backoff_s=retry_backoff_s,
+                         telemetry=telemetry)

@@ -218,6 +218,12 @@ class LaneSentinel:
         self.n_checks = 0
         self.last_detection_rounds: Optional[int] = None
         self.last_trip_reason: Optional[str] = None
+        # telemetry taps (obs/, DESIGN.md §15): the most recent drift
+        # sample, and the rolling stats captured at the trip (before
+        # the post-trip reset clears them)
+        self.last_agree: Optional[float] = None
+        self.last_nmed: Optional[float] = None
+        self.last_trip_stats: Optional[Tuple[float, float]] = None
 
     # -- shadow scoring ----------------------------------------------------
     def _scorer(self):
@@ -258,6 +264,7 @@ class LaneSentinel:
             self._trip(now, "non-finite lane logits")
             return True
         agree, nmed = logit_drift(lane, ref_logits, slots)
+        self.last_agree, self.last_nmed = agree, nmed
         self.stats.push(agree, nmed)
         if self.stats.n < self.cfg.min_samples:
             return False
@@ -278,6 +285,7 @@ class LaneSentinel:
 
     def _trip(self, now: float, reason: str) -> None:
         self.last_trip_reason = reason
+        self.last_trip_stats = (self.stats.agree, self.stats.nmed)
         self.last_detection_rounds = self.rounds_since_reset
         self.breaker.trip(now)
         self.stats.reset()

@@ -20,7 +20,26 @@ import numpy as np
 from .engine import Request
 
 
-class RealClock:
+class Clock:
+    """The engine's single injectable time source (DESIGN.md §15).
+
+    Everything downstream of the serving loop — scheduler ticks,
+    sentinel cooldowns, retry backoff, telemetry span timestamps,
+    throughput accounting (`engine.last_run_s`) — reads seconds from
+    ONE clock, so spans are mutually coherent and tests are
+    clock-independent.  `RealClock` backs wall-clock serving and
+    benchmarking; `SimClock` backs deterministic scheduler tests.
+    Implementations provide ``now() -> float`` and ``wait_until(t)``.
+    """
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def wait_until(self, t: float) -> None:
+        raise NotImplementedError
+
+
+class RealClock(Clock):
     """Wall time; waiting sleeps (coarsely — the engine loop re-polls)."""
 
     def __init__(self):
@@ -35,7 +54,7 @@ class RealClock:
             time.sleep(min(dt, 0.05))
 
 
-class SimClock:
+class SimClock(Clock):
     """Deterministic clock for scheduler tests: time only moves when the
     engine explicitly waits (idle with future arrivals pending)."""
 
