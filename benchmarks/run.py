@@ -2,7 +2,8 @@
 the per-kernel harnesses (bench_kernels -> BENCH_kernels.json +
 BENCH_dispatch.json; bench_conv -> BENCH_conv.json; bench_attn ->
 BENCH_attn.json; bench_serve -> BENCH_serve.json; bench_faults ->
-BENCH_faults.json; bench_obs -> BENCH_obs.json).  Prints
+BENCH_faults.json; bench_obs -> BENCH_obs.json; bench_dse ->
+BENCH_dse.json).  Prints
 ``name,us_per_call,derived`` CSV at the end.
 
 Flags:
@@ -18,10 +19,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_attn, bench_conv, bench_faults,
-                            bench_kernels, bench_obs, bench_serve,
-                            bench_shard, roofline, table2_ppa,
-                            table3_psnr, table4_cnn, table5_yield)
+    from benchmarks import (bench_attn, bench_conv, bench_dse,
+                            bench_faults, bench_kernels, bench_obs,
+                            bench_serve, bench_shard, roofline,
+                            table2_ppa, table3_psnr, table4_cnn,
+                            table5_yield)
 
     fast = "--fast" in sys.argv
     smoke = "--smoke" in sys.argv
@@ -90,6 +92,12 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         traceback.print_exc()
         rows.append(("bench_obs", 0.0, f"ERROR:{type(e).__name__}"))
+    try:
+        rows.extend(bench_dse.run(fast=fast or "--kernels" in sys.argv,
+                                  smoke=smoke))
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        rows.append(("bench_dse", 0.0, f"ERROR:{type(e).__name__}"))
     shard_path = (bench_shard.OUT_PATH_SMOKE if smoke
                   else bench_shard.OUT_PATH)
     try:

@@ -1,0 +1,768 @@
+"""Surrogate-guided per-module accuracy allocation (DESIGN.md §16).
+
+The paper's DSE loop (Sec. VI) picks ONE multiplier for the whole
+application.  This module allocates a multiplier PER MODULE NAME
+("wq", "mlp_wo", ...) under a model-level NMED budget, three stages:
+
+  1. **Probe** — one eager forward (remat off, jit disabled so the
+     scanned stack unrolls with concrete values) captures each named
+     matmul's shape, MAC count and activation/weight ranges.
+  2. **Learned surrogate** — ground-truth per-module NMED contributions
+     come from the mixing evaluator (one jitted program that computes
+     every candidate tier's output per module and mixes by a traced
+     one-hot selection — changing the allocation is a new *input*, not
+     a retrace); a small JAX MLP regresses contribution from
+     (tier error statistics x module statistics) and a calibrated
+     root-sum-square combiner maps per-module risks to model NMED.
+  3. **Search** — greedy cheapest-first with repair plus a beam over
+     modules (largest MACs first) scored by the surrogate; the top
+     candidates are re-measured EXACTLY by the evaluator, so the
+     returned allocation's `nmed` is a measurement, not a prediction.
+
+`autoallocate(model, max_nmed)` is the one-command entry; the result's
+`.to_cim_config()` / `.alloc` plug straight into `CiMConfig.alloc` and
+`serving/tiers.allocation_tier` (a pre-jitted lane over shared weights,
+zero steady-state retraces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import energy_model
+from .approx_gemm import GemmParams, model_matmul
+from .error_model import ErrorMetrics, SurrogateModel, characterize_batch
+from .multipliers import MultiplierSpec
+
+# fixed-size evaluation chunk: allocation batches are padded up to this
+# so the jitted lax.map evaluator compiles exactly once per model
+_CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# Observability (mirrors error_model/autotune sink pattern)
+# ---------------------------------------------------------------------------
+
+_OBS_SINK: List[Optional[object]] = [None]
+
+
+def set_obs_sink(sink) -> Optional[object]:
+    """Install an allocation-search sink; returns the previous one.
+    The sink's `alloc_search(event=..., count=...)` is called (if
+    present) with events "probe", "truth", "search", "reeval"."""
+    prev = _OBS_SINK[0]
+    _OBS_SINK[0] = sink
+    return prev
+
+
+def _obs(event: str, count: int) -> None:
+    sink = _OBS_SINK[0]
+    if sink is None:
+        return
+    fn = getattr(sink, "alloc_search", None)
+    if fn is not None:
+        fn(event=event, count=count)
+
+
+# ---------------------------------------------------------------------------
+# Stage 0: candidate tiers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierCandidate:
+    """One multiplier a module may be allocated to."""
+
+    spec: MultiplierSpec
+    metrics: ErrorMetrics
+    energy_per_mac_j: float
+
+    @property
+    def is_exact(self) -> bool:
+        return self.spec.family == "exact"
+
+    def short_name(self) -> str:
+        return self.spec.short_name()
+
+
+def default_candidates(bits: int = 8, signed: bool = True,
+                       ) -> List[MultiplierSpec]:
+    """Default per-module tier ladder: exact + both appro42 cells at
+    full column count + the cheaper logarithmic family.  Always starts
+    with exact so the repair loop can terminate."""
+    return [
+        MultiplierSpec("exact", bits, signed),
+        MultiplierSpec("appro42", bits, signed, "yang1", min(bits, 8)),
+        MultiplierSpec("appro42", bits, signed, "orplane",
+                       5 * bits // 4),
+        MultiplierSpec("log_our", bits, signed),
+    ]
+
+
+def build_candidates(specs: Sequence[MultiplierSpec],
+                     mesh=None) -> List[TierCandidate]:
+    """Characterize (batched, cache-backed) + price a spec list; the
+    exact tier is moved to index 0 (search invariant)."""
+    metrics = characterize_batch(specs, mesh=mesh)
+    cands = [TierCandidate(
+        spec=s, metrics=m,
+        energy_per_mac_j=energy_model.energy_per_mac_j(
+            s.family, s.bits, s.compressor, s.n_approx_cols))
+        for s, m in zip(specs, metrics)]
+    cands.sort(key=lambda c: (not c.is_exact,))
+    if not cands or not cands[0].is_exact:
+        raise ValueError("candidate set must include the exact tier")
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: probe — per-module shapes/MACs/ranges from one eager forward
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleStats:
+    """What one probed matmul looks like to the allocator."""
+
+    name: str
+    k: int
+    n: int
+    macs: float          # total MACs over the probe batch (all calls)
+    calls: int           # executions per forward (scan periods fold in)
+    absmax_x: float
+    absmax_w: float
+
+
+def probe_modules(model, params, batch,
+                  modules: Optional[Sequence[str]] = None,
+                  ) -> List[ModuleStats]:
+    """Run one forward with the linear-override hook recording every
+    named matmul.  Remat is disabled (jax.checkpoint traces its body
+    once even under disable_jit) and jit is disabled so lax.scan
+    executes its body per iteration with concrete activations."""
+    from repro.models import common as mcommon
+    from repro.models.transformer import LM
+
+    cfg = dataclasses.replace(model.cfg, remat=False)
+    probe_lm = LM(cfg)
+    acc: Dict[str, Dict] = {}
+    order: List[str] = []
+
+    def hook(x, wv, ctx, name):
+        if not name or (modules is not None and name not in modules):
+            return None
+        m = 1
+        for s in x.shape[:-1]:
+            m *= int(s)
+        k, n = int(wv.shape[0]), int(wv.shape[1])
+        st = acc.get(name)
+        if st is None:
+            order.append(name)
+            st = acc[name] = dict(k=k, n=n, macs=0.0, calls=0,
+                                  ax=0.0, aw=0.0)
+        st["macs"] += float(m) * k * n
+        st["calls"] += 1
+        st["ax"] = max(st["ax"], float(jnp.max(jnp.abs(x))))
+        st["aw"] = max(st["aw"], float(jnp.max(jnp.abs(wv))))
+        return None
+
+    prev = mcommon._LINEAR_OVERRIDE[0]
+    mcommon.set_linear_override(hook)
+    try:
+        with jax.disable_jit():
+            probe_lm.forward_logits(params, batch)
+    finally:
+        mcommon.set_linear_override(prev)
+    stats = [ModuleStats(name=nm, k=acc[nm]["k"], n=acc[nm]["n"],
+                         macs=acc[nm]["macs"], calls=acc[nm]["calls"],
+                         absmax_x=acc[nm]["ax"], absmax_w=acc[nm]["aw"])
+             for nm in order]
+    _obs("probe", len(stats))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Stage 2a: mixing evaluator — exact model-NMED of any allocation,
+# zero retraces after the first chunk compile
+# ---------------------------------------------------------------------------
+
+
+class MixEvaluator:
+    """Measures model NMED of per-module tier selections.
+
+    One jitted program computes ALL candidate tiers' outputs for every
+    allocatable module and mixes them by a traced one-hot `sel` row —
+    so every allocation is a pure input change (sel is data, not
+    structure) and 4^L exhaustive sweeps run without a single retrace
+    after the first _CHUNK-shaped compile.  Noise keys are fixed per
+    (module, tier): evaluations are deterministic and comparable.
+    NMED = mean |logits - logits_exact| / max |logits_exact|."""
+
+    def __init__(self, model, params, batch,
+                 candidates: Sequence[TierCandidate],
+                 modules: Sequence[ModuleStats],
+                 mode: str = "surrogate"):
+        from repro.models import common as mcommon
+
+        self.candidates = list(candidates)
+        self.modules = list(modules)
+        self.mode = mode
+        self._index = {m.name: i for i, m in enumerate(self.modules)}
+        self._n_evals = 0
+        tiers: List[Optional[GemmParams]] = []
+        for c in self.candidates:
+            if c.is_exact:
+                tiers.append(None)       # exact int8 macro (apply=False)
+            else:
+                sur = SurrogateModel(
+                    mu_rel=c.metrics.mu_rel, c0_abs=c.metrics.c0_abs,
+                    c1_rel=c.metrics.c1_rel, wce=c.metrics.wce,
+                    spec=c.spec)
+                tiers.append(GemmParams.from_spec(c.spec, sur, mode))
+        base = jax.random.PRNGKey(0)
+
+        # trace-time holder: the jitted wrapper writes the traced sel
+        # matrix here before tracing the forward; the hook reads it
+        holder = [None]
+
+        def hook(x, wv, ctx, name):
+            i = self._index.get(name)
+            if i is None:
+                return None              # non-allocatable: exact macro
+            sel_row = holder[0][i]       # (T,) traced one-hot
+            out = None
+            for t, gp in enumerate(tiers):
+                if gp is None:
+                    o = model_matmul(x, wv, self._exact_gp, None,
+                                     apply=False)
+                else:
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(base, i), t)
+                    o = model_matmul(x, wv, gp, key, apply=True)
+                w = sel_row[t].astype(o.dtype)
+                out = o * w if out is None else out + o * w
+            return out
+
+        # non-allocatable modules and the exact tier share one int8
+        # macro GemmParams (family is ignored when apply=False)
+        bits = self.candidates[0].spec.bits
+        self._exact_gp = GemmParams(family="exact", bits=bits, mode=mode,
+                                    mu=0.0, c0=0.0, c1=0.0)
+
+        def forward(sel):
+            holder[0] = sel
+            prev = mcommon._LINEAR_OVERRIDE[0]
+            mcommon.set_linear_override(hook)
+            try:
+                return model.forward_logits(params, batch)
+            finally:
+                mcommon.set_linear_override(prev)
+
+        L, T = len(self.modules), len(self.candidates)
+
+        def chunk_nmed(sels, ref, ref_scale):
+            def one(sel):
+                d = forward(sel).astype(jnp.float32) - ref
+                return jnp.mean(jnp.abs(d)) / ref_scale
+            return jax.lax.map(one, sels)
+
+        self._chunk_nmed = jax.jit(chunk_nmed)
+        # exact reference logits: the all-exact selection
+        sel0 = np.zeros((L, T), np.float32)
+        sel0[:, 0] = 1.0
+        ref = jax.jit(forward)(jnp.asarray(sel0)).astype(jnp.float32)
+        self._ref = jax.block_until_ready(ref)
+        self._ref_scale = jnp.maximum(
+            jnp.max(jnp.abs(self._ref)), 1e-12)
+
+    @property
+    def n_evals(self) -> int:
+        return self._n_evals
+
+    def sel_matrix(self, assignment: Sequence[int]) -> np.ndarray:
+        L, T = len(self.modules), len(self.candidates)
+        sel = np.zeros((L, T), np.float32)
+        for i, t in enumerate(assignment):
+            sel[i, t] = 1.0
+        return sel
+
+    def nmed_many(self, assignments: Sequence[Sequence[int]],
+                  ) -> np.ndarray:
+        """Measured model NMED per assignment (list of per-module tier
+        indices).  Pads to _CHUNK multiples so the evaluator never
+        recompiles."""
+        if not len(assignments):
+            return np.zeros((0,), np.float64)
+        sels = np.stack([self.sel_matrix(a) for a in assignments])
+        n = sels.shape[0]
+        pad = (-n) % _CHUNK
+        if pad:
+            sels = np.concatenate([sels, np.repeat(sels[:1], pad, 0)])
+        out = []
+        for ofs in range(0, sels.shape[0], _CHUNK):
+            r = self._chunk_nmed(jnp.asarray(sels[ofs:ofs + _CHUNK]),
+                                 self._ref, self._ref_scale)
+            out.append(np.asarray(jax.block_until_ready(r)))
+        self._n_evals += n
+        return np.concatenate(out)[:n].astype(np.float64)
+
+    def nmed(self, assignment: Sequence[int]) -> float:
+        return float(self.nmed_many([assignment])[0])
+
+
+# ---------------------------------------------------------------------------
+# Stage 2b: learned surrogate — MLP over (tier x module) features
+# ---------------------------------------------------------------------------
+
+
+def _features(c: TierCandidate, m: ModuleStats,
+              total_macs: float) -> np.ndarray:
+    met = c.metrics
+    return np.array([
+        math.log10(met.nmed + 1e-12),
+        math.log10(met.mred + 1e-12),
+        met.mu_rel * 100.0,
+        math.log10(met.c0_abs + met.c1_rel + 1e-12),
+        math.log10(c.energy_per_mac_j),
+        math.log10(m.macs + 1.0),
+        m.macs / max(total_macs, 1.0),
+        math.log10(m.k),
+        math.log10(m.n),
+        float(m.calls),
+        math.log10(m.absmax_x + 1e-12),
+        math.log10(m.absmax_w + 1e-12),
+    ], np.float32)
+
+
+def _mlp_init(key, d_in: int, width: int = 32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_in)
+    return {
+        "w1": jax.random.normal(k1, (d_in, width)) * s,
+        "b1": jnp.zeros((width,)),
+        "w2": jax.random.normal(k2, (width, width)) / math.sqrt(width),
+        "b2": jnp.zeros((width,)),
+        "w3": jax.random.normal(k3, (width, 1)) / math.sqrt(width),
+        "b3": jnp.zeros((1,)),
+    }
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    h = jnp.tanh(h @ p["w2"] + p["b2"])
+    return (h @ p["w3"] + p["b3"])[..., 0]
+
+
+def _fit_run(steps: int, lr: float):
+    """Module-level jitted Adam trainer (one compile per (steps, lr) +
+    dataset shape — budget sweeps and benchmarks amortize it)."""
+    key = (steps, lr)
+    run = _FIT_CACHE.get(key)
+    if run is not None:
+        return run
+
+    def train(Xn, yj, wj, p0):
+        def loss(p):
+            r = _mlp_apply(p, Xn) - yj
+            return jnp.sum(wj * r * r) / jnp.maximum(wj.sum(), 1.0)
+
+        grad = jax.grad(loss)
+        flat0, tree = jax.tree_util.tree_flatten(p0)
+
+        def adam_step(carry, _):
+            flat, m1, m2, step = carry
+            p = jax.tree_util.tree_unflatten(tree, flat)
+            g = jax.tree_util.tree_leaves(grad(p))
+            step = step + 1
+            m1 = [0.9 * a + 0.1 * gi for a, gi in zip(m1, g)]
+            m2 = [0.999 * a + 0.001 * gi * gi for a, gi in zip(m2, g)]
+            bc1 = 1.0 - 0.9 ** step
+            bc2 = 1.0 - 0.999 ** step
+            flat = [f - lr * (a / bc1) / (jnp.sqrt(b / bc2) + 1e-8)
+                    for f, a, b in zip(flat, m1, m2)]
+            return (flat, m1, m2, step), None
+
+        zeros = [jnp.zeros_like(f) for f in flat0]
+        (flat, _, _, _), _ = jax.lax.scan(
+            adam_step, (flat0, zeros, zeros, jnp.float32(0.0)),
+            None, length=steps)
+        return jax.tree_util.tree_unflatten(tree, flat)
+
+    run = jax.jit(train)
+    _FIT_CACHE[key] = run
+    return run
+
+
+_FIT_CACHE: Dict[Tuple, object] = {}
+
+
+@dataclasses.dataclass
+class ContributionSurrogate:
+    """MLP regressor: (tier, module) features -> log10 per-module NMED
+    contribution; exact tiers are pinned to zero contribution."""
+
+    params: Dict
+    x_mu: np.ndarray
+    x_sd: np.ndarray
+    table: np.ndarray        # (L, T) predicted contributions
+
+    @classmethod
+    def fit(cls, candidates: Sequence[TierCandidate],
+            modules: Sequence[ModuleStats],
+            truth: np.ndarray,               # (L, T) measured NMED
+            steps: int = 600, lr: float = 3e-3, seed: int = 0,
+            ) -> "ContributionSurrogate":
+        total = sum(m.macs for m in modules)
+        feats, targs, mask = [], [], []
+        for i, m in enumerate(modules):
+            for t, c in enumerate(candidates):
+                feats.append(_features(c, m, total))
+                targs.append(math.log10(max(truth[i, t], 1e-12)))
+                mask.append(0.0 if c.is_exact else 1.0)
+        X = np.stack(feats)
+        y = np.array(targs, np.float32)
+        w = np.array(mask, np.float32)
+        x_mu = X.mean(0)
+        x_sd = X.std(0) + 1e-6
+        p0 = _mlp_init(jax.random.PRNGKey(seed), X.shape[1])
+        flat = _fit_run(steps, lr)(
+            jnp.asarray((X - x_mu) / x_sd), jnp.asarray(y),
+            jnp.asarray(w), p0)
+        params = jax.tree_util.tree_map(np.asarray, flat)
+
+        Xall = (X - x_mu) / x_sd
+        pred = 10.0 ** np.asarray(
+            _mlp_apply(params, jnp.asarray(Xall)), np.float64)
+        table = (pred * (w > 0)).reshape(len(modules), len(candidates))
+        return cls(params=params, x_mu=x_mu, x_sd=x_sd, table=table)
+
+
+def _combined_risk(table: np.ndarray, assignment: Sequence[int]) -> float:
+    """Root-sum-square combiner: independent per-module perturbations
+    add in variance, so model NMED ~ alpha * sqrt(sum c_i^2)."""
+    s = 0.0
+    for i, t in enumerate(assignment):
+        s += table[i, t] ** 2
+    return math.sqrt(s)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: constrained search
+# ---------------------------------------------------------------------------
+
+
+def _greedy(table: np.ndarray, energies: np.ndarray, macs: np.ndarray,
+            risk_budget: float) -> List[int]:
+    """Start all-exact; repeatedly take the move with the best energy
+    saving per unit of added risk that still fits the budget."""
+    L, T = table.shape
+    assign = [0] * L
+    risk2 = 0.0
+    budget2 = risk_budget ** 2
+    while True:
+        best, best_score = None, 0.0
+        for i in range(L):
+            cur = assign[i]
+            for t in range(T):
+                d_e = (energies[cur] - energies[t]) * macs[i]
+                if d_e <= 0.0:
+                    continue
+                d_r2 = table[i, t] ** 2 - table[i, cur] ** 2
+                if risk2 + d_r2 > budget2:
+                    continue
+                score = d_e / max(d_r2, 1e-30)
+                if score > best_score:
+                    best, best_score = (i, t, d_r2), score
+        if best is None:
+            return assign
+        i, t, d_r2 = best
+        assign[i] = t
+        risk2 += d_r2
+
+
+def _beam(table: np.ndarray, energies: np.ndarray, macs: np.ndarray,
+          risk_budget: float, width: int = 8) -> List[List[int]]:
+    """Beam over modules (largest MACs first), states scored by
+    (energy, risk); infeasible states pruned."""
+    L, T = table.shape
+    order = sorted(range(L), key=lambda i: -macs[i])
+    budget2 = risk_budget ** 2
+    # state: (energy, risk2, partial dict)
+    states = [(0.0, 0.0, {})]
+    for i in order:
+        nxt = []
+        for e, r2, part in states:
+            for t in range(T):
+                nr2 = r2 + table[i, t] ** 2
+                if nr2 > budget2:
+                    continue
+                nxt.append((e + macs[i] * energies[t], nr2,
+                            {**part, i: t}))
+        if not nxt:      # every branch infeasible: force exact here
+            nxt = [(e + macs[i] * energies[0], r2, {**part, i: 0})
+                   for e, r2, part in states]
+        nxt.sort(key=lambda s: (s[0], s[1]))
+        states = nxt[:width]
+    return [[part[i] for i in range(L)] for _, _, part in states]
+
+
+def _repair(assign: List[int], table: np.ndarray) -> bool:
+    """Demote the highest-contribution non-exact module to exact.
+    Returns False when nothing is left to demote."""
+    worst, wi = 0.0, -1
+    for i, t in enumerate(assign):
+        if t != 0 and table[i, t] >= worst:
+            worst, wi = table[i, t], i
+    if wi < 0:
+        return False
+    assign[wi] = 0
+    return True
+
+
+# ---------------------------------------------------------------------------
+# The result + one-command entry point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """An accuracy-budgeted per-module multiplier assignment."""
+
+    tier_map: Tuple[Tuple[str, str], ...]   # (module, tier short name)
+    alloc: Tuple[Tuple[str, str, str, Optional[int]], ...]
+    nmed: float                  # measured (exact re-evaluation)
+    nmed_predicted: float        # surrogate estimate at the same point
+    max_nmed: float
+    energy_per_mac_j: float      # MAC-weighted over probed modules
+    exact_energy_per_mac_j: float
+    mode: str
+    bits: int
+    modules: Tuple[ModuleStats, ...]
+    candidates: Tuple[TierCandidate, ...]
+    evals: int                   # exact evaluator calls spent
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - self.energy_per_mac_j / self.exact_energy_per_mac_j
+
+    def to_cim_config(self, **overrides):
+        """A ready-to-run CiMConfig carrying this allocation."""
+        from .compiler import CiMConfig
+
+        kw = dict(family="appro42", bits=self.bits, mode=self.mode,
+                  alloc=self.alloc)
+        kw.update(overrides)
+        return CiMConfig(**kw)
+
+    def report(self) -> str:
+        lines = [f"allocation: NMED {self.nmed:.3e} (budget "
+                 f"{self.max_nmed:.3e}), E/MAC "
+                 f"{self.energy_per_mac_j*1e12:.3f} pJ "
+                 f"({100*self.energy_saving:.1f}% vs exact), "
+                 f"{self.evals} exact evals"]
+        for name, tier in self.tier_map:
+            lines.append(f"  {name:12s} -> {tier}")
+        return "\n".join(lines)
+
+
+def make_evaluator(model, *, params=None, batch=None,
+                   candidates: Optional[Sequence[MultiplierSpec]] = None,
+                   modules: Optional[Sequence[str]] = None,
+                   mode: str = "surrogate", seed: int = 0,
+                   mesh=None) -> MixEvaluator:
+    """Build the probe + candidate set + mixing evaluator once, for
+    reuse across `autoallocate`/`exhaustive_oracle` calls at different
+    budgets (the evaluator's XLA compile dominates a single search, so
+    sweeps and benchmarks should share one)."""
+    cfg = model.cfg
+    bits = cfg.cim.bits if cfg.cim is not None else 8
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    if batch is None:
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(seed + 1), (2, 16), 0, cfg.vocab)}
+    specs = (list(candidates) if candidates is not None
+             else default_candidates(bits))
+    cands = build_candidates(specs, mesh=mesh)
+    stats = probe_modules(model, params, batch, modules=modules)
+    if not stats:
+        raise ValueError("probe found no named matmuls to allocate")
+    return MixEvaluator(model, params, batch, cands, stats, mode=mode)
+
+
+def autoallocate(model, max_nmed: float, *,
+                 params=None, batch=None, key=None,
+                 candidates: Optional[Sequence[MultiplierSpec]] = None,
+                 modules: Optional[Sequence[str]] = None,
+                 mode: str = "surrogate",
+                 beam_width: int = 8, topk: int = 8,
+                 seed: int = 0, mesh=None,
+                 evaluator: Optional[MixEvaluator] = None) -> Allocation:
+    """One command: probe -> surrogate -> constrained search -> exact
+    re-evaluation.  Returns the cheapest allocation whose MEASURED
+    model NMED fits `max_nmed`.
+
+    model: models.transformer.LM (any zoo config).  `params`/`batch`
+    default to a seeded init and a small random token batch.  The
+    candidate tier ladder defaults to `default_candidates(bits)` and
+    must include the exact tier.  Pass a `make_evaluator` result as
+    `evaluator` to amortize the probe/characterize/compile across
+    budget sweeps (params/batch/candidates/modules are then taken from
+    it)."""
+    if evaluator is not None:
+        ev = evaluator
+        cands, stats = ev.candidates, ev.modules
+        mode = ev.mode
+    else:
+        ev = make_evaluator(model, params=params, batch=batch,
+                            candidates=candidates, modules=modules,
+                            mode=mode, seed=seed, mesh=mesh)
+        cands, stats = ev.candidates, ev.modules
+    bits = cands[0].spec.bits
+    evals_start = ev.n_evals
+    L, T = len(stats), len(cands)
+
+    # ground truth: single-module contributions (L*T evals, one batch)
+    singles = []
+    for i in range(L):
+        for t in range(T):
+            a = [0] * L
+            a[i] = t
+            singles.append(a)
+    truth = ev.nmed_many(singles).reshape(L, T)
+    _obs("truth", L * T)
+    sur = ContributionSurrogate.fit(cands, stats, truth, seed=seed)
+
+    # combiner calibration: alpha = measured / rss-predicted on a few
+    # random multi-module allocations (CLT makes this ~constant)
+    rng = np.random.default_rng(seed)
+    calib = [list(rng.integers(0, T, size=L)) for _ in range(8)]
+    meas = ev.nmed_many(calib)
+    ratios = []
+    for a, mv in zip(calib, meas):
+        pred = _combined_risk(sur.table, a)
+        if pred > 0 and mv > 0:
+            ratios.append(mv / pred)
+    alpha = float(np.median(ratios)) if ratios else 1.0
+    risk_budget = max_nmed / max(alpha, 1e-12)
+
+    energies = np.array([c.energy_per_mac_j for c in cands])
+    macs = np.array([m.macs for m in stats])
+    total_macs = float(macs.sum())
+
+    # search: greedy + beam, dedup, exact re-eval of the top-K
+    props = [_greedy(sur.table, energies, macs, risk_budget)]
+    props += _beam(sur.table, energies, macs, risk_budget,
+                   width=beam_width)
+    seen, uniq = set(), []
+    for a in props:
+        k2 = tuple(a)
+        if k2 not in seen:
+            seen.add(k2)
+            uniq.append(a)
+    uniq.sort(key=lambda a: sum(macs[i] * energies[t]
+                                for i, t in enumerate(a)))
+    uniq = uniq[:topk]
+    _obs("search", len(uniq))
+
+    meas = ev.nmed_many(uniq)
+    _obs("reeval", len(uniq))
+    feasible = [(a, mv) for a, mv in zip(uniq, meas) if mv <= max_nmed]
+    if feasible:
+        assign, nmed = min(
+            feasible, key=lambda am: sum(
+                macs[i] * energies[t] for i, t in enumerate(am[0])))
+    else:
+        # repair: demote the riskiest modules until the measurement fits
+        assign = list(uniq[0])
+        nmed = float(meas[0])
+        while nmed > max_nmed and _repair(assign, sur.table):
+            nmed = ev.nmed(assign)
+        if nmed > max_nmed:
+            raise ValueError(
+                f"even the all-exact allocation measures NMED "
+                f"{nmed:.3e} > budget {max_nmed:.3e}")
+
+    pred = alpha * _combined_risk(sur.table, assign)
+    e_alloc = sum(macs[i] * energies[t]
+                  for i, t in enumerate(assign)) / total_macs
+    e_exact = float(energies[0])
+    alloc = tuple(
+        (m.name, cands[t].spec.family, cands[t].spec.compressor,
+         cands[t].spec.n_approx_cols)
+        for m, t in zip(stats, assign))
+    tier_map = tuple((m.name, cands[t].short_name())
+                     for m, t in zip(stats, assign))
+    return Allocation(
+        tier_map=tier_map, alloc=alloc, nmed=float(nmed),
+        nmed_predicted=float(pred), max_nmed=float(max_nmed),
+        energy_per_mac_j=float(e_alloc),
+        exact_energy_per_mac_j=e_exact, mode=mode, bits=bits,
+        modules=tuple(stats), candidates=tuple(cands),
+        evals=ev.n_evals - evals_start)
+
+
+def exhaustive_oracle(model, max_nmed: float, *,
+                      params=None, batch=None,
+                      candidates: Optional[Sequence[MultiplierSpec]] = None,
+                      modules: Optional[Sequence[str]] = None,
+                      mode: str = "surrogate", seed: int = 0,
+                      evaluator: Optional[MixEvaluator] = None,
+                      ) -> Allocation:
+    """Brute-force reference: measure EVERY T^L allocation exactly and
+    return the cheapest feasible one.  Only viable for tiny models —
+    this is the correctness oracle the tests and benchmarks compare
+    `autoallocate` against."""
+    if evaluator is not None:
+        ev = evaluator
+        cands, stats = ev.candidates, ev.modules
+        mode = ev.mode
+    else:
+        ev = make_evaluator(model, params=params, batch=batch,
+                            candidates=candidates, modules=modules,
+                            mode=mode, seed=seed)
+        cands, stats = ev.candidates, ev.modules
+    bits = cands[0].spec.bits
+    evals_start = ev.n_evals
+    L, T = len(stats), len(cands)
+    if T ** L > 70_000:
+        raise ValueError(f"{T}^{L} allocations is not exhaustible")
+    energies = np.array([c.energy_per_mac_j for c in cands])
+    macs = np.array([m.macs for m in stats])
+    total_macs = float(macs.sum())
+    allocs = []
+    for idx in range(T ** L):
+        a, r = [], idx
+        for _ in range(L):
+            a.append(r % T)
+            r //= T
+        allocs.append(a)
+    meas = ev.nmed_many(allocs)
+    best, best_e, best_nmed = None, None, None
+    for a, mv in zip(allocs, meas):
+        if mv > max_nmed:
+            continue
+        e = sum(macs[i] * energies[t] for i, t in enumerate(a))
+        if best_e is None or e < best_e:
+            best, best_e, best_nmed = a, e, float(mv)
+    if best is None:
+        raise ValueError(f"no allocation meets NMED<={max_nmed}")
+    alloc = tuple(
+        (m.name, cands[t].spec.family, cands[t].spec.compressor,
+         cands[t].spec.n_approx_cols)
+        for m, t in zip(stats, best))
+    tier_map = tuple((m.name, cands[t].short_name())
+                     for m, t in zip(stats, best))
+    return Allocation(
+        tier_map=tier_map, alloc=alloc, nmed=best_nmed,
+        nmed_predicted=best_nmed, max_nmed=float(max_nmed),
+        energy_per_mac_j=float(best_e / total_macs),
+        exact_energy_per_mac_j=float(energies[0]), mode=mode,
+        bits=bits, modules=tuple(stats), candidates=tuple(cands),
+        evals=ev.n_evals - evals_start)

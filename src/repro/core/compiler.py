@@ -43,6 +43,16 @@ class CiMConfig:
     # these prefixes ("mlp", "moe", "shared", "wq", ...); everything else
     # runs the exact int8 macro. () = everywhere (the paper's setting).
     apply_to: tuple = ()
+    # heterogeneous per-module allocation (DESIGN.md §16, the
+    # `repro.autoallocate` output): entries of
+    #     (name_prefix, family, compressor, n_approx_cols)
+    # route each matmul whose name matches the LONGEST prefix to that
+    # multiplier; "exact"-family entries and unmatched modules run the
+    # exact int8 macro.  All entries execute in this config's `mode` at
+    # this config's `bits`.  Mutually exclusive with `apply_to` (which
+    # is the single-family special case) and with `fault` (a defect map
+    # is compiled against ONE multiplier's tables).
+    alloc: Optional[tuple] = None
     # per-row (per-token) activation scales: each activation row
     # quantizes against its own max instead of the whole tensor's, so
     # row results are invariant to batching — required by the
@@ -69,6 +79,37 @@ class CiMConfig:
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.alloc is not None:
+            if self.apply_to:
+                raise ValueError(
+                    "alloc and apply_to are mutually exclusive: apply_to "
+                    "is the single-family special case of alloc")
+            if self.fault is not None:
+                raise ValueError(
+                    "alloc and fault are mutually exclusive: a defect "
+                    "map is compiled against one multiplier's tables")
+            from .approx_gemm import FAMILIES as _FAMS
+
+            norm = []
+            for e in self.alloc:
+                if len(e) != 4:
+                    raise ValueError(
+                        f"alloc entries are (prefix, family, compressor, "
+                        f"n_approx_cols) 4-tuples; got {e!r}")
+                prefix, family, compressor, ncols = e
+                if not isinstance(prefix, str) or not prefix:
+                    raise ValueError(
+                        f"alloc prefix must be a non-empty str: {e!r}")
+                if family not in _FAMS:
+                    raise ValueError(
+                        f"alloc family {family!r} not in {_FAMS}")
+                if ncols is not None and (not isinstance(ncols, int)
+                                          or ncols < 0):
+                    raise ValueError(
+                        f"alloc n_approx_cols must be None or int >= 0: "
+                        f"{e!r}")
+                norm.append((prefix, family, str(compressor), ncols))
+            object.__setattr__(self, "alloc", tuple(norm))
         if self.fault is not None and self.mode not in FAULT_MODES:
             raise ValueError(
                 f"fault injection needs an integer storage domain "
@@ -171,7 +212,9 @@ def compile_macro(config: CiMConfig) -> CiMMacro:
     surrogate = (SurrogateModel.exact(spec) if config.family == "exact"
                  else SurrogateModel.fit(spec))
     ppa = energy_model.ppa_report(config.family, config.bits,
-                                  config.sram.rows, config.sram.cols)
+                                  config.sram.rows, config.sram.cols,
+                                  compressor=config.compressor,
+                                  n_approx_cols=config.n_approx_cols)
     yrep = None
     if config.run_yield:
         model = yield_analysis.model_for_geometry(config.sram.rows)

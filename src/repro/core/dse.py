@@ -4,6 +4,16 @@ Given an application accuracy budget (max NMED / max MRED), enumerate
 the multiplier design space (family x approximate-column count x bit
 width), filter by the budget, and rank by energy per MAC — the
 "fine-grained accuracy-energy trade-off" loop OpenACM automates.
+
+The enumeration runs through `error_model.characterize_batch`
+(DESIGN.md §16): one jitted JAX evaluation over the whole spec grid —
+optionally shard_map-partitioned over a mesh's data axis — instead of
+a serial per-spec Monte-Carlo loop, with results persisted in the
+cross-process characterization cache so engine builds
+(`serving/tiers.build_tiers`) are disk reads in steady state.  Energy
+ranking is spec-aware: appro42 variants price in their compressor cell
+and approximate-column count, so "cheapest feasible" is a real order,
+not a family-level tie.
 """
 
 from __future__ import annotations
@@ -12,7 +22,7 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 from . import energy_model
-from .error_model import characterize
+from .error_model import characterize_batch
 from .multipliers import MultiplierSpec
 
 
@@ -32,12 +42,13 @@ class DSEPoint:
                      or self.energy_per_mac_j < other.energy_per_mac_j))
 
 
-def enumerate_space(bits: int = 8,
-                    families: Sequence[str] = ("exact", "appro42", "mitchell",
-                                               "log_our"),
-                    compressors: Sequence[str] = ("yang1", "orplane"),
-                    approx_col_counts: Optional[Sequence[int]] = None,
-                    ) -> List[DSEPoint]:
+def design_space(bits: int = 8,
+                 families: Sequence[str] = ("exact", "appro42", "mitchell",
+                                            "log_our"),
+                 compressors: Sequence[str] = ("yang1", "orplane"),
+                 approx_col_counts: Optional[Sequence[int]] = None,
+                 ) -> List[MultiplierSpec]:
+    """The spec grid `enumerate_space` characterizes."""
     if approx_col_counts is None:
         approx_col_counts = (bits // 2, 3 * bits // 4, bits, 5 * bits // 4)
     specs: List[MultiplierSpec] = []
@@ -48,14 +59,36 @@ def enumerate_space(bits: int = 8,
                     specs.append(MultiplierSpec(fam, bits, False, comp, n))
         else:
             specs.append(MultiplierSpec(fam, bits))
+    return specs
+
+
+def points_for(specs: Sequence[MultiplierSpec],
+               n_samples: int = 200_000, seed: int = 0,
+               mesh=None) -> List[DSEPoint]:
+    """Characterize + price an explicit spec list (one batched JAX
+    evaluation; cache-backed)."""
+    metrics = characterize_batch(specs, n_samples=n_samples, seed=seed,
+                                 mesh=mesh)
     pts = []
-    for spec in specs:
-        m = characterize(spec)
+    for spec, m in zip(specs, metrics):
         pts.append(DSEPoint(
             spec=spec, nmed=m.nmed, mred=m.mred, wce=m.wce,
-            energy_per_mac_j=energy_model.energy_per_mac_j(spec.family, bits),
-            logic_area_um2=energy_model.logic_area_um2(spec.family, bits)))
+            energy_per_mac_j=energy_model.energy_per_mac_j(
+                spec.family, spec.bits, spec.compressor,
+                spec.n_approx_cols),
+            logic_area_um2=energy_model.logic_area_um2(spec.family,
+                                                       spec.bits)))
     return pts
+
+
+def enumerate_space(bits: int = 8,
+                    families: Sequence[str] = ("exact", "appro42", "mitchell",
+                                               "log_our"),
+                    compressors: Sequence[str] = ("yang1", "orplane"),
+                    approx_col_counts: Optional[Sequence[int]] = None,
+                    mesh=None) -> List[DSEPoint]:
+    return points_for(design_space(bits, families, compressors,
+                                   approx_col_counts), mesh=mesh)
 
 
 def select(points: List[DSEPoint], max_nmed: Optional[float] = None,

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 # family -> {bits -> value}; families: openc2 (adder-tree baseline),
 # exact, log_our, appro42.  Source: Table II.
@@ -48,6 +48,33 @@ CLOCK_HZ = 100e6
 _MITCHELL_LOGIC_FRac = 0.94
 _MITCHELL_POWER_FRAC = 0.96
 
+# Appro4-2 switching-energy scaling over its two approximation knobs.
+# The Table II appro42 anchors are measured at the paper's reference
+# configuration (approximate compressors on the low min(bits, 8)
+# product columns, yang1 cells).  The power saving vs the exact tree
+# comes from the approximated columns' simplified cells, so it scales
+# ~linearly with the approximate-column count; the orplane cell drops
+# the carry chain entirely (2 gates vs yang1's 4) and saves a bit more
+# per column.  Without this, every appro42 variant collapses onto the
+# family anchor and DSE's "cheapest feasible" ordering among them is
+# meaningless (ISSUE 10 satellite).
+_COMPRESSOR_SAVING_FACTOR: Dict[str, float] = {
+    "yang1": 1.0,        # the anchor cell
+    "orplane": 1.08,     # simpler cell -> slightly deeper saving
+}
+
+
+def _approx_saving_scale(bits: int, compressor: Optional[str],
+                         n_approx_cols: Optional[int]) -> float:
+    """Fraction of the anchor's (exact - appro42) power saving realized
+    by this variant: (n / n_ref) * cell_factor, n_ref the anchor's
+    column count.  Strictly increasing in n and in cell aggressiveness,
+    1.0 at the anchor configuration."""
+    n_ref = min(bits, 8)
+    n = n_ref if n_approx_cols is None else n_approx_cols
+    cell = _COMPRESSOR_SAVING_FACTOR.get(compressor or "yang1", 1.0)
+    return (n / max(n_ref, 1)) * cell
+
 
 def _powerlaw(anchors: Dict[int, float], bits: int) -> float:
     """Interpolate/extrapolate anchors with a fitted power law a*n^b."""
@@ -76,9 +103,19 @@ def logic_area_um2(family: str, bits: int) -> float:
     return _powerlaw(LOGIC_AREA_UM2[key], bits) * fa
 
 
-def system_power_w(family: str, bits: int) -> float:
+def system_power_w(family: str, bits: int,
+                   compressor: Optional[str] = None,
+                   n_approx_cols: Optional[int] = None) -> float:
     key, _, fp = _family_key(family)
-    return _powerlaw(SYSTEM_POWER_W[key], bits) * fp
+    p = _powerlaw(SYSTEM_POWER_W[key], bits) * fp
+    if family == "appro42":
+        p_exact = _powerlaw(SYSTEM_POWER_W["exact"], bits)
+        saving = (p_exact - p) * _approx_saving_scale(bits, compressor,
+                                                      n_approx_cols)
+        # the exact tree is the n=0 limit; never below 10% of it (the
+        # SRAM access floor dominates long before the tree vanishes)
+        p = max(p_exact - saving, 0.1 * p_exact)
+    return p
 
 
 def sram_area_um2(rows: int, cols: int) -> float:
@@ -98,10 +135,15 @@ def delay_ns(rows: int) -> float:
     return 5.22 + 0.02 * max(0.0, math.log2(rows / 16.0))
 
 
-def energy_per_mac_j(family: str, bits: int) -> float:
+def energy_per_mac_j(family: str, bits: int,
+                     compressor: Optional[str] = None,
+                     n_approx_cols: Optional[int] = None) -> float:
     """System (SRAM access + multiplier) energy per MAC at the anchor
-    operating point: one MAC per cycle at 100 MHz."""
-    return system_power_w(family, bits) / CLOCK_HZ
+    operating point: one MAC per cycle at 100 MHz.  For appro42 the
+    optional (compressor, n_approx_cols) knobs scale the switching
+    saving, so more-approximate variants are strictly cheaper."""
+    return system_power_w(family, bits, compressor, n_approx_cols) \
+        / CLOCK_HZ
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,15 +164,18 @@ class PPAReport:
         return 1.0 - self.power_w / other.power_w
 
 
-def ppa_report(family: str, bits: int, rows: int, cols: int) -> PPAReport:
+def ppa_report(family: str, bits: int, rows: int, cols: int,
+               compressor: Optional[str] = None,
+               n_approx_cols: Optional[int] = None) -> PPAReport:
     la = logic_area_um2(family, bits)
     sa = sram_area_um2(rows, cols)
     return PPAReport(
         family=family, bits=bits, rows=rows, cols=cols,
         delay_ns=delay_ns(rows),
         logic_area_um2=la, sram_area_um2=sa, pnr_area_um2=la + sa,
-        power_w=system_power_w(family, bits),
-        energy_per_mac_j=energy_per_mac_j(family, bits),
+        power_w=system_power_w(family, bits, compressor, n_approx_cols),
+        energy_per_mac_j=energy_per_mac_j(family, bits, compressor,
+                                          n_approx_cols),
     )
 
 

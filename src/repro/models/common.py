@@ -206,6 +206,12 @@ class CiMParams:
     attn: bool = False           # fused CiM attention (DESIGN.md §13)
     attn_heads: Optional[tuple] = None   # per-q-head family allocation
     fault: Optional[Any] = None  # as-fabricated defects (DESIGN.md §14)
+    # heterogeneous per-module allocation (DESIGN.md §16): compiled
+    # (prefix, GemmParams, apply) entries, longest prefix first.  Name
+    # routing happens at trace time, so each module pins its own frozen
+    # GemmParams — one cached executable per (gp, shape) as usual, zero
+    # steady-state retraces.
+    alloc: Optional[tuple] = None
 
     @classmethod
     def from_config(cls, cim: Optional[CiMConfig]) -> "CiMParams":
@@ -214,6 +220,24 @@ class CiMParams:
         macro: CiMMacro = compile_macro(cim)
         s = macro.surrogate
         ah = getattr(cim, "attn_heads", None)
+        alloc = None
+        if getattr(cim, "alloc", None):
+            from repro.core.error_model import SurrogateModel
+            from repro.core.multipliers import MultiplierSpec
+
+            entries = []
+            for prefix, family, compressor, ncols in cim.alloc:
+                spec = MultiplierSpec(family, cim.bits, cim.signed,
+                                      compressor, ncols)
+                sur = (SurrogateModel.exact(spec) if family == "exact"
+                       else SurrogateModel.fit(spec))
+                gp = GemmParams.from_spec(spec, sur, cim.mode)
+                if cim.per_token:
+                    gp = dataclasses.replace(gp, per_token=True)
+                entries.append((prefix, gp, family != "exact"))
+            # longest prefix wins: sort once, match first
+            entries.sort(key=lambda e: len(e[0]), reverse=True)
+            alloc = tuple(entries)
         return cls(mode=cim.mode, bits=cim.bits, family=cim.family,
                    mu=s.mu_rel, c0=s.c0_abs, c1=s.c1_rel,
                    compressor=cim.compressor,
@@ -222,7 +246,8 @@ class CiMParams:
                    per_token=bool(getattr(cim, "per_token", False)),
                    attn=bool(getattr(cim, "attn", False)),
                    attn_heads=tuple(ah) if ah is not None else None,
-                   fault=getattr(cim, "fault", None))
+                   fault=getattr(cim, "fault", None),
+                   alloc=alloc)
 
     def gemm_params(self) -> GemmParams:
         return GemmParams(family=self.family, bits=self.bits,
@@ -237,6 +262,19 @@ class CiMParams:
         the exact int8 macro instead."""
         return not self.apply_to or any(name.startswith(p)
                                         for p in self.apply_to)
+
+    def routing(self, name: str) -> Tuple[GemmParams, bool]:
+        """(gemm params, apply) for one named matmul.  With an `alloc`
+        table the longest matching prefix picks the module's multiplier
+        ("exact" entries and unmatched names run the exact int8 macro,
+        apply=False); otherwise the homogeneous (family, apply_to)
+        routing applies."""
+        if self.alloc is not None:
+            for prefix, gp, apply in self.alloc:
+                if name.startswith(prefix):
+                    return gp, apply
+            return self.gemm_params(), False
+        return self.gemm_params(), self.selects(name)
 
 
 @dataclasses.dataclass
@@ -254,6 +292,19 @@ class CiMContext:
 
 
 OFF = CiMContext(CiMParams())
+
+# Trace-time interception of every named linear (core/allocate.py's
+# mixing evaluator; DESIGN.md §16).  The hook is called as
+# fn(x, wv, ctx, name) AFTER the FSDP gather; returning None falls
+# through to normal routing, any other value becomes the layer output
+# (bias is still added by cim_linear).  List-of-one so closures see
+# swaps without a global statement.
+_LINEAR_OVERRIDE = [None]
+
+
+def set_linear_override(fn) -> None:
+    """Install (or clear, with None) the cim_linear interception hook."""
+    _LINEAR_OVERRIDE[0] = fn
 
 # NOISE_KIND / surrogate_noise live in core/approx_gemm.py now (they are
 # part of the shared dispatch engine) and are re-exported here for
@@ -327,19 +378,25 @@ def cim_linear(x, w: Param, ctx: CiMContext, name: str = "",
     """
     wv = fsdp_gather(w)
     assert wv.ndim == 2, "cim_linear expects 2-D weights (flatten heads)"
+    if _LINEAR_OVERRIDE[0] is not None:
+        out = _LINEAR_OVERRIDE[0](x, wv, ctx, name)
+        if out is not None:
+            if bias is not None:
+                out = out + bias.value
+            return out
     p = ctx.p
     if p.mode == "off":
         out = x @ wv
     else:
         key = ctx.child(name).key if name else ctx.key
-        apply = p.selects(name)
+        gp, apply = p.routing(name)
         margs = _tp_mesh_args(x, wv, w.spec, p) if apply else None
         if margs is not None:
             mesh, x_spec, w_spec = margs
-            out = model_matmul(x, wv, p.gemm_params(), key, apply=True,
+            out = model_matmul(x, wv, gp, key, apply=True,
                                mesh=mesh, x_spec=x_spec, w_spec=w_spec)
         else:
-            out = model_matmul(x, wv, p.gemm_params(), key, apply=apply)
+            out = model_matmul(x, wv, gp, key, apply=apply)
     if bias is not None:
         out = out + bias.value
     return out
@@ -356,17 +413,18 @@ def cim_einsum(eqn: str, x, w: Param, ctx: CiMContext, name: str = ""):
     xq = fake_quant(x, p.bits, axis=-1 if p.per_token else None)
     wq = fake_quant(wv, p.bits).astype(x.dtype)
     d = jnp.einsum(eqn, xq, wq)
-    if not p.selects(name):
+    gp, apply = p.routing(name)
+    if not apply:
         return d                 # mixed allocation: exact int8 macro
-    out = (1.0 + p.mu) * d
+    out = (1.0 + gp.mu) * d
     key = ctx.child(name).key if name else ctx.key
     if p.mode in ("surrogate", "surrogate_fast") and key is not None \
-            and (p.c0 > 0.0 or p.c1 > 0.0):
+            and (gp.c0 > 0.0 or gp.c1 > 0.0):
         k_len = x.shape[-1]
         sx = quant_scale(jax.lax.stop_gradient(x), p.bits)
         sw = quant_scale(jax.lax.stop_gradient(wv), p.bits)
         scale2 = (sx * sw).astype(jnp.float32) ** 2
-        var = (p.c0 + p.c1 * (0.5 * 127.0 ** 2) ** 1) * k_len * scale2
+        var = (gp.c0 + gp.c1 * (0.5 * 127.0 ** 2) ** 1) * k_len * scale2
         eps = surrogate_noise(key, d.shape, d.dtype)
         out = out + jax.lax.stop_gradient(
             jnp.sqrt(jnp.maximum(var, 0.0)).astype(d.dtype) * eps)

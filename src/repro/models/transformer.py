@@ -476,6 +476,18 @@ class LM:
         metrics["loss"] = loss
         return loss, metrics
 
+    def forward_logits(self, params, batch, key=None):
+        """Full-sequence logits (B, S, V) for one teacher-forced pass —
+        the allocation evaluator's measurement surface (DESIGN.md §16):
+        no loss reduction, no caches, same stack as `loss_fn`."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self._embed(params, tokens)
+        x_aux = self._aux_stream(params, batch, key)
+        x, _, _ = self._run_stack(params, x, positions, None, key, x_aux)
+        return self._logits(params, x)
+
     # ---- serving --------------------------------------------------------
     def init_caches(self, batch: int, max_len: int,
                     per_slot: bool = False):

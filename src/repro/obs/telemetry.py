@@ -61,6 +61,12 @@ class EngineTelemetry:
         self.autotune_c = r.counter(
             "repro_autotune_resolutions_total",
             "autotune block resolutions by cache outcome")
+        self.char_cache_c = r.counter(
+            "repro_char_cache_resolutions_total",
+            "multiplier characterizations by cache outcome")
+        self.alloc_search_c = r.counter(
+            "repro_alloc_search_evals_total",
+            "allocation-search evaluator spend by stage")
         self.requests_c = r.counter(
             "repro_serving_requests_total", "completed requests")
         self.tokens_c = r.counter(
@@ -116,18 +122,22 @@ class EngineTelemetry:
 
     # -- global sink management --------------------------------------------
     def attach(self) -> None:
-        from repro.core import approx_gemm, autotune
+        from repro.core import allocate, approx_gemm, autotune, error_model
 
         approx_gemm.set_obs_sink(self)
         autotune.set_obs_sink(self)
+        error_model.set_obs_sink(self)
+        allocate.set_obs_sink(self)
         self._attached = True
 
     def detach(self) -> None:
-        from repro.core import approx_gemm, autotune
+        from repro.core import allocate, approx_gemm, autotune, error_model
 
         if self._attached:
             approx_gemm.set_obs_sink(None)
             autotune.set_obs_sink(None)
+            error_model.set_obs_sink(None)
+            allocate.set_obs_sink(None)
             self._attached = False
 
     # -- dispatch sink protocol (approx_gemm / autotune) -------------------
@@ -143,6 +153,12 @@ class EngineTelemetry:
 
     def autotune(self, key: str, outcome: str) -> None:
         self.autotune_c.inc(1, outcome=outcome)
+
+    def char_cache(self, key: str, outcome: str) -> None:
+        self.char_cache_c.inc(1, outcome=outcome)
+
+    def alloc_search(self, event: str, count: int) -> None:
+        self.alloc_search_c.inc(count, event=event)
 
     # -- engine lifecycle ---------------------------------------------------
     def _tid(self, lane: str) -> int:

@@ -88,6 +88,24 @@ def build_tiers(bits: int = 8, mode: str = "surrogate_fast",
     return tuple(sorted(tiers, key=lambda t: t.nmed))
 
 
+def allocation_tier(allocation, name: str = "autoalloc",
+                    mode: Optional[str] = None,
+                    attn: bool = False) -> AccuracyTier:
+    """Turn a `core.allocate.Allocation` into a serving-ladder rung.
+
+    The tier's CiMConfig carries the per-module `alloc` table, so the
+    engine jit-compiles it like any other lane — every module's frozen
+    GemmParams keys its own cached executable, and the MEASURED
+    allocation NMED (not a per-multiplier proxy) is what the router
+    ranks against request tolerances.  Energy is the allocation's
+    MAC-weighted energy/MAC over the probed modules."""
+    cim = allocation.to_cim_config(attn=attn,
+                                   **({} if mode is None
+                                      else {"mode": mode}))
+    return AccuracyTier(name, cim, allocation.nmed,
+                        allocation.energy_per_mac_j)
+
+
 def spec_pair(tiers: Sequence[AccuracyTier],
               drafter: Optional[str] = None
               ) -> Tuple[AccuracyTier, AccuracyTier]:

@@ -1,0 +1,217 @@
+"""Per-module accuracy allocation (DESIGN.md §16, ISSUE 10): alloc
+plumbing through CiMConfig/cim_linear, the probe + mixing evaluator,
+`autoallocate` against the exhaustive oracle, and the serving lane."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import allocate
+from repro.core.compiler import CiMConfig
+from repro.models.common import CiMParams
+from repro.models.transformer import LM
+
+ARCH = "qwen3-1.7b"
+MODS = ("wq", "wv", "mlp_wo")       # 3 modules x 4 tiers: exhaustible
+ALL_MODS = ("wq", "wk", "wv", "wo", "mlp_wi", "mlp_wg", "mlp_wo")
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_config(ARCH, smoke=True)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)}
+    return cfg, lm, params, batch
+
+
+@pytest.fixture(scope="module")
+def evaluator(smoke_lm):
+    _, lm, params, batch = smoke_lm
+    return allocate.make_evaluator(lm, params=params, batch=batch,
+                                   modules=MODS)
+
+
+# ------------------------------------------------------- alloc plumbing --
+
+
+def test_cim_config_alloc_validation():
+    ok = CiMConfig(alloc=(("mlp", "appro42", "orplane", 10),))
+    assert ok.alloc == (("mlp", "appro42", "orplane", 10),)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        CiMConfig(alloc=(("mlp", "appro42", "yang1", 8),),
+                  apply_to=("mlp",))
+    with pytest.raises(ValueError, match="4-tuples"):
+        CiMConfig(alloc=(("mlp", "appro42"),))
+    with pytest.raises(ValueError, match="non-empty str"):
+        CiMConfig(alloc=(("", "appro42", "yang1", 8),))
+    with pytest.raises(ValueError, match="not in"):
+        CiMConfig(alloc=(("mlp", "booth", "yang1", 8),))
+    with pytest.raises(ValueError, match="n_approx_cols"):
+        CiMConfig(alloc=(("mlp", "appro42", "yang1", -3),))
+
+
+def test_alloc_longest_prefix_routing():
+    p = CiMParams.from_config(CiMConfig(
+        family="appro42", bits=8, mode="surrogate",
+        alloc=(("mlp", "appro42", "orplane", 10),
+               ("mlp_wo", "log_our", "yang1", None),
+               ("wq", "exact", "yang1", None))))
+    gp, apply = p.routing("mlp_wi")
+    assert (gp.family, gp.compressor, gp.n_approx_cols, apply) == \
+        ("appro42", "orplane", 10, True)
+    gp, apply = p.routing("mlp_wo")          # longest prefix wins
+    assert (gp.family, apply) == ("log_our", True)
+    gp, apply = p.routing("wq")              # explicit exact entry
+    assert not apply
+    gp, apply = p.routing("wk")              # unmatched -> exact macro
+    assert not apply
+    # frozen GemmParams per module: hashable (executable-cache keys)
+    assert hash(p.alloc) is not None
+
+
+def test_exact_alloc_matches_exact_baseline(smoke_lm):
+    """An all-exact alloc table and the apply-nothing baseline run the
+    same executables: identical logits."""
+    cfg, _, params, batch = smoke_lm
+    cfg_a = dataclasses.replace(cfg, cim=CiMConfig(
+        family="appro42", bits=8, mode="surrogate",
+        alloc=tuple((m, "exact", "yang1", None) for m in ALL_MODS)))
+    cfg_b = dataclasses.replace(cfg, cim=CiMConfig(
+        family="appro42", bits=8, mode="surrogate",
+        apply_to=("__none__",)))
+    key = jax.random.PRNGKey(3)
+    la = LM(cfg_a).forward_logits(params, batch, key=key)
+    lb = LM(cfg_b).forward_logits(params, batch, key=key)
+    assert jnp.array_equal(la, lb)
+
+
+def test_probe_finds_named_modules(smoke_lm):
+    _, lm, params, batch = smoke_lm
+    stats = allocate.probe_modules(lm, params, batch)
+    names = [s.name for s in stats]
+    assert set(names) == set(ALL_MODS)
+    cfg = lm.cfg
+    by = {s.name: s for s in stats}
+    assert by["wq"].k == cfg.d_model
+    # scanned body: every module executes n_periods times per forward
+    assert all(s.calls == cfg.n_periods for s in stats)
+    assert all(s.macs > 0 and s.absmax_w > 0 for s in stats)
+
+
+# -------------------------------------------------- evaluator + search --
+
+
+def test_evaluator_all_exact_is_zero_nmed(evaluator):
+    L = len(evaluator.modules)
+    assert evaluator.nmed([0] * L) == 0.0
+
+
+def test_evaluator_deterministic_and_monotone_sanity(evaluator):
+    L = len(evaluator.modules)
+    a = [1] * L
+    x1 = evaluator.nmed(a)
+    x2 = evaluator.nmed(a)
+    assert x1 == x2 > 0.0
+    # perturbing every module is no better (to noise-cancellation
+    # slack) than perturbing one of them at the same tier
+    worst = evaluator.nmed([2] * L)
+    single = evaluator.nmed([2] + [0] * (L - 1))
+    assert worst >= 0.5 * single
+
+
+def test_autoallocate_within_oracle_energy(smoke_lm, evaluator):
+    """ISSUE 10 acceptance: on an exhaustible model the surrogate
+    search's allocation energy is within 10% of the true optimum at
+    the same NMED budget — and both satisfy the budget exactly."""
+    _, lm, _, _ = smoke_lm
+    budget = 1e-2
+    a = allocate.autoallocate(lm, budget, evaluator=evaluator)
+    o = allocate.exhaustive_oracle(lm, budget, evaluator=evaluator)
+    assert a.nmed <= budget and o.nmed <= budget
+    assert a.energy_per_mac_j <= 1.10 * o.energy_per_mac_j, \
+        (f"autoallocate {a.energy_per_mac_j:.4g} J/MAC vs oracle "
+         f"{o.energy_per_mac_j:.4g} J/MAC")
+    # far fewer exact evaluations than the 4^3 sweep
+    assert a.evals < o.evals
+
+
+@pytest.mark.parametrize("budget", [3e-3, 8e-3, 2e-2])
+def test_autoallocate_budget_always_satisfied(smoke_lm, evaluator,
+                                              budget):
+    """Property (seeded sweep; the hypothesis variant lives below):
+    whatever the surrogate predicts, the RETURNED allocation satisfies
+    the budget under exact re-evaluation, by construction."""
+    _, lm, _, _ = smoke_lm
+    a = allocate.autoallocate(lm, budget, evaluator=evaluator)
+    assert a.nmed <= budget
+    assert a.nmed == evaluator.nmed(
+        [ {c.short_name(): i for i, c in
+           enumerate(evaluator.candidates)}[t] for _, t in a.tier_map])
+    assert a.energy_per_mac_j <= a.exact_energy_per_mac_j
+
+
+def test_autoallocate_tightest_budget_degrades_to_exact(smoke_lm,
+                                                        evaluator):
+    _, lm, _, _ = smoke_lm
+    a = allocate.autoallocate(lm, 1e-9, evaluator=evaluator)
+    assert a.nmed == 0.0
+    assert all(t == "exact8b" for _, t in a.tier_map)
+    assert a.energy_per_mac_j == a.exact_energy_per_mac_j
+
+
+def test_allocation_roundtrip_through_cim_config(smoke_lm, evaluator):
+    """The returned alloc table drives a real forward whose deviation
+    from exact matches the evaluator's measurement to first order."""
+    cfg, lm, params, batch = smoke_lm
+    a = allocate.autoallocate(lm, 1e-2, evaluator=evaluator)
+    cim = a.to_cim_config()
+    assert cim.alloc == a.alloc
+    lm_a = LM(dataclasses.replace(cfg, cim=cim))
+    logits = lm_a.forward_logits(params, batch,
+                                 key=jax.random.PRNGKey(5))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    exact = LM(dataclasses.replace(cfg, cim=dataclasses.replace(
+        cim, alloc=tuple((n, "exact", "yang1", None)
+                         for n, *_ in cim.alloc)))).forward_logits(
+        params, batch, key=jax.random.PRNGKey(5))
+    d = np.abs(np.asarray(logits, np.float32)
+               - np.asarray(exact, np.float32))
+    nmed = d.mean() / np.abs(np.asarray(exact, np.float32)).max()
+    assert 0.0 < nmed < 10 * a.max_nmed
+
+
+# --------------------------------------------------- serving lane -------
+
+
+def test_allocation_lane_zero_steady_retraces(smoke_lm, evaluator):
+    """The autoallocate tier serves as a pre-jitted lane over shared
+    weights: after warmup, mixed exact/autoalloc traffic never
+    retraces the dispatch engine (ISSUE 10 acceptance)."""
+    from repro.serving.engine import build_engine
+    from repro.serving.tiers import allocation_tier, build_tiers
+    from repro.serving.workload import poisson_workload
+
+    cfg, lm, params, _ = smoke_lm
+    a = allocate.autoallocate(lm, 1e-2, evaluator=evaluator)
+    tier = allocation_tier(a, mode="surrogate_fast")
+    assert tier.nmed == a.nmed
+    tiers = tuple(t for t in build_tiers(families=("exact",))) + (tier,)
+    eng = build_engine(cfg, params, tiers=tiers, slots_per_tier=2,
+                       max_len=24, prompt_buckets=(6,),
+                       group_buckets=(1, 2))
+    eng.warmup()
+    wl = poisson_workload(6, rate=500.0, vocab=cfg.vocab,
+                          prompt_len=(3, 6), max_new=(1, 4),
+                          tier_mix=(("exact", None, 1.0),
+                                    ("autoalloc", None, 1.0)), seed=9)
+    res = eng.run(wl)
+    assert all(r.done for r in res.values())
+    assert {r.tier for r in res.values()} == {"exact", "autoalloc"}
+    assert eng.steady_retraces() == 0, \
+        "allocation lane retraced after pre-warm"

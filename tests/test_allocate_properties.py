@@ -1,0 +1,51 @@
+"""Hypothesis property variant of the allocation-budget invariant (the
+always-running seeded sweep lives in tests/test_allocate.py): for ANY
+budget, the allocation `autoallocate` returns satisfies it under exact
+re-evaluation — the search may be wrong, the measurement gate may not.
+
+Profiles mirror tests/test_serving_properties.py: ``ci`` (derandomized,
+no deadline) via HYPOTHESIS_PROFILE=ci, default ``dev`` keeps random
+exploration."""
+
+import os
+
+import jax
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need the optional "
+    "hypothesis dev dependency (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import allocate  # noqa: E402
+from repro.models.transformer import LM  # noqa: E402
+
+settings.register_profile("ci", max_examples=8, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=8, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+
+_STATE = {}
+
+
+def _evaluator():
+    if "ev" not in _STATE:
+        cfg = get_config("qwen3-1.7b", smoke=True)
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)}
+        _STATE["lm"] = lm
+        _STATE["ev"] = allocate.make_evaluator(
+            lm, params=params, batch=batch,
+            modules=("wq", "wv", "mlp_wo"))
+    return _STATE["lm"], _STATE["ev"]
+
+
+@given(st.floats(1e-4, 5e-2), st.integers(0, 3))
+def test_budget_satisfied_under_exact_reevaluation(budget, seed):
+    lm, ev = _evaluator()
+    a = allocate.autoallocate(lm, budget, evaluator=ev, seed=seed)
+    assert a.nmed <= budget
+    assert a.energy_per_mac_j <= a.exact_energy_per_mac_j

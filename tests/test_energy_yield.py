@@ -36,6 +36,43 @@ def test_paper_claims_from_model():
         assert em.system_power_w("openc2", b) >= em.system_power_w("exact", b)
 
 
+def test_appro42_variant_energy_strictly_ranked():
+    """The DSE energy order among appro42 variants is real (ISSUE 10
+    satellite): more approximate columns and the simpler orplane cell
+    must each be STRICTLY cheaper, the anchor configuration must keep
+    its Table II value, and every approximate variant stays between the
+    exact tree (n=0 limit) and the 10%-of-exact SRAM floor."""
+    p_exact = em.system_power_w("exact", 8)
+    # anchor (yang1, n=min(bits, 8)) is pinned to Table II
+    assert em.system_power_w("appro42", 8, "yang1", 8) == \
+        pytest.approx(2.11e-4)
+    assert em.system_power_w("appro42", 8) == pytest.approx(2.11e-4)
+    for comp in ("yang1", "orplane"):
+        es = [em.energy_per_mac_j("appro42", 8, comp, n)
+              for n in (4, 6, 8, 10)]
+        assert all(a > b for a, b in zip(es, es[1:])), \
+            f"{comp}: more approx columns must be strictly cheaper: {es}"
+    for n in (4, 6, 8, 10):
+        assert em.energy_per_mac_j("appro42", 8, "orplane", n) < \
+            em.energy_per_mac_j("appro42", 8, "yang1", n)
+        for comp in ("yang1", "orplane"):
+            p = em.system_power_w("appro42", 8, comp, n)
+            assert 0.1 * p_exact <= p < p_exact
+    # n=0 degenerates to the exact tree
+    assert em.system_power_w("appro42", 8, "yang1", 0) == \
+        pytest.approx(p_exact)
+
+
+def test_dse_energy_ranking_not_degenerate():
+    """enumerate_space must produce DISTINCT energies across appro42
+    variants so `select`'s cheapest-feasible order means something."""
+    from repro.core import dse
+
+    pts = dse.enumerate_space(bits=8, families=("appro42",))
+    es = [p.energy_per_mac_j for p in pts]
+    assert len(set(es)) == len(es), f"degenerate energy ranking: {es}"
+
+
 def test_powerlaw_interpolation_monotone():
     vals = [em.logic_area_um2("exact", b) for b in (8, 12, 16, 24, 32, 48)]
     assert all(x < y for x, y in zip(vals, vals[1:]))

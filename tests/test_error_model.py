@@ -1,5 +1,13 @@
 """Surrogate calibration: the scale-out noise model must match the
-bit-exact emulator's first two moments on real GEMMs."""
+bit-exact emulator's first two moments on real GEMMs.  Plus the ISSUE
+10 characterization cache/batching contracts: batched JAX evaluation
+is byte-identical to the serial numpy reference, and the disk cache is
+deterministic across processes and tolerant of corruption."""
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +15,8 @@ import numpy as np
 import pytest
 
 from repro.core import CiMConfig, compile_macro
+from repro.core import error_model as erm
+from repro.core.multipliers import MultiplierSpec
 
 
 @pytest.mark.parametrize("family", ["appro42", "log_our", "mitchell"])
@@ -51,6 +61,116 @@ def test_exact_macro_is_noise_free():
     a = mac.matmul(x, w, key=jax.random.PRNGKey(2))
     b = mac.matmul(x, w, mode="exact")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+_BATCH_SPECS = [
+    MultiplierSpec("appro42", 12, False, "yang1", 6),     # MC path
+    MultiplierSpec("appro42", 12, False, "orplane", 12),  # MC path
+    MultiplierSpec("log_our", 12, False),                 # MC path
+    MultiplierSpec("exact", 6, False),                    # exhaustive
+    MultiplierSpec("appro42", 8, False, "orplane", 10),   # exhaustive
+]
+
+
+def test_characterize_batch_matches_serial_bitwise(tmp_path, monkeypatch):
+    """The batched JAX evaluation must return the SAME ErrorMetrics as
+    the serial numpy path — bit for bit, so both can share one cache
+    row (the reductions run through the same float64 routine)."""
+    monkeypatch.setenv(erm._ENV_CACHE, str(tmp_path / "cache.json"))
+    erm.clear_memory_cache()
+    n, seed = 20_000, 7
+    batched = erm.characterize_batch(_BATCH_SPECS, n_samples=n,
+                                     seed=seed, cache=False)
+    for spec, got in zip(_BATCH_SPECS, batched):
+        want = erm.characterize(spec, n_samples=n, seed=seed,
+                                cache=False)
+        assert got == want, f"batched != serial for {spec}"
+
+
+def test_characterize_batch_dedups_and_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv(erm._ENV_CACHE, str(tmp_path / "cache.json"))
+    erm.clear_memory_cache()
+    spec = MultiplierSpec("appro42", 8, False, "yang1", 4)
+    out = erm.characterize_batch([spec, spec, spec], n_samples=5_000)
+    assert out[0] == out[1] == out[2]
+    # second call is pure cache
+    events = []
+
+    class Sink:
+        def char_cache(self, key, outcome):
+            events.append(outcome)
+
+    prev = erm.set_obs_sink(Sink())
+    try:
+        again = erm.characterize_batch([spec], n_samples=5_000)
+    finally:
+        erm.set_obs_sink(prev)
+    assert again[0] == out[0]
+    assert events == ["mem_hit"]
+    # cold process sees the disk row
+    erm.clear_memory_cache()
+    prev = erm.set_obs_sink(Sink())
+    events.clear()
+    try:
+        cold = erm.characterize(spec, n_samples=5_000)
+    finally:
+        erm.set_obs_sink(prev)
+    assert cold == out[0]
+    assert events == ["disk_hit"]
+
+
+_CHILD = r"""
+import json, sys
+from repro.core import error_model as erm
+from repro.core.multipliers import MultiplierSpec
+m = erm.characterize(MultiplierSpec("appro42", 12, False, "orplane", 9),
+                     n_samples=30_000, seed=3)
+print(json.dumps([m.nmed, m.mred, m.wce, m.bias, m.mu_rel, m.c0_abs,
+                  m.c1_rel]))
+"""
+
+
+def test_char_cache_cross_process_determinism(tmp_path):
+    """Same seed => byte-identical metrics across processes, whether
+    computed fresh (run 1) or read from the shared disk cache (run 2);
+    the two runs also agree with this process's own evaluation."""
+    env = dict(os.environ)
+    env[erm._ENV_CACHE] = str(tmp_path / "cache.json")
+    env["PYTHONPATH"] = os.pathsep.join(sys.path)
+    outs = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout.strip().splitlines()[-1])
+    assert outs[0] == outs[1]
+    erm.clear_memory_cache()
+    here = erm.characterize(
+        MultiplierSpec("appro42", 12, False, "orplane", 9),
+        n_samples=30_000, seed=3, cache=False)
+    assert json.loads(outs[0]) == [here.nmed, here.mred, here.wce,
+                                   here.bias, here.mu_rel, here.c0_abs,
+                                   here.c1_rel]
+    assert (tmp_path / "cache.json").exists()
+
+
+def test_char_cache_tolerates_corruption(tmp_path, monkeypatch):
+    """Truncated/garbage cache files must be treated as cold, not
+    crash, and be replaced by a valid file on the next save."""
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv(erm._ENV_CACHE, str(path))
+    spec = MultiplierSpec("appro42", 8, False, "orplane", 6)
+    for garbage in ("{truncated", "[1, 2, 3]",
+                    '{"acm1:x": {"nmed": "not-a-row"}}', ""):
+        path.write_text(garbage)
+        erm.clear_memory_cache()
+        m = erm.characterize(spec, n_samples=5_000)
+        assert m.nmed > 0
+    table = json.loads(path.read_text())      # valid again after save
+    assert any(k.startswith(erm._SCHEMA) for k in table)
+    # rows with missing fields are skipped, not fatal
+    erm.clear_memory_cache()
+    assert erm.characterize(spec, n_samples=5_000) == m
 
 
 def test_ste_gradients_flow():
